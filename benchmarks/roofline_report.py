@@ -1,0 +1,54 @@
+"""Aggregate reports/dryrun/*.json into the §Roofline markdown table."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+
+def load(out_dir="reports/dryrun"):
+    cells = []
+    for p in sorted(Path(out_dir).glob("*.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def table(cells, mesh="pod"):
+    rows = []
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO flops | bound step ms | MFU bound |")
+    sep = "|" + "---|" * 9
+    rows.append(hdr)
+    rows.append(sep)
+    for c in cells:
+        if c["mesh"] != mesh:
+            continue
+        r = c["roofline"]
+        ratio = r["useful_flops_ratio"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant'].replace('_s','')} | "
+            f"{ratio:.3f} | {r['step_time_s']*1e3:.1f} | "
+            f"{(r['mfu_bound'] or 0):.3f} |")
+    return "\n".join(rows)
+
+
+def main():
+    cells = load()
+    print(f"{len(cells)} cells\n")
+    for mesh in ("pod", "multipod"):
+        n = sum(1 for c in cells if c["mesh"] == mesh)
+        print(f"\n### mesh={mesh} ({n} cells)\n")
+        print(table(cells, mesh))
+    print("\nname,us_per_call,derived")
+    for c in cells:
+        r = c["roofline"]
+        print(f"dryrun_{c['arch']}_{c['shape']}_{c['mesh']},"
+              f"{r['step_time_s']*1e6:.0f},"
+              f"dominant={r['dominant']};useful={r['useful_flops_ratio']:.3f}")
+    return cells
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Benchmark driver — one module per paper table/figure + beyond-paper.
+
+Each prints ``name,us_per_call,derived`` CSV rows.  Budgets are sized for
+the 1-core CPU container; pass --quick to halve them, --full for the
+six-month tidal training.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from . import (kernel_bench, scaling, speedup, table1_synthetic,
+                   tidal)
+
+    suites = {
+        "table1": lambda: table1_synthetic.run(
+            ns=(30, 100) if args.quick else (30, 100, 300)),
+        "tidal": lambda: tidal.main(full=args.full),
+        "speedup": speedup.run,
+        "scaling": lambda: scaling.run(
+            sizes=(256, 512, 1024) if args.quick
+            else (256, 512, 1024, 2048)),
+        "kernels": lambda: kernel_bench.run(
+            sizes=(1024, 4096) if args.quick else (1024, 4096, 8192)),
+    }
+    if args.only:
+        suites = {k: v for k, v in suites.items() if k in
+                  args.only.split(",")}
+
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        print(f"\n=== {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},0,FAILED:{type(e).__name__}:{e}", flush=True)
+            raise
+        print(f"=== {name} done in {time.time()-t0:.0f}s ===", flush=True)
+
+    # roofline summary (reads the dry-run artefacts if present)
+    try:
+        from . import roofline_report
+        cells = roofline_report.load()
+        if cells:
+            print(f"\n=== roofline ({len(cells)} dry-run cells) ===")
+            for mesh in ("pod", "multipod"):
+                print(roofline_report.table(cells, mesh))
+    except Exception as e:  # noqa: BLE001
+        print(f"roofline_report skipped: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Beyond-paper scaling: dense O(n^3) Cholesky vs matrix-free CG+SLQ.
+
+Per-evaluation wall time of (ln P_max, grad) on this container for the k2
+covariance as n grows.  The dense path is the paper-faithful baseline; the
+iterative path is the BBMM-style O(n^2)-per-iteration replacement whose
+TPU-native form is the Pallas fused matvec (kernels/).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import covariances as C
+from repro.core import hyperlik as H
+from repro.core import iterative as I
+from repro.data.synthetic import synthetic
+
+THETA = jnp.array([3.2, 1.5, 0.05, 2.8, -0.1])
+
+
+def time_dense(ds):
+    def f(t):
+        lp, cache = H.profiled_loglik(C.K2, t, ds.x, ds.y, ds.sigma_n,
+                                      jitter=1e-8)
+        g = H.profiled_grad(C.K2, t, ds.x, ds.y, ds.sigma_n, cache,
+                            jitter=1e-8)
+        return lp, g
+
+    jf = jax.jit(f)
+    jf(THETA)[0].block_until_ready()
+    t0 = time.time()
+    jf(THETA + 1e-6)[0].block_until_ready()
+    return time.time() - t0
+
+
+def time_iterative(ds, probes=16, k=64):
+    def f(t):
+        r = I.profiled_loglik_iterative("k2", t, ds.x, ds.y, ds.sigma_n,
+                                        jax.random.key(0), n_probes=probes,
+                                        lanczos_k=k, cg_max_iter=400)
+        return r.log_p_max, r.grad
+
+    jf = jax.jit(f)
+    jf(THETA)[0].block_until_ready()
+    t0 = time.time()
+    jf(THETA + 1e-6)[0].block_until_ready()
+    return time.time() - t0
+
+
+def run(sizes=(256, 512, 1024, 2048), verbose=True):
+    rows = []
+    for n in sizes:
+        ds = synthetic(jax.random.key(0), n, "k2")
+        td = time_dense(ds)
+        ti = time_iterative(ds)
+        rows.append({"n": n, "dense_s": td, "iter_s": ti,
+                     "mem_dense_mb": n * n * 8 / 1e6,
+                     "mem_iter_mb": n * (17 + 2) * 8 / 1e6})
+        if verbose:
+            r = rows[-1]
+            print(f"n={n:5d}: dense {td*1e3:8.1f} ms  iterative "
+                  f"{ti*1e3:8.1f} ms  K-storage {r['mem_dense_mb']:.0f} MB "
+                  f"-> {r['mem_iter_mb']:.1f} MB", flush=True)
+    return rows
+
+
+def main():
+    rows = run()
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"scaling_dense_n{r['n']},{r['dense_s']*1e6:.0f},"
+              f"mem_mb={r['mem_dense_mb']:.0f}")
+        print(f"scaling_iter_n{r['n']},{r['iter_s']*1e6:.0f},"
+              f"mem_mb={r['mem_iter_mb']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

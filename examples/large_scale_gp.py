@@ -1,0 +1,71 @@
+"""Beyond-paper: matrix-free + distributed GP training at large n.
+
+The paper caps at n ~ 2000 (dense Cholesky).  This example trains the same
+k2 hyperparameters at n = 20,000 on this container via the iterative path
+(CG + SLQ over the Pallas matrix-free matvec: K is never materialised —
+n^2 would be 3.2 GB, the matvec footprint is ~3 MB), then shows the
+row-sharded distributed variant on a local mesh (the production-mesh
+version is lowered by the dry-run).
+
+    PYTHONPATH=src python examples/large_scale_gp.py [--n 20000]
+"""
+
+import argparse
+import time
+
+import jax
+
+from repro.core import enable_x64
+
+enable_x64()
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import distributed, iterative  # noqa: E402
+from repro.data.synthetic import synthetic  # noqa: E402
+from repro.launch.mesh import make_local_mesh  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--steps", type=int, default=3)
+    args = ap.parse_args()
+
+    ds = synthetic(jax.random.key(0), args.n, "k2")
+    theta = jnp.asarray([3.4, 1.4, 0.05, 2.9, -0.05])
+    print(f"n = {args.n}: dense K would need "
+          f"{args.n**2*8/1e9:.1f} GB; matrix-free matvec uses "
+          f"{args.n*20*8/1e6:.1f} MB")
+
+    t0 = time.time()
+    res = iterative.profiled_loglik_iterative(
+        "k2", theta, ds.x, ds.y, ds.sigma_n, jax.random.key(1),
+        n_probes=8, lanczos_k=48, cg_tol=1e-6, cg_max_iter=400)
+    print(f"iterative ln P_max = {float(res.log_p_max):.1f} "
+          f"(cg iters {int(res.cg_iters)}, {time.time()-t0:.0f}s)")
+    print(f"grad = {np.asarray(res.grad).round(1)}")
+
+    # a few steepest-ascent steps, matrix-free end to end
+    th = theta
+    for i in range(args.steps):
+        r = iterative.profiled_loglik_iterative(
+            "k2", th, ds.x, ds.y, ds.sigma_n, jax.random.key(2 + i),
+            n_probes=8, lanczos_k=48, cg_tol=1e-6, cg_max_iter=400)
+        g = r.grad / (jnp.linalg.norm(r.grad) + 1e-12)
+        th = th + 0.02 * g
+        print(f"  ascent step {i}: ln P_max = {float(r.log_p_max):.1f}")
+
+    mesh = make_local_mesh()
+    t0 = time.time()
+    dres = distributed.distributed_profiled_loglik(
+        "k2", theta, ds.x[:4096], ds.y[:4096], ds.sigma_n, mesh,
+        jax.random.key(9), n_probes=8, lanczos_k=48, cg_max_iter=300)
+    print(f"distributed (shard_map) ln P_max @ n=4096 = "
+          f"{float(dres.log_p_max):.1f} ({time.time()-t0:.0f}s); the same "
+          f"program lowers on the (pod, data, model) production mesh")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""End-to-end LM training driver example (deliverable (b)).
+
+Trains the reduced smollm-360m config for a few hundred steps on CPU with
+checkpointing, the GP loss monitor, and straggler heartbeats — the same
+driver that takes full configs + the production mesh on real hardware.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main(["--arch", "smollm-360m", "--steps", "300", "--batch", "8",
+          "--seq", "128", "--lr", "3e-3", "--ckpt-dir", "/tmp/repro_ck",
+          "--log-every", "25"])

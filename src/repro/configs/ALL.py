@@ -1,0 +1,4 @@
+"""Importing this module registers every assigned architecture."""
+from . import (codeqwen1_5_7b, granite_34b, internvl2_2b,  # noqa: F401
+               qwen2_moe_a2_7b, qwen3_0_6b, qwen3_moe_30b_a3b,
+               recurrentgemma_2b, smollm_360m, whisper_medium, xlstm_125m)

@@ -1,0 +1,159 @@
+"""Model/shape configuration system.
+
+A model is a stack of STAGES; each stage is a short sequence of LayerDefs
+scanned ``repeat`` times with stacked parameters (so an 88-layer model
+lowers as one rolled loop, keeping HLO size and compile time bounded).
+Heterogeneous layer patterns (Griffin's rec-rec-attn, xLSTM's sLSTM/mLSTM
+alternation) are expressed as multi-layer stage bodies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerDef:
+    mixer: str            # full | bidir | local | rglru | slstm | mlstm
+    ffn: str              # mlp | moe | none
+    cross: bool = False   # cross-attention to encoder output (enc-dec)
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    layers: Tuple[LayerDef, ...]
+    repeat: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense|moe|hybrid|ssm|audio|vlm
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    stages: Tuple[Stage, ...]
+    encoder_stages: Tuple[Stage, ...] = ()
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    moe_d_ff: int = 0
+    moe_impl: str = "ragged"      # ragged (sort+ragged_dot) | capacity
+    moe_capacity_factor: float = 1.25
+    moe_chunk: int = 8192         # tokens per dispatch chunk (0 = off)
+    # --- attention ---
+    qk_norm: bool = False
+    window: int = 2048                # local-attention window
+    rope_theta: float = 10000.0
+    use_rope: bool = True             # False -> sinusoidal absolute
+    # --- ffn ---
+    mlp_act: str = "swiglu"           # swiglu | geglu | gelu
+    # --- recurrent ---
+    lru_width: int = 0
+    conv_width: int = 4
+    slstm_proj: float = 4.0 / 3.0
+    mlstm_proj: float = 2.0
+    # --- modality frontend (STUB: precomputed embeddings via input_specs) ---
+    frontend: str = "none"            # none | vit_stub | audio_stub
+    frontend_tokens: int = 0
+    frontend_dim: int = 0
+    # --- misc ---
+    norm: str = "rmsnorm"             # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+
+    @property
+    def n_layers(self) -> int:
+        return sum(len(s.layers) * s.repeat for s in self.stages)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True when no mixer needs an unbounded KV cache (long_500k OK)."""
+        mixers = {l.mixer for s in self.stages for l in s.layers}
+        return "full" not in mixers and "bidir" not in mixers
+
+    @property
+    def is_encdec(self) -> bool:
+        return bool(self.encoder_stages)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str         # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def dense_stack(n: int, ffn: str = "mlp") -> Tuple[Stage, ...]:
+    return (Stage((LayerDef("full", ffn),), n),)
+
+
+_REGISTRY: dict = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if not _REGISTRY:
+        from . import ALL  # noqa: F401  (populates the registry)
+    if name not in _REGISTRY:
+        from . import ALL  # noqa: F401
+    return _REGISTRY[name]
+
+
+def all_configs() -> dict:
+    from . import ALL  # noqa: F401
+    return dict(_REGISTRY)
+
+
+def reduce_for_smoke(cfg: ModelConfig) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests (per the brief: small
+    layers/width, few experts, tiny embedding tables)."""
+    heads = 4
+    kv = 1 if cfg.n_kv_heads == 1 else (heads if cfg.n_kv_heads
+                                        == cfg.n_heads else 2)
+    stages = tuple(Stage(s.layers, min(s.repeat, 2)) for s in cfg.stages)
+    enc = tuple(Stage(s.layers, min(s.repeat, 2))
+                for s in cfg.encoder_stages)
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        d_model=64, n_heads=heads, n_kv_heads=kv, head_dim=16,
+        d_ff=0 if cfg.d_ff == 0 else 128, vocab=512,
+        stages=stages, encoder_stages=enc,
+        n_experts=8 if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2), n_shared=min(cfg.n_shared, 1),
+        moe_d_ff=64 if cfg.n_experts else 0,
+        window=32, lru_width=64 if cfg.lru_width else 0,
+        frontend_tokens=8 if cfg.frontend != "none" else 0,
+        frontend_dim=32 if cfg.frontend != "none" else 0,
+    )
+
+
+def applicable_shapes(cfg: ModelConfig) -> Tuple[str, ...]:
+    """The assigned shapes this architecture runs (DESIGN.md §4).
+
+    long_500k requires a bounded-state token mixer (sub-quadratic archs);
+    pure full-attention archs skip it, as instructed in the brief.
+    """
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        names.append("long_500k")
+    return tuple(names)

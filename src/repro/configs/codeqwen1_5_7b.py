@@ -1,0 +1,12 @@
+"""codeqwen1.5-7b [dense]: CodeQwen1.5-7B (qwen1.5 arch, MHA).
+
+32L d_model=4096 32H (kv=32) d_ff=13440 vocab=92416 [hf:Qwen/CodeQwen1.5-7B].
+"""
+from .base import ModelConfig, dense_stack, register
+
+CONFIG = register(ModelConfig(
+    name="codeqwen1.5-7b", family="dense",
+    d_model=4096, n_heads=32, n_kv_heads=32, head_dim=128,
+    d_ff=13440, vocab=92416, stages=dense_stack(32),
+    mlp_act="swiglu", rope_theta=1e6,
+))

@@ -1,0 +1,12 @@
+"""granite-34b [dense]: Granite-34B-Code (gpt_bigcode-style MQA).
+
+88L d_model=6144 48H (MQA kv=1) d_ff=24576 vocab=49152 [arXiv:2405.04324].
+"""
+from .base import ModelConfig, dense_stack, register
+
+CONFIG = register(ModelConfig(
+    name="granite-34b", family="dense",
+    d_model=6144, n_heads=48, n_kv_heads=1, head_dim=128,
+    d_ff=24576, vocab=49152, stages=dense_stack(88),
+    mlp_act="gelu", norm="layernorm",
+))

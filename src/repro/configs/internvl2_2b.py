@@ -1,0 +1,16 @@
+"""internvl2-2b [vlm]: InternViT frontend (stub) + InternLM2-1.8B backbone.
+
+24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553 [arXiv:2404.16821].
+The ViT frontend is a STUB per the brief: input_specs() supplies
+precomputed patch embeddings (B, 256, 1024) which a projector maps into the
+token stream.
+"""
+from .base import ModelConfig, dense_stack, register
+
+CONFIG = register(ModelConfig(
+    name="internvl2-2b", family="vlm",
+    d_model=2048, n_heads=16, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab=92553, stages=dense_stack(24),
+    mlp_act="swiglu", frontend="vit_stub", frontend_tokens=256,
+    frontend_dim=1024,
+))

@@ -1,0 +1,14 @@
+"""qwen2-moe-a2.7b [moe]: Qwen1.5-MoE-A2.7B.
+
+24L d_model=2048 16H (kv=16) per-expert d_ff=1408 vocab=151936,
+60 routed experts top-4 + 4 shared [hf:Qwen/Qwen1.5-MoE-A2.7B].
+"""
+from .base import ModelConfig, dense_stack, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2-moe-a2.7b", family="moe",
+    d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+    d_ff=0, vocab=151936, stages=dense_stack(24, ffn="moe"),
+    n_experts=60, top_k=4, n_shared=4, moe_d_ff=1408,
+    mlp_act="swiglu",
+))

@@ -1,0 +1,12 @@
+"""qwen3-0.6b [dense]: Qwen3-0.6B (qk-norm, GQA, head_dim 128).
+
+28L d_model=1024 16H (GQA kv=8) d_ff=3072 vocab=151936 [hf:Qwen/Qwen3-0.6B].
+"""
+from .base import ModelConfig, dense_stack, register
+
+CONFIG = register(ModelConfig(
+    name="qwen3-0.6b", family="dense",
+    d_model=1024, n_heads=16, n_kv_heads=8, head_dim=128,
+    d_ff=3072, vocab=151936, stages=dense_stack(28),
+    qk_norm=True, mlp_act="swiglu", rope_theta=1e6, tie_embeddings=True,
+))

@@ -1,0 +1,14 @@
+"""qwen3-moe-30b-a3b [moe]: Qwen3-30B-A3B.
+
+48L d_model=2048 32H (GQA kv=4) per-expert d_ff=768 vocab=151936,
+128 experts top-8, qk-norm [hf:Qwen/Qwen3-30B-A3B].
+"""
+from .base import ModelConfig, dense_stack, register
+
+CONFIG = register(ModelConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    d_model=2048, n_heads=32, n_kv_heads=4, head_dim=128,
+    d_ff=0, vocab=151936, stages=dense_stack(48, ffn="moe"),
+    n_experts=128, top_k=8, n_shared=0, moe_d_ff=768,
+    qk_norm=True, mlp_act="swiglu", rope_theta=1e6,
+))

@@ -1,0 +1,18 @@
+"""recurrentgemma-2b [hybrid]: Griffin RG-LRU + local attention, 1:2.
+
+26L d_model=2560 10H (MQA kv=1) d_ff=7680 vocab=256000, window 2048,
+pattern (rec, rec, local-attn) [arXiv:2402.19427].
+"""
+from .base import LayerDef, ModelConfig, Stage, register
+
+_CYCLE = (LayerDef("rglru", "mlp"), LayerDef("rglru", "mlp"),
+          LayerDef("local", "mlp"))
+
+CONFIG = register(ModelConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    d_model=2560, n_heads=10, n_kv_heads=1, head_dim=256,
+    d_ff=7680, vocab=256000,
+    stages=(Stage(_CYCLE, 8), Stage((LayerDef("rglru", "mlp"),), 2)),
+    window=2048, lru_width=2560, conv_width=4, mlp_act="geglu",
+    tie_embeddings=True,
+))

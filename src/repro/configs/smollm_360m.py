@@ -1,0 +1,13 @@
+"""smollm-360m [dense]: SmolLM-360M (llama arch, small).
+
+32L d_model=960 15H (GQA kv=5) d_ff=2560 vocab=49152
+[hf:HuggingFaceTB/SmolLM-360M].
+"""
+from .base import ModelConfig, dense_stack, register
+
+CONFIG = register(ModelConfig(
+    name="smollm-360m", family="dense",
+    d_model=960, n_heads=15, n_kv_heads=5, head_dim=64,
+    d_ff=2560, vocab=49152, stages=dense_stack(32),
+    mlp_act="swiglu", tie_embeddings=True,
+))

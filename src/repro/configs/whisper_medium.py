@@ -1,0 +1,18 @@
+"""whisper-medium [audio]: encoder-decoder transformer backbone.
+
+24L+24L d_model=1024 16H (kv=16) d_ff=4096 vocab=51865
+[arXiv:2212.04356].  The conv frontend is a STUB per the brief:
+input_specs() supplies precomputed frame embeddings (B, 1500, 1024).
+Sinusoidal absolute positions (no RoPE), pre-LayerNorm.
+"""
+from .base import LayerDef, ModelConfig, Stage, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-medium", family="audio",
+    d_model=1024, n_heads=16, n_kv_heads=16, head_dim=64,
+    d_ff=4096, vocab=51865,
+    stages=(Stage((LayerDef("full", "mlp", cross=True),), 24),),
+    encoder_stages=(Stage((LayerDef("bidir", "mlp"),), 24),),
+    mlp_act="gelu", norm="layernorm", use_rope=False,
+    frontend="audio_stub", frontend_tokens=1500, frontend_dim=1024, tie_embeddings=True,
+))

@@ -1,0 +1,14 @@
+"""xlstm-125m [ssm]: alternating sLSTM / mLSTM blocks.
+
+12L d_model=768 4H vocab=50304, d_ff=0 (projections live inside the
+blocks: sLSTM post-up 4/3, mLSTM pre-up 2x) [arXiv:2405.04517].
+"""
+from .base import LayerDef, ModelConfig, Stage, register
+
+CONFIG = register(ModelConfig(
+    name="xlstm-125m", family="ssm",
+    d_model=768, n_heads=4, n_kv_heads=4, head_dim=192,
+    d_ff=0, vocab=50304,
+    stages=(Stage((LayerDef("slstm", "none"),
+                   LayerDef("mlstm", "none")), 6),), tie_embeddings=True,
+))

@@ -1,0 +1,23 @@
+"""Core library: the paper's contribution (fast GP training & comparison).
+
+Public API:
+  covariances — covariance-function algebra (paper eqs. 3.1-3.3)
+  hyperlik    — hyperlikelihood + analytic gradient/Hessian (eqs. 2.5-2.19)
+  reparam     — flat-prior coordinates & Occam volumes (eqs. 3.4-3.5)
+  laplace     — Laplace hyperevidence & Bayes factors (eq. 2.13)
+  train       — multi-start NCG maximiser of the profiled hyperlikelihood
+  predict     — GPR posterior (eq. 2.1) & GP sampling
+  nested      — nested-sampling baseline (the paper's MULTINEST stand-in)
+  iterative   — beyond-paper matrix-free path (CG + SLQ)
+  distributed — beyond-paper multi-pod sharded GP
+"""
+
+from . import (covariances, hyperlik, laplace, model_compare, nested,  # noqa: F401
+               predict, reparam, train)
+
+
+def enable_x64():
+    """Enable float64 — required for well-conditioned GP linear algebra."""
+    import jax
+
+    jax.config.update("jax_enable_x64", True)

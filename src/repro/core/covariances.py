@@ -1,0 +1,274 @@
+"""Covariance-function library (paper eqs. 3.1-3.3 + standard kernels).
+
+Every covariance is represented by a :class:`Covariance` record holding a
+pure function ``fn(theta, x1, x2) -> cov`` of the *flat* hyperparameter
+vector ``theta`` (the parameterisation in which the hyperprior is constant,
+paper eqs. 3.4-3.5).  The overall scale ``sigma_f**2`` is NOT part of
+``theta``: the paper profiles it out analytically (eq. 2.15), so all
+covariances here are *unit-scale*.  The white-noise term ``sigma_n**2 * I``
+(also inside the ``sigma_f**2`` scale, see eq. 3.1) is added by
+:func:`build_K`, with ``sigma_n`` fixed as in the paper.
+
+Flat parameterisation used throughout (paper Sec. 3):
+  * timescales   ``T_j = exp(phi_j)``  (Jeffreys prior -> flat in phi)
+  * smoothness   ``l_j = exp(mu + sqrt(2)*sigma_l*erfinv(2*xi_j))``
+                 (log-normal prior -> flat in xi in (-1/2, 1/2))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax.numpy as jnp
+from jax.scipy.special import erfinv
+
+# log-normal hyper-prior constants for the smoothness parameters (Sec. 3).
+LOGNORMAL_MU = 1.0
+LOGNORMAL_SIGMA = 2.0  # paper: variance sigma_l^2 = 4
+
+
+def smoothness_from_flat(xi):
+    """l(xi) per eq. (3.5): flat xi in (-1/2, 1/2) <-> log-normal l."""
+    return jnp.exp(LOGNORMAL_MU + jnp.sqrt(2.0) * LOGNORMAL_SIGMA * erfinv(2.0 * xi))
+
+
+def timescale_from_flat(phi):
+    """T(phi) per eq. (3.4): flat phi <-> Jeffreys-prior T."""
+    return jnp.exp(phi)
+
+
+def _delta(x1, x2):
+    """Pairwise signed separation matrix for 1-D inputs."""
+    x1 = jnp.asarray(x1)
+    x2 = jnp.asarray(x2)
+    return x1[:, None] - x2[None, :]
+
+
+def _sqdist(x1, x2):
+    """Pairwise squared Euclidean distance; supports (n,) and (n, d)."""
+    x1 = jnp.atleast_2d(jnp.asarray(x1).T).T
+    x2 = jnp.atleast_2d(jnp.asarray(x2).T).T
+    if x1.ndim == 1:
+        x1 = x1[:, None]
+    if x2.ndim == 1:
+        x2 = x2[:, None]
+    d = x1[:, None, :] - x2[None, :, :]
+    return jnp.sum(d * d, axis=-1)
+
+
+def compact_support(tau):
+    """Paper eq. (3.3): compact-support polynomial C(tau), C(0)=1, C(>=1)=0.
+
+    NOTE (documented in DESIGN.md §8): as printed, eq. (3.3) reads
+    (1-tau)^5 (48 tau^2 + 15 tau + 3)/3, which is NOT positive definite
+    (min eigenvalue -0.52 on the paper's own Fig.-1 grid).  The paper cites
+    Wendland [18]; the standard Wendland phi_{3,2} function is
+    (1-tau)^5 (8 tau^2 + 5 tau + 1) = (1-tau)^5 (24 tau^2 + 15 tau + 3)/3,
+    i.e. the printed "48" is a misprint of "24".  We use the valid Wendland
+    form (verified PD to ~1e-6 eigenvalue floor on the paper grids).
+
+    The compact support is the large-data enabler the paper highlights: for
+    |t-t'| > T0 the covariance is exactly zero, so K is sparse/banded for
+    sorted inputs (exploited by the Pallas matrix-free matvec).
+    """
+    tau = jnp.abs(tau)
+    val = (1.0 - tau) ** 5 * (8.0 * tau**2 + 5.0 * tau + 1.0)
+    return jnp.where(tau < 1.0, val, 0.0)
+
+
+def periodic_factor(dt, period, ell):
+    """exp[-2/l^2 sin^2(pi dt / T)] — MacKay's periodic covariance."""
+    s = jnp.sin(jnp.pi * dt / period)
+    return jnp.exp(-2.0 * (s / ell) ** 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class Covariance:
+    """A unit-scale covariance function over a flat hyperparameter vector.
+
+    Attributes:
+      name: identifier used in configs / reports.
+      param_names: names of the entries of ``theta`` (flat coordinates).
+      fn: ``fn(theta, x1, x2) -> (n1, n2)`` cross-covariance, NO noise term.
+      timescale_idx: indices of ``theta`` that are log-timescales ``phi_j``
+        (their flat-prior range is data-dependent: (ln dt_min, ln dt_max)).
+      smoothness_idx: indices that are flat smoothness coords ``xi_j``
+        (range (-1/2, 1/2)).
+      ordering_groups: tuples of timescale indices required to be
+        non-decreasing (paper's T2 >= T1 constraint for k2); used by the
+        prior-volume bookkeeping and samplers.
+    """
+
+    name: str
+    param_names: Tuple[str, ...]
+    fn: Callable
+    timescale_idx: Tuple[int, ...] = ()
+    smoothness_idx: Tuple[int, ...] = ()
+    ordering_groups: Tuple[Tuple[int, ...], ...] = ()
+
+    @property
+    def n_params(self) -> int:
+        return len(self.param_names)
+
+    def __call__(self, theta, x1, x2):
+        return self.fn(jnp.asarray(theta), x1, x2)
+
+
+def build_K(cov: Covariance, theta, x, sigma_n: float, jitter: float = 1e-10):
+    """Unit-scale training covariance K = k(x,x) + (sigma_n^2 + jitter) I.
+
+    This is the K of eq. (2.14) *after* sigma_f^2 has been factored out;
+    sigma_n is the fixed fractional-noise parameter of eq. (3.1).
+    """
+    n = jnp.asarray(x).shape[0]
+    K = cov(theta, x, x)
+    return K + (sigma_n**2 + jitter) * jnp.eye(n, dtype=K.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paper covariances (eqs. 3.1, 3.2)
+# ---------------------------------------------------------------------------
+
+def _k1_fn(theta, x1, x2):
+    """k1 (eq. 3.1), unit scale: compact-support window x one periodic term.
+
+    theta = (phi0, phi1, xi1).
+    """
+    phi0, phi1, xi1 = theta[0], theta[1], theta[2]
+    dt = _delta(x1, x2)
+    t0 = timescale_from_flat(phi0)
+    t1 = timescale_from_flat(phi1)
+    l1 = smoothness_from_flat(xi1)
+    return compact_support(dt / t0) * periodic_factor(dt, t1, l1)
+
+
+def _k2_fn(theta, x1, x2):
+    """k2 (eq. 3.2), unit scale: window x two periodic terms, T2 >= T1.
+
+    theta = (phi0, phi1, xi1, phi2, xi2).
+    """
+    phi0, phi1, xi1, phi2, xi2 = (theta[0], theta[1], theta[2], theta[3],
+                                  theta[4])
+    dt = _delta(x1, x2)
+    t0 = timescale_from_flat(phi0)
+    t1 = timescale_from_flat(phi1)
+    t2 = timescale_from_flat(phi2)
+    l1 = smoothness_from_flat(xi1)
+    l2 = smoothness_from_flat(xi2)
+    pp = jnp.exp(-2.0 * (jnp.sin(jnp.pi * dt / t1) / l1) ** 2
+                 - 2.0 * (jnp.sin(jnp.pi * dt / t2) / l2) ** 2)
+    return compact_support(dt / t0) * pp
+
+
+K1 = Covariance(
+    name="k1",
+    param_names=("phi0", "phi1", "xi1"),
+    fn=_k1_fn,
+    timescale_idx=(0, 1),
+    smoothness_idx=(2,),
+)
+
+K2 = Covariance(
+    name="k2",
+    param_names=("phi0", "phi1", "xi1", "phi2", "xi2"),
+    fn=_k2_fn,
+    timescale_idx=(0, 1, 3),
+    smoothness_idx=(2, 4),
+    ordering_groups=((1, 3),),  # T2 >= T1 (paper Sec. 3)
+)
+
+
+# ---------------------------------------------------------------------------
+# Standard covariances (library breadth; all unit-scale, flat log-coords)
+# ---------------------------------------------------------------------------
+
+def _se_fn(theta, x1, x2):
+    """Squared exponential; theta = (phi_l,) with lengthscale exp(phi_l)."""
+    ell = jnp.exp(theta[0])
+    return jnp.exp(-0.5 * _sqdist(x1, x2) / ell**2)
+
+
+def _matern12_fn(theta, x1, x2):
+    ell = jnp.exp(theta[0])
+    r = jnp.sqrt(_sqdist(x1, x2) + 1e-36)
+    return jnp.exp(-r / ell)
+
+
+def _matern32_fn(theta, x1, x2):
+    ell = jnp.exp(theta[0])
+    r = jnp.sqrt(_sqdist(x1, x2) + 1e-36) / ell
+    a = jnp.sqrt(3.0) * r
+    return (1.0 + a) * jnp.exp(-a)
+
+
+def _matern52_fn(theta, x1, x2):
+    ell = jnp.exp(theta[0])
+    r = jnp.sqrt(_sqdist(x1, x2) + 1e-36) / ell
+    a = jnp.sqrt(5.0) * r
+    return (1.0 + a + a * a / 3.0) * jnp.exp(-a)
+
+
+def _rq_fn(theta, x1, x2):
+    """Rational quadratic; theta = (phi_l, log_alpha)."""
+    ell = jnp.exp(theta[0])
+    alpha = jnp.exp(theta[1])
+    return (1.0 + 0.5 * _sqdist(x1, x2) / (alpha * ell**2)) ** (-alpha)
+
+
+def _periodic_fn(theta, x1, x2):
+    """Pure periodic; theta = (phi_T, xi_l)."""
+    dt = _delta(x1, x2)
+    return periodic_factor(dt, timescale_from_flat(theta[0]),
+                           smoothness_from_flat(theta[1]))
+
+
+SE = Covariance("se", ("phi_l",), _se_fn, timescale_idx=(0,))
+MATERN12 = Covariance("matern12", ("phi_l",), _matern12_fn, timescale_idx=(0,))
+MATERN32 = Covariance("matern32", ("phi_l",), _matern32_fn, timescale_idx=(0,))
+MATERN52 = Covariance("matern52", ("phi_l",), _matern52_fn, timescale_idx=(0,))
+RQ = Covariance("rq", ("phi_l", "log_alpha"), _rq_fn, timescale_idx=(0,),
+                smoothness_idx=(1,))
+PERIODIC = Covariance("periodic", ("phi_T", "xi_l"), _periodic_fn,
+                      timescale_idx=(0,), smoothness_idx=(1,))
+
+
+def product(name: str, a: Covariance, b: Covariance) -> Covariance:
+    """Pointwise product of two covariances; theta = concat(theta_a, theta_b)."""
+    na = a.n_params
+
+    def fn(theta, x1, x2):
+        return a.fn(theta[:na], x1, x2) * b.fn(theta[na:], x1, x2)
+
+    return Covariance(
+        name=name,
+        param_names=a.param_names + b.param_names,
+        fn=fn,
+        timescale_idx=a.timescale_idx + tuple(na + i for i in b.timescale_idx),
+        smoothness_idx=(a.smoothness_idx
+                        + tuple(na + i for i in b.smoothness_idx)),
+    )
+
+
+def mixture(name: str, a: Covariance, b: Covariance) -> Covariance:
+    """Convex sum  w*a + (1-w)*b  with flat mixing weight w in (0,1)."""
+    na = a.n_params
+
+    def fn(theta, x1, x2):
+        w = theta[0]
+        return (w * a.fn(theta[1:1 + na], x1, x2)
+                + (1.0 - w) * b.fn(theta[1 + na:], x1, x2))
+
+    return Covariance(
+        name=name,
+        param_names=("w",) + a.param_names + b.param_names,
+        fn=fn,
+        timescale_idx=tuple(1 + i for i in a.timescale_idx)
+        + tuple(1 + na + i for i in b.timescale_idx),
+        smoothness_idx=tuple(1 + i for i in a.smoothness_idx)
+        + tuple(1 + na + i for i in b.smoothness_idx),
+    )
+
+
+REGISTRY = {c.name: c for c in
+            (K1, K2, SE, MATERN12, MATERN32, MATERN52, RQ, PERIODIC)}

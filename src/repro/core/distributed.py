@@ -1,0 +1,219 @@
+"""Multi-pod distributed GP training (beyond paper; DESIGN.md §5).
+
+Scales the paper's training loop to n ~ 10^6 points on the production mesh:
+rows of K are block-sharded over the ("pod", "data") axes; hyperparameters
+and the input coordinates are replicated (x is only n floats).  Everything
+runs inside ONE ``shard_map`` region per evaluation:
+
+  * matvec: each shard generates its own row-block of K with the Pallas
+    matrix-free kernel and contracts against the replicated vector — zero
+    collectives in the matvec itself;
+  * CG state stays row-sharded; per iteration the search direction is
+    re-assembled with one all-gather of (n/shards) elements and the two
+    scalar dots are psums — the total wire traffic per CG step is O(n),
+    vs O(n^2/shards) HBM traffic, so the collective term stays negligible
+    (see EXPERIMENTS.md §Roofline, gp_1m cells);
+  * SLQ/Hutchinson probes ride the same batched solves.
+
+Padding: n is padded to the shard multiple with far-away sentinel inputs;
+those rows decouple (zero covariance to every real point + noise diagonal),
+and the log-det picks up an analytically-known pad * ln(sigma_n^2 + jitter)
+that is subtracted exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..kernels import ops as kops
+
+LOG2PI = jnp.log(2.0 * jnp.pi)
+_SENTINEL = 1e12
+
+
+class DistGPResult(NamedTuple):
+    log_p_max: jax.Array
+    grad: jax.Array
+    sigma2_hat: jax.Array
+    cg_iters: jax.Array
+
+
+def _row_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def pad_for_mesh(x, y, mesh: Mesh):
+    """Pad (x, y) so n divides the row shards; returns (x, y, n_orig)."""
+    shards = int(np.prod([mesh.shape[a] for a in _row_axes(mesh)]))
+    n = x.shape[0]
+    pad = (-n) % shards
+    if pad:
+        x = jnp.concatenate([x, _SENTINEL * (1 + jnp.arange(pad, dtype=x.dtype))])
+        y = jnp.concatenate([y, jnp.zeros(pad, y.dtype)])
+    return x, y, n
+
+
+def distributed_profiled_loglik(kind: str, theta, x, y, sigma_n: float,
+                                mesh: Mesh, key, n_probes: int = 16,
+                                lanczos_k: int = 64, cg_tol: float = 1e-8,
+                                cg_max_iter: int = 600,
+                                jitter: float = 1e-8,
+                                with_grad: bool = True) -> DistGPResult:
+    """Row-sharded matrix-free ln P_max (eq. 2.16) + gradient (eq. 2.17)."""
+    axes = _row_axes(mesh)
+    x, y, n_orig = pad_for_mesh(jnp.asarray(x), jnp.asarray(y), mesh)
+    n_pad = x.shape[0]
+    pad = n_pad - n_orig
+    noise2 = sigma_n**2 + jitter
+
+    z = jax.random.rademacher(key, (n_pad, n_probes)).astype(y.dtype)
+    if pad:
+        z = z.at[n_orig:].set(0.0)
+
+    theta = jnp.asarray(theta)
+    m = theta.shape[0]
+
+    def local_fn(theta, x_loc, x_full, rhs_loc):
+        """Everything below runs per-shard; rhs_loc = [y | z] row block."""
+
+        def mv_loc(theta_, v_loc):
+            v_full = jax.lax.all_gather(v_loc, axes, axis=0, tiled=True)
+            kv = kops.matvec(kind, theta_, x_loc, x_full, v_full)
+            return kv + noise2 * v_loc
+
+        def dots(a, b):
+            return jax.lax.psum(jnp.sum(a * b, axis=0), axes)
+
+        # ---- batched CG on [y | probes] ----
+        b_loc = rhs_loc
+        x0 = jnp.zeros_like(b_loc)
+        r = b_loc
+        pvec = r
+        rz = dots(r, r)
+        bnorm = jnp.sqrt(dots(b_loc, b_loc))
+
+        def cond(s):
+            xs, r, pv, rz, i = s
+            rn = jnp.sqrt(dots(r, r))
+            return (i < cg_max_iter) & jnp.any(
+                rn > cg_tol * jnp.maximum(bnorm, 1e-30))
+
+        def body(s):
+            xs, r, pv, rz, i = s
+            Ap = mv_loc(theta, pv)
+            alpha = rz / jnp.maximum(dots(pv, Ap), 1e-300)
+            xs = xs + alpha * pv
+            r = r - alpha * Ap
+            rz_new = dots(r, r)
+            beta = rz_new / jnp.maximum(rz, 1e-300)
+            pv = r + beta * pv
+            return (xs, r, pv, rz_new, i + 1)
+
+        sol, r, _, _, iters = jax.lax.while_loop(
+            cond, body, (x0, r, pvec, rz, jnp.asarray(0, jnp.int32)))
+        alpha_loc = sol[:, 0]
+        kinv_z_loc = sol[:, 1:]
+        y_loc = rhs_loc[:, 0]
+        z_loc = rhs_loc[:, 1:]
+        yky = dots(y_loc, alpha_loc)
+        s2 = yky / n_orig
+
+        # ---- SLQ log-det (local Lanczos on sharded vectors) ----
+        v = z_loc / jnp.maximum(jnp.sqrt(dots(z_loc, z_loc)), 1e-30)
+        k_steps = lanczos_k
+        Q = jnp.zeros((k_steps,) + v.shape, v.dtype).at[0].set(v)
+        al = jnp.zeros((k_steps, v.shape[1]), v.dtype)
+        be = jnp.zeros((max(k_steps - 1, 1), v.shape[1]), v.dtype)
+
+        def lan_body(i, carry):
+            Q, al, be = carry
+            qi = Q[i]
+            w = mv_loc(theta, qi)
+            a = dots(qi, w)
+            prev = Q[jnp.maximum(i - 1, 0)]
+            bprev = jnp.where(i > 0, be[jnp.maximum(i - 1, 0)], 0.0)
+            w = w - a * qi - bprev * prev
+            proj = jax.lax.psum(jnp.einsum("knp,np->kp", Q, w), axes)
+            mask = (jnp.arange(k_steps) <= i)[:, None]
+            w = w - jnp.einsum("kp,knp->np", proj * mask, Q)
+            b = jnp.sqrt(dots(w, w))
+            qn = w / jnp.maximum(b, 1e-30)
+            Q = Q.at[jnp.minimum(i + 1, k_steps - 1)].set(
+                jnp.where(i + 1 < k_steps, qn, Q[k_steps - 1]))
+            al = al.at[i].set(a)
+            be = jnp.where(i < k_steps - 1,
+                           be.at[jnp.minimum(i, k_steps - 2)].set(b), be)
+            return (Q, al, be)
+
+        Q, al, be = jax.lax.fori_loop(0, k_steps, lan_body, (Q, al, be))
+
+        def quad(a_col, b_col):
+            T = (jnp.diag(a_col) + jnp.diag(b_col, 1) + jnp.diag(b_col, -1))
+            lam, U = jnp.linalg.eigh(T)
+            return jnp.sum(U[0] ** 2 * jnp.log(jnp.clip(lam, 1e-30)))
+
+        logdet = n_pad * jnp.mean(jax.vmap(quad, in_axes=(1, 1))(al, be))
+        # exact pad correction: sentinel rows decouple into a
+        # (k(x,x) + sigma_n^2 + jitter) I = (1 + noise2) I block
+        # (unit-diagonal correlation kernels)
+        logdet = logdet - pad * jnp.log(1.0 + noise2)
+
+        lp = -0.5 * n_orig * (LOG2PI + 1.0 + jnp.log(s2)) - 0.5 * logdet
+
+        # ---- gradient (eq. 2.17) with Hutchinson traces ----
+        grads = []
+        if with_grad:
+            for i in range(m):
+                e = jnp.zeros_like(theta).at[i].set(1.0)
+
+                def kv_only(theta_, v_loc):
+                    v_full = jax.lax.all_gather(v_loc, axes, axis=0,
+                                                tiled=True)
+                    return kops.matvec(kind, theta_, x_loc, x_full, v_full)
+
+                dk_a = jax.jvp(lambda t: kv_only(t, alpha_loc[:, None]),
+                               (theta,), (e,))[1][:, 0]
+                dk_z = jax.jvp(lambda t: kv_only(t, z_loc), (theta,),
+                               (e,))[1]
+                g_quad = 0.5 * dots(alpha_loc, dk_a) / s2
+                g_tr = 0.5 * jnp.mean(dots(kinv_z_loc, dk_z))
+                grads.append(g_quad - g_tr)
+        g = jnp.stack(grads) if grads else jnp.zeros_like(theta)
+        return lp, g, s2, iters
+
+    rowspec = P(axes if len(axes) > 1 else axes[0])
+    rhs = jnp.concatenate([y[:, None], z], axis=1)
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(), rowspec, P(), rowspec),
+        out_specs=(P(), P(), P(), P()),
+        check_vma=False)
+    lp, g, s2, iters = fn(theta, x, x, rhs)
+    return DistGPResult(lp, g, s2, iters)
+
+
+def lower_gp_cell(kind: str, n: int, mesh: Mesh, n_probes: int = 16,
+                  dtype=jnp.float32):
+    """Dry-run lowering of the distributed GP step on a production mesh
+    (used by launch/dryrun.py --gp)."""
+    m = {"k1": 3, "k2": 5, "se": 1}.get(kind, 3)
+    x = jax.ShapeDtypeStruct((n,), dtype)
+    y = jax.ShapeDtypeStruct((n,), dtype)
+    theta = jax.ShapeDtypeStruct((m,), dtype)
+    seed = jax.ShapeDtypeStruct((), jnp.uint32)
+
+    def step(theta, x, y, seed):
+        key = jax.random.key(seed)
+        return distributed_profiled_loglik(
+            kind, theta, x, y, 0.1, mesh, key, n_probes=n_probes,
+            lanczos_k=32, cg_max_iter=200)
+
+    ns = lambda spec: NamedSharding(mesh, spec)
+    jfn = jax.jit(step, in_shardings=(ns(P()), ns(P()), ns(P()), ns(P())))
+    return jfn.lower(theta, x, y, seed)

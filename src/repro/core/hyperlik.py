@@ -1,0 +1,271 @@
+"""Hyperlikelihood, analytic gradient and Hessian (paper Sec. 2).
+
+Everything in this module follows the paper's central computational claim:
+after ONE O(n^3) Cholesky factorisation of the covariance matrix K, the
+hyperlikelihood (eq. 2.5), its gradient (eq. 2.7), the Hessian at the peak
+(eq. 2.9), and the sigma_f-profiled variants (eqs. 2.14-2.19) are all
+available for O(m n^2) / O(m^2 n^2) extra cost.  We therefore factor K once
+into a :class:`FactorCache` and derive every other quantity from it.
+
+Derivatives of K with respect to the hyperparameters are obtained as
+*forward-mode directional derivatives* of the covariance builder
+(``jax.jvp``).  This is exact, costs one O(n^2) kernel evaluation per
+direction, and never differentiates through the Cholesky — which is
+precisely the paper's trick for cheap gradients.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import cho_solve, solve_triangular
+
+from .covariances import Covariance, build_K
+
+LOG2PI = jnp.log(2.0 * jnp.pi)
+
+
+class FactorCache(NamedTuple):
+    """Everything derivable from one Cholesky factorisation of K.
+
+    Attributes:
+      L:        lower Cholesky factor of K (unit-scale K, eq. 2.14).
+      alpha:    K^{-1} y.
+      Kinv:     explicit inverse (needed for the O(n^2) trace terms of
+                eqs. 2.7/2.9; one extra O(n^3) solve, amortised across all
+                m gradient entries and m^2 Hessian entries).  ``None`` until
+                :func:`with_inverse` is called — value-only evaluations
+                (nested sampling, line-search probes) never pay for it.
+      logdet:   ln det K.
+      yKy:      y^T K^{-1} y.
+      sigma2_hat: profiled scale  sigma_f_hat^2 = yKy / n   (eq. 2.15).
+    """
+
+    L: jax.Array
+    alpha: jax.Array
+    Kinv: jax.Array | None
+    logdet: jax.Array
+    yKy: jax.Array
+    sigma2_hat: jax.Array
+
+
+def factorize(K: jax.Array, y: jax.Array) -> FactorCache:
+    """One O(n^3) factorisation; the rate-determining step (paper Sec. 2a)."""
+    L = jnp.linalg.cholesky(K)
+    alpha = cho_solve((L, True), y)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(L)))
+    yKy = y @ alpha
+    return FactorCache(L, alpha, None, logdet, yKy, yKy / y.shape[0])
+
+
+def with_inverse(cache: FactorCache) -> FactorCache:
+    """Attach the explicit inverse (one extra O(n^3) solve) if missing."""
+    if cache.Kinv is not None:
+        return cache
+    n = cache.L.shape[0]
+    Kinv = cho_solve((cache.L, True), jnp.eye(n, dtype=cache.L.dtype))
+    return cache._replace(Kinv=Kinv)
+
+
+def _kbuilder(cov: Covariance, x, sigma_n: float,
+              jitter: float = 1e-10) -> Callable:
+    """theta -> unit-scale K(theta); closure used for jvp directional derivs.
+
+    The noise term is theta-independent, so dK/dtheta of this builder equals
+    dK/dtheta of the bare covariance — jvp through it is still exact.
+    """
+
+    def kfun(theta):
+        return build_K(cov, theta, x, sigma_n, jitter)
+
+    return kfun
+
+
+def _dK(kfun: Callable, theta: jax.Array, i: int) -> jax.Array:
+    """dK/dtheta_i via one forward-mode pass (O(n^2))."""
+    e = jnp.zeros_like(theta).at[i].set(1.0)
+    return jax.jvp(kfun, (theta,), (e,))[1]
+
+
+def _d2K(kfun: Callable, theta: jax.Array, i: int, j: int) -> jax.Array:
+    """d^2K/dtheta_i dtheta_j via nested forward-mode (O(n^2))."""
+    ei = jnp.zeros_like(theta).at[i].set(1.0)
+    ej = jnp.zeros_like(theta).at[j].set(1.0)
+
+    def first(t):
+        return jax.jvp(kfun, (t,), (ei,))[1]
+
+    return jax.jvp(first, (theta,), (ej,))[1]
+
+
+# ---------------------------------------------------------------------------
+# Full hyperlikelihood (sigma_f explicit) — eqs. 2.5, 2.7, 2.9
+# ---------------------------------------------------------------------------
+
+def loglik(cov: Covariance, theta, x, y, sigma_n: float,
+           jitter: float = 1e-10):
+    """ln P(y | x, theta) of eq. (2.5) with K the unit-scale covariance.
+
+    ``theta`` here EXCLUDES sigma_f (i.e. sigma_f = 1); use
+    :func:`loglik_scaled` for explicit sigma_f.
+    """
+    K = build_K(cov, theta, x, sigma_n, jitter)
+    cache = factorize(K, y)
+    n = y.shape[0]
+    return -0.5 * (cache.yKy + cache.logdet + n * LOG2PI), cache
+
+
+def loglik_scaled(cov: Covariance, theta, log_sigma_f, x, y, sigma_n: float,
+                  jitter: float = 1e-10):
+    """eq. (2.14): hyperlikelihood with explicit overall scale sigma_f.
+
+    K_total = sigma_f^2 * K_unit, so
+    ln P = -yKy/(2 sf^2) - 1/2 ln det K_unit - n/2 ln(2 pi sf^2).
+    """
+    K = build_K(cov, theta, x, sigma_n, jitter)
+    cache = factorize(K, y)
+    n = y.shape[0]
+    sf2 = jnp.exp(2.0 * log_sigma_f)
+    val = (-0.5 * cache.yKy / sf2 - 0.5 * cache.logdet
+           - 0.5 * n * (LOG2PI + 2.0 * log_sigma_f))
+    return val, cache
+
+
+def loglik_grad(cov: Covariance, theta, x, y, sigma_n: float,
+                cache: FactorCache, jitter: float = 1e-10):
+    """Analytic gradient, eq. (2.7):  g_i = a^T dK_i a / 2 - tr(K^-1 dK_i)/2.
+
+    O(m n^2) given the cache — the paper's "gradient for negligible extra
+    cost".  The trace term uses tr(K^-1 dK) = <K^-1, dK> elementwise (both
+    symmetric), the footnote-2 optimisation.
+    """
+    cache = with_inverse(cache)
+    kfun = _kbuilder(cov, x, sigma_n, jitter)
+    theta = jnp.asarray(theta)
+    a = cache.alpha
+    g = []
+    for i in range(cov.n_params):
+        dKi = _dK(kfun, theta, i)
+        g.append(0.5 * (a @ (dKi @ a)) - 0.5 * jnp.vdot(cache.Kinv, dKi))
+    return jnp.stack(g)
+
+
+def loglik_hessian(cov: Covariance, theta, x, y, sigma_n: float,
+                   cache: FactorCache, jitter: float = 1e-10):
+    """Analytic Hessian of ln P at theta, eq. (2.9) (returns dd ln P, = -H).
+
+    Uses the factored form: with a = K^-1 y and S_i = K^-1 dK_i,
+      dd_ij ln P = -1/2 [ 2 a^T dK_i K^-1 dK_j a - a^T d2K_ij a ]
+                   +1/2 [ tr(S_i S_j) - tr(K^-1 d2K_ij) ].
+    """
+    cache = with_inverse(cache)
+    kfun = _kbuilder(cov, x, sigma_n, jitter)
+    theta = jnp.asarray(theta)
+    m = cov.n_params
+    a = cache.alpha
+    Kinv = cache.Kinv
+
+    dKs = [_dK(kfun, theta, i) for i in range(m)]
+    dKa = [dk @ a for dk in dKs]           # dK_i a            O(n^2) each
+    KidKa = [Kinv @ v for v in dKa]        # K^-1 dK_i a       O(n^2) each
+    S = [Kinv @ dk for dk in dKs]          # K^-1 dK_i         O(n^3) each,
+    # amortised across the m^2 Hessian entries (see DESIGN.md §3).
+
+    H = jnp.zeros((m, m), dtype=a.dtype)
+    for i in range(m):
+        for j in range(i, m):
+            d2 = _d2K(kfun, theta, i, j)
+            quad = -0.5 * (2.0 * (dKa[i] @ KidKa[j]) - a @ (d2 @ a))
+            tr = 0.5 * (jnp.vdot(S[i].T, S[j]) - jnp.vdot(Kinv, d2))
+            H = H.at[i, j].set(quad + tr)
+            H = H.at[j, i].set(quad + tr)
+    return H
+
+
+# ---------------------------------------------------------------------------
+# sigma_f profiled out analytically — eqs. 2.14-2.19
+# ---------------------------------------------------------------------------
+
+def profiled_loglik(cov: Covariance, theta, x, y, sigma_n: float,
+                    jitter: float = 1e-10):
+    """ln P_max of eq. (2.16): hyperlikelihood maximised over sigma_f.
+
+    ln P_max = -n/2 ln(2 pi e sigma_hat^2) - 1/2 ln det K,
+    sigma_hat^2 = y^T K^-1 y / n  (eq. 2.15).
+    """
+    K = build_K(cov, theta, x, sigma_n, jitter)
+    cache = factorize(K, y)
+    n = y.shape[0]
+    val = (-0.5 * n * (LOG2PI + 1.0 + jnp.log(cache.sigma2_hat))
+           - 0.5 * cache.logdet)
+    return val, cache
+
+
+def profiled_grad(cov: Covariance, theta, x, y, sigma_n: float,
+                  cache: FactorCache, jitter: float = 1e-10):
+    """eq. (2.17): gradient of ln P_max (NOT the same as eq. 2.7)."""
+    cache = with_inverse(cache)
+    kfun = _kbuilder(cov, x, sigma_n, jitter)
+    theta = jnp.asarray(theta)
+    a = cache.alpha
+    s2 = cache.sigma2_hat
+    g = []
+    for i in range(cov.n_params):
+        dKi = _dK(kfun, theta, i)
+        g.append(0.5 * (a @ (dKi @ a)) / s2
+                 - 0.5 * jnp.vdot(cache.Kinv, dKi))
+    return jnp.stack(g)
+
+
+def profiled_hessian(cov: Covariance, theta, x, y, sigma_n: float,
+                     cache: FactorCache, jitter: float = 1e-10):
+    """eq. (2.19): Hessian of ln P_marg (== ln P_max + const) at the peak.
+
+    Returns dd ln P_max (the negative of the H used in eq. 2.13).
+    """
+    cache = with_inverse(cache)
+    kfun = _kbuilder(cov, x, sigma_n, jitter)
+    theta = jnp.asarray(theta)
+    m = cov.n_params
+    n = y.shape[0]
+    a = cache.alpha
+    Kinv = cache.Kinv
+    s2 = cache.sigma2_hat
+
+    dKs = [_dK(kfun, theta, i) for i in range(m)]
+    dKa = [dk @ a for dk in dKs]
+    KidKa = [Kinv @ v for v in dKa]
+    quadv = jnp.stack([a @ v for v in dKa])    # a^T dK_i a
+    S = [Kinv @ dk for dk in dKs]
+
+    H = jnp.zeros((m, m), dtype=a.dtype)
+    for i in range(m):
+        for j in range(i, m):
+            d2 = _d2K(kfun, theta, i, j)
+            t1 = 0.5 * quadv[i] * quadv[j] / (n * s2 * s2)
+            t2 = -0.5 * (2.0 * (dKa[i] @ KidKa[j]) - a @ (d2 @ a)) / s2
+            t3 = 0.5 * (jnp.vdot(S[i].T, S[j]) - jnp.vdot(Kinv, d2))
+            v = t1 + t2 + t3
+            H = H.at[i, j].set(v)
+            H = H.at[j, i].set(v)
+    return H
+
+
+def marginal_const(n: int, jeffreys_norm: float = 1.0):
+    """Constant relating P_marg to P_max, eq. (2.18).
+
+    P_marg = c/2 (2e/n)^{n/2} Gamma(n/2) P_max  with c the Jeffreys-prior
+    normalisation.  Returned in log space; model-independent (cancels in
+    Bayes factors) but kept so ln Z values are absolute.
+    """
+    n = jnp.asarray(n, dtype=jnp.result_type(float))
+    return (jnp.log(jeffreys_norm / 2.0)
+            + 0.5 * n * (jnp.log(2.0) + 1.0 - jnp.log(n))
+            + jax.scipy.special.gammaln(0.5 * n))
+
+
+def sigma_f_hat(cache: FactorCache):
+    """eq. (2.15): closed-form maximising scale."""
+    return jnp.sqrt(cache.sigma2_hat)

@@ -1,0 +1,200 @@
+"""Nested-sampling baseline (the paper's MULTINEST comparison point).
+
+The paper validates its Laplace evidences against MULTINEST and reports the
+20-50x speed-up of the analytic path (Sec. 3a).  The container is offline,
+so we implement the same algorithmic family here, in JAX:
+
+  * N live points drawn from the flat prior (box + ordering constraint);
+  * at step i the worst point L* is removed, ln X_i = -i/N shrinkage,
+    Z accumulated as  Z += (X_{i-1} - X_i) * L*   [Skilling 2006];
+  * replacement by constrained RANDOM-WALK MCMC (Skilling's original
+    scheme, also MultiNest's fallback): B independent chains start from
+    random live points and take `n_steps` Metropolis steps with the
+    uniform-on-{L > L*} target; proposals use the live-set covariance with
+    a scale adapted online toward ~40% acceptance.  The B chains advance
+    in lock-step via ``vmap``, so each MCMC step is ONE batched likelihood
+    evaluation on device (TPU-native adaptation; see DESIGN.md §3);
+  * termination when the maximum remaining contribution
+    max(L_live) * X_i < dlogz_stop * Z, then the live set is swept in;
+  * the information H accumulates via the standard incremental recurrence
+    (as in dynesty), giving the ln Z error estimate sqrt(H/N).
+
+Every likelihood evaluation is counted — likelihood-evaluation counts are
+the paper's headline runtime metric.
+
+Validated against analytic evidences (tests/test_nested.py): unimodal and
+bimodal Gaussian-in-box toys to within the quoted error bar.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .covariances import Covariance
+from . import hyperlik as hl
+from .reparam import FlatBox, in_box, ordering_ok, sample_uniform
+
+
+class NestedResult(NamedTuple):
+    log_z: jax.Array
+    log_z_err: jax.Array      # sqrt(H / n_live), Skilling's information error
+    n_evals: jax.Array        # total likelihood evaluations
+    n_iters: jax.Array
+    h_info: jax.Array
+
+
+class _State(NamedTuple):
+    key: jax.Array
+    live: jax.Array           # (N, m)
+    logl: jax.Array           # (N,)
+    log_z: jax.Array
+    h: jax.Array              # information (linear space, signed)
+    log_scale: jax.Array      # adaptive MCMC proposal scale (log)
+    i: jax.Array
+    n_evals: jax.Array
+
+
+def _log_sub_exp(a, b):
+    """log(e^a - e^b) for a > b, stable."""
+    return a + jnp.log1p(-jnp.exp(jnp.minimum(b - a, -1e-12)))
+
+
+def nested_sample(key,
+                  log_l: Callable,            # vmappable theta -> ln L
+                  cov: Covariance,
+                  box: FlatBox,
+                  n_live: int = 400,
+                  n_chains: int = 8,
+                  n_steps: int = 16,
+                  max_iter: int = 30000,
+                  dlogz_stop: float = 0.05) -> NestedResult:
+    m = cov.n_params
+    dtype = box.lo.dtype
+    k0, k1 = jax.random.split(key)
+    live = sample_uniform(k0, cov, box, (n_live,)).astype(dtype)
+    logl = jax.vmap(log_l)(live)
+    batched_logl = jax.vmap(log_l)
+
+    def support(theta):
+        return in_box(box, theta) & ordering_ok(cov, theta)
+
+    batched_support = jax.vmap(support)
+    ln_shrink = -1.0 / n_live                    # ln X_i = i * ln_shrink
+
+    def body(s: _State):
+        worst = jnp.argmin(s.logl)
+        l_star = s.logl[worst]
+        ln_x_prev = s.i * ln_shrink
+        ln_x_new = (s.i + 1) * ln_shrink
+        ln_w = _log_sub_exp(ln_x_prev, ln_x_new)
+        log_wt = ln_w + l_star
+        log_z_new = jnp.logaddexp(s.log_z, log_wt)
+        # dynesty-style incremental information update
+        h_new = (jnp.exp(log_wt - log_z_new) * l_star
+                 + jnp.exp(s.log_z - log_z_new) * (s.h + s.log_z)
+                 - log_z_new)
+
+        # --- constrained random-walk MCMC replacement (B parallel chains) ---
+        key, kp, ks = jax.random.split(s.key, 3)
+        std = jnp.std(s.live, axis=0) + 1e-12
+        starts = jax.random.randint(kp, (n_chains,), 0, n_live)
+        chain = s.live[starts]
+        chain_ll = s.logl[starts]
+
+        def mcmc_step(carry, k):
+            pts, lls, n_acc = carry
+            kn, ku = jax.random.split(k)
+            prop = pts + (jnp.exp(s.log_scale) * std
+                          * jax.random.normal(kn, pts.shape, dtype=dtype))
+            ok = batched_support(prop)
+            pl_ = batched_logl(jnp.where(ok[:, None], prop, pts))
+            acc = ok & (pl_ > l_star)
+            pts = jnp.where(acc[:, None], prop, pts)
+            lls = jnp.where(acc, pl_, lls)
+            return (pts, lls,
+                    n_acc + jnp.sum(acc).astype(jnp.int32)), None
+
+        keys = jax.random.split(ks, n_steps)
+        (chain, chain_ll, n_acc), _ = jax.lax.scan(
+            mcmc_step, (chain, chain_ll, jnp.asarray(0, jnp.int32)), keys)
+
+        # adapt the proposal scale toward ~40% acceptance
+        acc_rate = n_acc / (n_chains * n_steps)
+        log_scale = s.log_scale + 0.3 * (acc_rate - 0.4)
+        log_scale = jnp.clip(log_scale, -8.0, 2.0)
+
+        # replace the worst point with the end of a random chain (chains are
+        # exchangeable; take the one that moved to preserve detailed balance
+        # as closely as possible)
+        pick = jnp.argmax(chain_ll > l_star)  # first chain above threshold
+        new_pt = chain[pick]
+        new_ll = chain_ll[pick]
+
+        live = s.live.at[worst].set(new_pt)
+        logl = s.logl.at[worst].set(new_ll)
+        return _State(key, live, logl, log_z_new, h_new, log_scale, s.i + 1,
+                      s.n_evals + n_chains * n_steps)
+
+    def cond(s: _State):
+        ln_x = s.i * ln_shrink
+        remain = jnp.max(s.logl) + ln_x
+        not_done = remain > s.log_z + jnp.log(dlogz_stop)
+        return (s.i < max_iter) & (not_done | (s.i < n_live))
+
+    neg = jnp.asarray(-1e300, dtype=dtype)
+    init = _State(k1, live, logl, neg, jnp.asarray(0.0, dtype),
+                  jnp.asarray(jnp.log(0.5), dtype),
+                  jnp.asarray(0, jnp.int32), jnp.asarray(n_live, jnp.int32))
+    out = jax.lax.while_loop(cond, body, init)
+
+    # sweep in the remaining live points, each with weight X_final / N
+    ln_x_final = out.i * ln_shrink
+    log_z, h = out.log_z, out.h
+    order = jnp.argsort(out.logl)
+    ln_w_live = ln_x_final - jnp.log(n_live)
+
+    def sweep(carry, ll):
+        log_z, h = carry
+        log_wt = ln_w_live + ll
+        log_z_new = jnp.logaddexp(log_z, log_wt)
+        h_new = (jnp.exp(log_wt - log_z_new) * ll
+                 + jnp.exp(log_z - log_z_new) * (h + log_z) - log_z_new)
+        return (log_z_new, h_new), None
+
+    (log_z, h), _ = jax.lax.scan(sweep, (log_z, h), out.logl[order])
+
+    err = jnp.sqrt(jnp.clip(h, 1e-6) / n_live)
+    return NestedResult(log_z=log_z, log_z_err=err, n_evals=out.n_evals,
+                        n_iters=out.i, h_info=h)
+
+
+def make_gp_marg_loglik(cov: Covariance, x, y, sigma_n: float,
+                        jeffreys_norm: float = 1.0, jitter: float = 1e-10):
+    """theta -> ln P_marg(y|x,theta) (eq. 2.18): the integrand whose
+    prior-weighted integral nested sampling evaluates, matching the
+    quantity approximated by the profiled Laplace evidence (eq. 2.13)."""
+    n = jnp.asarray(y).shape[0]
+    const = hl.marginal_const(n, jeffreys_norm)
+
+    def log_l(theta):
+        val, _ = hl.profiled_loglik(cov, theta, x, y, sigma_n, jitter)
+        return jnp.where(jnp.isnan(val), -1e290, val + const)
+
+    return log_l
+
+
+def evidence_nested(key, cov: Covariance, x, y, sigma_n: float,
+                    box: FlatBox, n_live: int = 400, n_chains: int = 8,
+                    n_steps: int = 16, max_iter: int = 30000,
+                    jeffreys_norm: float = 1.0,
+                    jitter: float = 1e-10) -> NestedResult:
+    """Numerical hyperevidence ln Z_num for a GP model (paper Table 1)."""
+    log_l = make_gp_marg_loglik(cov, x, y, sigma_n, jeffreys_norm, jitter)
+    fn = jax.jit(partial(nested_sample, log_l=log_l, cov=cov, box=box,
+                         n_live=n_live, n_chains=n_chains, n_steps=n_steps,
+                         max_iter=max_iter))
+    return fn(key)

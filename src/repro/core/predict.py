@@ -1,0 +1,75 @@
+"""GPR prediction (paper eq. 2.1) and GP sampling (paper Fig. 1).
+
+With sigma_f profiled out, the predictive distribution at new inputs x* is
+
+  mean  = k*^T K^-1 y                        (sigma_f cancels)
+  var   = sigma_f_hat^2 (k** - k*^T K^-1 k*)
+
+where K, k*, k** are unit-scale quantities and sigma_f_hat is eq. (2.15).
+``predict`` also adds the (scaled) measurement noise when requested, since
+the paper's sigma_n sits inside the sigma_f^2 envelope (eq. 3.1).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import cho_solve, solve_triangular
+
+from .covariances import Covariance, build_K
+from . import hyperlik as hl
+
+
+class Posterior(NamedTuple):
+    mean: jax.Array
+    var: jax.Array           # pointwise predictive variance
+    sigma_f_hat: jax.Array
+
+
+def predict(cov: Covariance, theta, x, y, xstar, sigma_n: float,
+            include_noise: bool = False, jitter: float = 1e-10) -> Posterior:
+    """Posterior mean/variance at xstar (eq. 2.1), sigma_f profiled."""
+    K = build_K(cov, theta, x, sigma_n, jitter)
+    cache = hl.factorize(K, y)
+    ks = cov(theta, x, xstar)                    # (n, n*)
+    kss = cov(theta, xstar, xstar)               # (n*, n*) diag used only
+    mean = ks.T @ cache.alpha
+    v = solve_triangular(cache.L, ks, lower=True)
+    var_unit = jnp.diagonal(kss) - jnp.sum(v * v, axis=0)
+    if include_noise:
+        var_unit = var_unit + sigma_n**2
+    var = cache.sigma2_hat * jnp.clip(var_unit, 0.0)
+    return Posterior(mean=mean, var=var, sigma_f_hat=hl.sigma_f_hat(cache))
+
+
+def predict_full_cov(cov: Covariance, theta, x, y, xstar, sigma_n: float,
+                     jitter: float = 1e-10):
+    """Full predictive covariance (needed for joint draws)."""
+    K = build_K(cov, theta, x, sigma_n, jitter)
+    cache = hl.factorize(K, y)
+    ks = cov(theta, x, xstar)
+    kss = cov(theta, xstar, xstar)
+    mean = ks.T @ cache.alpha
+    v = solve_triangular(cache.L, ks, lower=True)
+    pc = cache.sigma2_hat * (kss - v.T @ v)
+    return mean, pc
+
+
+def draw_prior(key, cov: Covariance, theta, x, sigma_f: float,
+               sigma_n: float, jitter: float = 1e-10):
+    """One realisation of the GP prior (paper Fig. 1 / synthetic data)."""
+    K = sigma_f**2 * build_K(cov, theta, x, sigma_n, jitter)
+    L = jnp.linalg.cholesky(K)
+    z = jax.random.normal(key, (jnp.asarray(x).shape[0],), dtype=K.dtype)
+    return L @ z
+
+
+def draw_posterior(key, cov: Covariance, theta, x, y, xstar, sigma_n: float,
+                   n_draws: int = 1, jitter: float = 1e-8):
+    """Joint posterior draws at xstar."""
+    mean, pc = predict_full_cov(cov, theta, x, y, xstar, sigma_n)
+    L = jnp.linalg.cholesky(pc + jitter * jnp.eye(pc.shape[0], dtype=pc.dtype))
+    z = jax.random.normal(key, (n_draws, pc.shape[0]), dtype=pc.dtype)
+    return mean[None, :] + z @ L.T

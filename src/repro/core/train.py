@@ -1,0 +1,205 @@
+"""Multi-start conjugate-gradient maximisation of the profiled hyperlikelihood.
+
+The paper trains GPs by numerically maximising ln P_max (eq. 2.16) with a
+conjugate-gradient method fed by the analytic gradient (eq. 2.17), restarted
+from ~10 random positions to escape local maxima (Sec. 3a).  This module is
+that procedure as a single jittable JAX program:
+
+  * Polak-Ribiere(+) nonlinear CG with Armijo backtracking line search,
+    written with ``jax.lax.while_loop`` (no host round-trips per step);
+  * the optimisation runs in an unconstrained coordinate z with
+    theta = box-sigmoid(z), so iterates respect the flat-prior box;
+  * all restarts are ``jax.vmap``-ed into ONE device program — the paper's
+    "~10 runs" cost one batched Cholesky per CG step instead of 10 serial
+    ones (a TPU-native improvement recorded in DESIGN.md §3);
+  * every likelihood evaluation is counted (value-and-gradient calls and
+    value-only line-search probes), since likelihood-evaluation counts are
+    the paper's runtime metric (Sec. 3a: ~100 evals/run vs 20k-50k for
+    nested sampling).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import hyperlik as hl
+from .covariances import Covariance
+from .reparam import (FlatBox, apply_ordering, flat_box, from_box,
+                      sample_uniform, to_box)
+
+
+class NCGState(NamedTuple):
+    z: jax.Array
+    f: jax.Array           # objective (= -ln P_max)
+    g: jax.Array           # gradient in z coordinates
+    d: jax.Array           # search direction
+    step: jax.Array        # current initial step size
+    n_evals: jax.Array
+    k: jax.Array
+
+
+class TrainResult(NamedTuple):
+    theta_hat: jax.Array       # best peak, flat coordinates (ordering applied)
+    log_p_max: jax.Array       # ln P_max at the peak (eq. 2.16)
+    sigma_f_hat: jax.Array     # analytic scale at the peak (eq. 2.15)
+    n_evals: jax.Array         # total likelihood evaluations, all restarts
+    theta_all: jax.Array       # (n_starts, m) per-restart peaks
+    log_p_all: jax.Array       # (n_starts,) per-restart peak values
+    iters_all: jax.Array
+
+
+def make_objective(cov: Covariance, x, y, sigma_n: float, box: FlatBox,
+                   jitter: float = 1e-10):
+    """(value, grad) and value-only callables of z, both counting one
+    likelihood evaluation (one Cholesky) each."""
+    lo, hi = box.lo, box.hi
+    widths = box.widths
+
+    def value_and_grad(z):
+        theta = to_box(z, box)
+        val, cache = hl.profiled_loglik(cov, theta, x, y, sigma_n, jitter)
+        g_theta = hl.profiled_grad(cov, theta, x, y, sigma_n, cache, jitter)
+        dtheta_dz = (theta - lo) * (hi - theta) / widths   # sigmoid chain rule
+        return -val, -(g_theta * dtheta_dz)
+
+    def value(z):
+        theta = to_box(z, box)
+        val, _ = hl.profiled_loglik(cov, theta, x, y, sigma_n, jitter)
+        return -val
+
+    return value_and_grad, value
+
+
+def _ncg_minimize(value_and_grad: Callable, value: Callable, z0,
+                  max_iters: int = 80, grad_tol: float = 1e-5,
+                  c1: float = 1e-4, shrink: float = 0.5,
+                  max_backtracks: int = 25):
+    """Polak-Ribiere+ NCG with Armijo backtracking; returns (z, f, evals, k)."""
+
+    f0, g0 = value_and_grad(z0)
+    f0 = jnp.where(jnp.isfinite(f0), f0, jnp.inf)
+    init = NCGState(z=z0, f=f0, g=g0, d=-g0, step=jnp.asarray(1.0, f0.dtype),
+                    n_evals=jnp.asarray(1, jnp.int32),
+                    k=jnp.asarray(0, jnp.int32))
+
+    def cond(s: NCGState):
+        return ((s.k < max_iters)
+                & (jnp.max(jnp.abs(s.g)) > grad_tol)
+                & jnp.isfinite(s.f))
+
+    def body(s: NCGState):
+        gd = s.g @ s.d
+        # if d is not a descent direction, restart with steepest descent
+        bad = gd >= 0.0
+        d = jnp.where(bad, -s.g, s.d)
+        gd = jnp.where(bad, -(s.g @ s.g), gd)
+
+        # Armijo backtracking line search (value-only probes).
+        def ls_cond(c):
+            alpha, f_new, j, _ = c
+            armijo = f_new <= s.f + c1 * alpha * gd
+            return (~armijo) & (j < max_backtracks)
+
+        def ls_body(c):
+            alpha, _, j, ev = c
+            alpha = alpha * shrink
+            f_new = value(s.z + alpha * d)
+            f_new = jnp.where(jnp.isnan(f_new), jnp.inf, f_new)
+            return alpha, f_new, j + 1, ev + 1
+
+        a0 = s.step
+        f_try = value(s.z + a0 * d)
+        f_try = jnp.where(jnp.isnan(f_try), jnp.inf, f_try)
+        alpha, f_new, n_bt, ev = jax.lax.while_loop(
+            ls_cond, ls_body,
+            (a0, f_try, jnp.asarray(0, jnp.int32),
+             jnp.asarray(1, jnp.int32)))
+
+        accepted = f_new <= s.f + c1 * alpha * gd
+        z_new = jnp.where(accepted, s.z + alpha * d, s.z)
+        f_new2, g_new = value_and_grad(z_new)
+        # Polak-Ribiere+ beta
+        yk = g_new - s.g
+        beta = jnp.maximum((g_new @ yk) / jnp.maximum(s.g @ s.g, 1e-300), 0.0)
+        d_new = -g_new + beta * d
+        # grow the trial step after an easy acceptance, shrink after a hard one
+        step_new = jnp.where(n_bt == 0, alpha * 2.0, alpha)
+        step_new = jnp.clip(step_new, 1e-12, 1e3)
+        return NCGState(z=z_new,
+                        f=jnp.where(accepted, f_new2, s.f),
+                        g=g_new, d=d_new, step=step_new,
+                        n_evals=s.n_evals + ev + 1,
+                        k=s.k + 1)
+
+    out = jax.lax.while_loop(cond, body, init)
+    return out.z, out.f, out.n_evals, out.k
+
+
+@partial(jax.jit, static_argnums=(0, 5, 6, 7))
+def _train_jit(cov, x, y, sigma_n, z0s, max_iters, grad_tol, jitter, box_arr):
+    box = FlatBox(box_arr[0], box_arr[1])
+    vag, val = make_objective(cov, x, y, sigma_n, box, jitter)
+    run = partial(_ncg_minimize, vag, val, max_iters=max_iters,
+                  grad_tol=grad_tol)
+    zs, fs, evals, iters = jax.vmap(run)(z0s)
+    return zs, fs, evals, iters
+
+
+@partial(jax.jit, static_argnums=(0,))
+def _scan_objective(cov, x, y, sigma_n, thetas, jitter):
+    def f(t):
+        val, _ = hl.profiled_loglik(cov, t, x, y, sigma_n, jitter)
+        return val
+
+    return jax.vmap(f)(thetas)
+
+
+def train(cov: Covariance, x, y, sigma_n: float, key,
+          n_starts: int = 10, max_iters: int = 80, grad_tol: float = 1e-5,
+          jitter: float = 1e-10, box: FlatBox | None = None,
+          z0s=None, scan_points: int = 0) -> TrainResult:
+    """Paper Sec. 3a training procedure: multi-start NCG on ln P_max.
+
+    ``scan_points > 0`` enables scan-seeded restarts: a vmapped uniform scan
+    of the flat box whose top-``n_starts`` points seed the NCG chains.  The
+    hyperlikelihood surfaces of periodic covariances are comb-multimodal
+    (period aliasing), so this finds the global basin far more reliably than
+    the paper's blind restarts; every scan evaluation is counted in
+    ``n_evals`` so speed-up factors remain honest.
+    """
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    if box is None:
+        box = flat_box(cov, x)
+    scan_evals = 0
+    if z0s is None:
+        if scan_points > 0:
+            ks, key = jax.random.split(key)
+            cand = sample_uniform(ks, cov, box, (scan_points,)).astype(x.dtype)
+            vals = _scan_objective(cov, x, y, sigma_n, cand, jitter)
+            top = jnp.argsort(jnp.where(jnp.isnan(vals), -jnp.inf, vals))
+            top = top[-n_starts:]
+            z0s = jax.vmap(lambda t: from_box(t, box, eps=1e-3))(cand[top])
+            scan_evals = scan_points
+        else:
+            # uniform starts over the central part of the flat box (avoids
+            # the sigmoid tails where gradients vanish)
+            u = jax.random.uniform(key, (n_starts, cov.n_params),
+                                   minval=0.05, maxval=0.95, dtype=x.dtype)
+            z0s = jnp.log(u) - jnp.log1p(-u)
+    box_arr = jnp.stack([box.lo.astype(x.dtype), box.hi.astype(x.dtype)])
+    zs, fs, evals, iters = _train_jit(cov, x, y, sigma_n, z0s, max_iters,
+                                      grad_tol, jitter, box_arr)
+    thetas = jax.vmap(lambda z: to_box(z, box))(zs)
+    thetas = jax.vmap(lambda t: apply_ordering(cov, t))(thetas)
+    best = jnp.nanargmin(fs)
+    theta_hat = thetas[best]
+    lp, cache = hl.profiled_loglik(cov, theta_hat, x, y, sigma_n, jitter)
+    return TrainResult(theta_hat=theta_hat, log_p_max=lp,
+                       sigma_f_hat=hl.sigma_f_hat(cache),
+                       n_evals=jnp.sum(evals) + scan_evals, theta_all=thetas,
+                       log_p_all=-fs, iters_all=iters)

@@ -1,0 +1,104 @@
+"""Deterministic token pipeline for LM training.
+
+Offline container -> no corpus on disk; the pipeline synthesises a
+Zipf-distributed, Markov-structured token stream (so the loss actually
+decreases: bigram structure is learnable).  Everything a production loader
+needs is here regardless of the source:
+
+  * per-host sharding: host i of H reads only its slice of the batch dim;
+  * CHECKPOINTABLE state: the stream is a pure function of (seed, step), so
+    restart-after-failure resumes mid-epoch exactly (runtime/ relies on it);
+  * targets/loss-mask construction (next-token shift) and the frontend-stub
+    embeddings for the VLM/audio architectures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    vocab: int = 512
+    zipf_a: float = 1.2
+    markov_order: int = 1
+    n_states: int = 64
+
+
+class TokenPipeline:
+    """Stateless-per-step pipeline: batch(step) is pure in (cfg, step)."""
+
+    def __init__(self, dcfg: DataConfig, mcfg: ModelConfig,
+                 shape: ShapeSpec, host_id: int = 0, n_hosts: int = 1):
+        assert shape.global_batch % n_hosts == 0 or n_hosts == 1
+        self.dcfg = dcfg
+        self.mcfg = mcfg
+        self.shape = shape
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        self.local_batch = max(shape.global_batch // n_hosts, 1)
+        rng = np.random.default_rng(dcfg.seed)
+        # fixed Markov transition structure shared by all hosts
+        vocab = min(dcfg.vocab, mcfg.vocab)
+        base = rng.zipf(dcfg.zipf_a, size=(dcfg.n_states, 8)) % vocab
+        self._next_tok = base.astype(np.int32)
+        self._tok_state = (rng.integers(0, dcfg.n_states,
+                                        size=vocab).astype(np.int32))
+        self._vocab = vocab
+
+    def batch(self, step: int) -> dict:
+        """Batch for `step`; deterministic, host-sharded."""
+        mcfg, shape = self.mcfg, self.shape
+        key = jax.random.key(self.dcfg.seed + 7919 * step + self.host_id)
+        b = self.local_batch
+        s = shape.seq_len
+        s_text = s - (mcfg.frontend_tokens if mcfg.frontend == "vit_stub"
+                      else 0)
+        k1, k2, k3 = jax.random.split(key, 3)
+        # Markov walk: tok_{t+1} = table[state[tok_t], eps]
+        first = jax.random.randint(k1, (b,), 0, self._vocab,
+                                   dtype=jnp.int32)
+        eps = jax.random.randint(k2, (b, s_text), 0, 8, dtype=jnp.int32)
+        table = jnp.asarray(self._next_tok)
+        state_of = jnp.asarray(self._tok_state)
+
+        def walk(tok, e):
+            nxt = table[state_of[tok], e]
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(walk, first, eps.T)
+        tokens = jnp.concatenate([first[:, None], toks.T[:, :-1]], axis=1)
+        tokens = tokens.astype(jnp.int32)
+
+        if mcfg.frontend == "vit_stub":
+            targets = jnp.concatenate(
+                [jnp.zeros((b, mcfg.frontend_tokens), jnp.int32), tokens],
+                axis=1)
+            mask = jnp.concatenate(
+                [jnp.zeros((b, mcfg.frontend_tokens)),
+                 jnp.ones((b, s_text))], axis=1)
+        else:
+            targets = tokens
+            mask = jnp.ones((b, s))
+        out = {"tokens": tokens, "targets": targets,
+               "loss_mask": mask.astype(jnp.bfloat16)
+               if False else mask.astype(jnp.float32)}
+        if mcfg.frontend != "none":
+            out["frontend"] = jax.random.normal(
+                k3, (b, mcfg.frontend_tokens, mcfg.frontend_dim),
+                jnp.float32)
+        return out
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1

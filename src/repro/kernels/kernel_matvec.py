@@ -1,0 +1,190 @@
+"""Pallas TPU kernel: matrix-free covariance matvec  K(x1, x2) @ V.
+
+This is the compute hot-spot of large-n GP training (DESIGN.md §3).  The
+covariance matrix K is NEVER materialised in HBM: each grid step generates
+one (TILE_R, TILE_C) tile of K *in VMEM* directly from the input
+coordinates, contracts it with the matching slice of V on the MXU, and
+accumulates into the output block.  Memory traffic drops from O(n^2)
+(load K) to O(n) (load x, V), turning the bandwidth-bound matvec of the
+GPU reference implementation into a compute-bound TPU kernel — the
+arithmetic intensity is ~(cost of one covariance eval + 2B flops) per 8
+bytes of x streamed.
+
+Layout / tiling decisions (TPU-native, see DESIGN.md §3):
+  * x1 enters as a column (n1, 1) and x2 as a row (1, n2) so the pairwise
+    separation tile  dt = x1_blk - x2_blk  is a rank-2 broadcast, mapping
+    onto the VPU's (sublane, lane) axes without transposes;
+  * TILE_R = TILE_C = 256 keeps the K tile (256 KiB fp32) + V/out blocks
+    well under VMEM while giving the MXU 128-aligned contraction dims;
+  * the c-grid axis is innermost, so each output block stays resident in
+    VMEM across the full accumulation sweep (revisited-output pattern);
+    it is zero-initialised at c == 0;
+  * hyperparameters arrive pre-transformed to natural scale (T0, T1, l1,
+    T2, l2) as a tiny (1, 8) block broadcast to every grid step — the
+    erfinv/exp flat-coordinate transforms run once outside the kernel.
+
+Supported covariance families (static `kind`): the paper's k1/k2
+(Wendland window x periodic factors, eqs. 3.1-3.2), and se / matern12 /
+matern32 / matern52 for the library kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_R = 256
+TILE_C = 256
+N_PARAM_SLOTS = 8  # fixed-size natural-parameter vector (padded)
+
+
+def _wendland(tau):
+    tau = jnp.abs(tau)
+    return jnp.where(tau < 1.0, (1.0 - tau) ** 5
+                     * (8.0 * tau * tau + 5.0 * tau + 1.0), 0.0)
+
+
+def _tile_k1(dt, p):
+    """p = [T0, T1, l1, ...]."""
+    t0, t1, l1 = p[0], p[1], p[2]
+    s1 = jnp.sin(jnp.pi * dt / t1) / l1
+    return _wendland(dt / t0) * jnp.exp(-2.0 * s1 * s1)
+
+
+def _tile_k2(dt, p):
+    """p = [T0, T1, l1, T2, l2, ...]."""
+    t0, t1, l1, t2, l2 = p[0], p[1], p[2], p[3], p[4]
+    s1 = jnp.sin(jnp.pi * dt / t1) / l1
+    s2 = jnp.sin(jnp.pi * dt / t2) / l2
+    return _wendland(dt / t0) * jnp.exp(-2.0 * (s1 * s1 + s2 * s2))
+
+
+def _tile_se(dt, p):
+    ell = p[0]
+    r = dt / ell
+    return jnp.exp(-0.5 * r * r)
+
+
+def _tile_matern12(dt, p):
+    return jnp.exp(-jnp.abs(dt) / p[0])
+
+
+def _tile_matern32(dt, p):
+    a = jnp.sqrt(3.0) * jnp.abs(dt) / p[0]
+    return (1.0 + a) * jnp.exp(-a)
+
+
+def _tile_matern52(dt, p):
+    a = jnp.sqrt(5.0) * jnp.abs(dt) / p[0]
+    return (1.0 + a + a * a / 3.0) * jnp.exp(-a)
+
+
+TILE_FNS = {
+    "k1": _tile_k1,
+    "k2": _tile_k2,
+    "se": _tile_se,
+    "matern12": _tile_matern12,
+    "matern32": _tile_matern32,
+    "matern52": _tile_matern52,
+}
+
+
+def _matvec_kernel(tile_fn, params_ref, x1_ref, x2_ref, v_ref, o_ref):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    dt = x1_ref[...] - x2_ref[...]          # (R,1) - (1,C) -> (R,C)
+    p = params_ref[0, :]
+    k = tile_fn(dt, p)
+    o_ref[...] += jnp.dot(k, v_ref[...],
+                          preferred_element_type=o_ref.dtype)
+
+
+def _matvec_tangent_kernel(tile_fn, params_ref, pdot_ref, x1_ref, x2_ref,
+                           v_ref, o_ref):
+    """dK/dp[pdot] @ v: the tile is the directional derivative of tile_fn
+    along pdot (computed by forward-mode INSIDE the kernel body, so the
+    tangent matvec is exactly as matrix-free as the primal)."""
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    dt = x1_ref[...] - x2_ref[...]
+    p = params_ref[0, :]
+    pdot = pdot_ref[0, :]
+    _, ktan = jax.jvp(lambda pp: tile_fn(dt, pp), (p,), (pdot,))
+    o_ref[...] += jnp.dot(ktan, v_ref[...],
+                          preferred_element_type=o_ref.dtype)
+
+
+def matvec_tangent_pallas(kind: str, params, pdot, x1, x2, v,
+                          tile_r: int = TILE_R, tile_c: int = TILE_C,
+                          interpret: bool = True):
+    """(d/dp K)[pdot] @ v without materialising dK (natural-param tangent)."""
+    n1 = x1.shape[0]
+    n2, b = v.shape
+    assert n1 % tile_r == 0 and n2 % tile_c == 0, (n1, n2, tile_r, tile_c)
+    tile_fn = TILE_FNS[kind]
+    grid = (n1 // tile_r, n2 // tile_c)
+
+    return pl.pallas_call(
+        functools.partial(_matvec_tangent_kernel, tile_fn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, N_PARAM_SLOTS), lambda r, c: (0, 0)),
+            pl.BlockSpec((1, N_PARAM_SLOTS), lambda r, c: (0, 0)),
+            pl.BlockSpec((tile_r, 1), lambda r, c: (r, 0)),
+            pl.BlockSpec((1, tile_c), lambda r, c: (0, c)),
+            pl.BlockSpec((tile_c, b), lambda r, c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_r, b), lambda r, c: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((n1, b), v.dtype),
+        interpret=interpret,
+    )(params.reshape(1, N_PARAM_SLOTS), pdot.reshape(1, N_PARAM_SLOTS),
+      x1[:, None], x2[None, :], v)
+
+
+def matvec_pallas(kind: str, params, x1, x2, v,
+                  tile_r: int = TILE_R, tile_c: int = TILE_C,
+                  interpret: bool = True):
+    """K(x1, x2) @ v without materialising K.
+
+    Args:
+      kind: covariance family key in :data:`TILE_FNS` (static).
+      params: (N_PARAM_SLOTS,) natural-scale parameters (see module doc).
+      x1: (n1,) input coordinates (rows of K).
+      x2: (n2,) input coordinates (cols of K).
+      v:  (n2, b) right-hand sides.
+      interpret: run the kernel body in interpret mode (CPU container);
+        on TPU pass False.
+
+    Returns:
+      (n1, b) product. Padding rows/cols are handled by the caller (ops.py).
+    """
+    n1 = x1.shape[0]
+    n2, b = v.shape
+    assert n1 % tile_r == 0 and n2 % tile_c == 0, (n1, n2, tile_r, tile_c)
+    tile_fn = TILE_FNS[kind]
+    grid = (n1 // tile_r, n2 // tile_c)
+
+    return pl.pallas_call(
+        functools.partial(_matvec_kernel, tile_fn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, N_PARAM_SLOTS), lambda r, c: (0, 0)),
+            pl.BlockSpec((tile_r, 1), lambda r, c: (r, 0)),
+            pl.BlockSpec((1, tile_c), lambda r, c: (0, c)),
+            pl.BlockSpec((tile_c, b), lambda r, c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_r, b), lambda r, c: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((n1, b), v.dtype),
+        interpret=interpret,
+    )(params.reshape(1, N_PARAM_SLOTS), x1[:, None], x2[None, :], v)

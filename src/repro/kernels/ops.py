@@ -1,0 +1,134 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles everything the raw kernels do not: flat-coordinate -> natural-scale
+parameter transforms (the erfinv/exp maps run once here, not per tile),
+padding to tile multiples with a covariance-safe sentinel, the white-noise
+diagonal (added as sigma_n^2 * v OUTSIDE the kernel — the diagonal never
+needs a tile), and interpret-mode selection (CPU container vs real TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core.covariances import smoothness_from_flat
+from . import kernel_matvec, kernel_tile
+from .kernel_matvec import N_PARAM_SLOTS
+
+# Natural-parameter layouts per family (see kernel_matvec module doc).
+_FLAT_TO_NATURAL = {
+    "k1": lambda th: (jnp.exp(th[0]), jnp.exp(th[1]),
+                      smoothness_from_flat(th[2])),
+    "k2": lambda th: (jnp.exp(th[0]), jnp.exp(th[1]),
+                      smoothness_from_flat(th[2]), jnp.exp(th[3]),
+                      smoothness_from_flat(th[4])),
+    "se": lambda th: (jnp.exp(th[0]),),
+    "matern12": lambda th: (jnp.exp(th[0]),),
+    "matern32": lambda th: (jnp.exp(th[0]),),
+    "matern52": lambda th: (jnp.exp(th[0]),),
+}
+
+
+def natural_params(kind: str, theta):
+    """Flat hyperparameters -> padded natural-scale kernel parameters."""
+    vals = jnp.stack(_FLAT_TO_NATURAL[kind](jnp.asarray(theta)))
+    out = jnp.ones((N_PARAM_SLOTS,), vals.dtype)
+    return out.at[: vals.shape[0]].set(vals)
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, fill):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
+
+
+_SENTINEL = 1e12  # finite, far outside any compact support / lengthscale
+
+
+@functools.partial(jax.custom_jvp, nondiff_argnums=(0, 5, 6))
+def _matvec_core(kind: str, p_nat, x1p, x2p, vp, tile_r, tile_c):
+    """Padded-core matvec on NATURAL params, differentiable in (p_nat, vp).
+
+    The custom JVP keeps forward-mode matrix-free: the parameter tangent is
+    a second Pallas kernel whose tile is the directional derivative of the
+    covariance tile (see kernel_matvec._matvec_tangent_kernel); the v
+    tangent reuses the primal kernel by linearity.
+    """
+    return kernel_matvec.matvec_pallas(kind, p_nat, x1p, x2p, vp,
+                                       tile_r=tile_r, tile_c=tile_c,
+                                       interpret=_use_interpret())
+
+
+def _instantiate(t, like):
+    from jax.interpreters import ad as _ad
+
+    if t is None or isinstance(t, _ad.Zero):
+        return jnp.zeros_like(like)
+    return t
+
+
+@_matvec_core.defjvp
+def _matvec_core_jvp(kind, tile_r, tile_c, primals, tangents):
+    p_nat, x1p, x2p, vp = primals
+    dp, _, _, dv = tangents
+    interp = _use_interpret()
+    out = kernel_matvec.matvec_pallas(kind, p_nat, x1p, x2p, vp,
+                                      tile_r=tile_r, tile_c=tile_c,
+                                      interpret=interp)
+    tan = kernel_matvec.matvec_tangent_pallas(
+        kind, p_nat, _instantiate(dp, p_nat), x1p, x2p, vp,
+        tile_r=tile_r, tile_c=tile_c, interpret=interp)
+    tan = tan + kernel_matvec.matvec_pallas(
+        kind, p_nat, x1p, x2p, _instantiate(dv, vp), tile_r=tile_r,
+        tile_c=tile_c, interpret=interp)
+    return out, tan
+
+
+@functools.partial(jax.jit, static_argnums=(0, 5, 6))
+def matvec(kind: str, theta, x1, x2, v, tile_r: int = kernel_matvec.TILE_R,
+           tile_c: int = kernel_matvec.TILE_C):
+    """K(x1, x2) @ v, matrix-free (no noise diagonal).
+
+    v may be (n2,) or (n2, b). Forward-mode differentiable in (theta, v).
+    """
+    squeeze = v.ndim == 1
+    if squeeze:
+        v = v[:, None]
+    n1 = x1.shape[0]
+    p = natural_params(kind, theta).astype(v.dtype)
+    x1p = _pad_to(jnp.asarray(x1, v.dtype), tile_r, _SENTINEL)
+    x2p = _pad_to(jnp.asarray(x2, v.dtype), tile_c, 2.0 * _SENTINEL)
+    vp = _pad_to(v, tile_c, 0.0)
+    out = _matvec_core(kind, p, x1p, x2p, vp, tile_r, tile_c)
+    out = out[:n1]
+    return out[:, 0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4, 5))
+def gram_matvec(kind: str, theta, x, v, sigma_n: float = 0.0,
+                jitter: float = 0.0):
+    """(K(x,x) + (sigma_n^2 + jitter) I) @ v — the training-matrix matvec."""
+    kv = matvec(kind, theta, x, x, v)
+    return kv + (sigma_n**2 + jitter) * v
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def matrix(kind: str, theta, x1, x2, tile: int = kernel_tile.TILE):
+    """Dense K(x1, x2) assembled tile-by-tile (no noise diagonal)."""
+    n1, n2 = x1.shape[0], x2.shape[0]
+    dtype = jnp.result_type(x1, x2)
+    p = natural_params(kind, theta).astype(dtype)
+    x1p = _pad_to(jnp.asarray(x1, dtype), tile, _SENTINEL)
+    x2p = _pad_to(jnp.asarray(x2, dtype), tile, 2.0 * _SENTINEL)
+    out = kernel_tile.matrix_pallas(kind, p, x1p, x2p, tile=tile,
+                                    interpret=_use_interpret())
+    return out[:n1, :n2]

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness references).
+
+These mirror repro.core.covariances but take the NATURAL-scale parameter
+vector used by the kernels (T0, T1, l1, T2, l2 padded to 8 slots), so the
+kernel tests compare like against like.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _wendland(tau):
+    tau = jnp.abs(tau)
+    return jnp.where(tau < 1.0, (1.0 - tau) ** 5
+                     * (8.0 * tau * tau + 5.0 * tau + 1.0), 0.0)
+
+
+def matrix_ref(kind: str, params, x1, x2):
+    """Dense K(x1, x2), natural parameters, no noise."""
+    dt = jnp.asarray(x1)[:, None] - jnp.asarray(x2)[None, :]
+    p = params
+    if kind == "k1":
+        s1 = jnp.sin(jnp.pi * dt / p[1]) / p[2]
+        return _wendland(dt / p[0]) * jnp.exp(-2.0 * s1 * s1)
+    if kind == "k2":
+        s1 = jnp.sin(jnp.pi * dt / p[1]) / p[2]
+        s2 = jnp.sin(jnp.pi * dt / p[3]) / p[4]
+        return _wendland(dt / p[0]) * jnp.exp(-2.0 * (s1 * s1 + s2 * s2))
+    if kind == "se":
+        r = dt / p[0]
+        return jnp.exp(-0.5 * r * r)
+    if kind == "matern12":
+        return jnp.exp(-jnp.abs(dt) / p[0])
+    if kind == "matern32":
+        a = jnp.sqrt(3.0) * jnp.abs(dt) / p[0]
+        return (1.0 + a) * jnp.exp(-a)
+    if kind == "matern52":
+        a = jnp.sqrt(5.0) * jnp.abs(dt) / p[0]
+        return (1.0 + a + a * a / 3.0) * jnp.exp(-a)
+    raise ValueError(kind)
+
+
+def matvec_ref(kind: str, params, x1, x2, v):
+    """K @ v via the dense reference matrix."""
+    return matrix_ref(kind, params, x1, x2) @ v

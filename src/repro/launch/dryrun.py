@@ -1,0 +1,495 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any jax import: jax locks the device count
+at first init, and the dry-run needs 512 placeholder host devices to build
+the production meshes.  (Smoke tests and benchmarks see 1 device — this is
+the only entry point that sets the flag.)
+
+Per cell this script records, into reports/dryrun/<cell>.json:
+  * memory_analysis()  — per-device argument/output/temp/peak bytes
+    (proves the cell fits a 16 GB v5e chip);
+  * cost_analysis()    — per-device HLO FLOPs and bytes accessed;
+  * collective bytes parsed from the optimized (post-SPMD) HLO text,
+    per collective kind, with ring-algorithm wire multipliers;
+  * the three roofline terms (seconds) and the dominant one
+    (TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI);
+  * MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active params,
+    and the useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all [--mesh pod|multipod|both]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import numpy as np
+
+import jax
+
+from ..configs.base import (SHAPES, all_configs, applicable_shapes,
+                            get_config)
+from ..models import model as M
+from ..parallel.sharding import ParallelContext, ParamSpec, param_count
+from . import steps
+from .mesh import make_production_mesh
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# bytes-on-wire multiplier per collective kind (ring algorithms),
+# applied to the RESULT shape bytes parsed from the per-device HLO.
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather phases
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9\[\],{}/#\s:TSE()]+?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str):
+    """Per-device collective bytes by kind from post-SPMD HLO.
+
+    Returns (raw_total, adj_total, by_kind, biggest).  ``adj`` halves the
+    bytes of f32 collectives: XLA's CPU float-normalization pass promotes
+    every bf16 tensor to f32 (the CPU has no bf16 arithmetic), so on the
+    TPU target these collectives move half the bytes.  The handful of
+    genuinely-f32 collectives (loss scalars, optimizer psums) are noise at
+    this scale; both numbers are recorded.
+    """
+    out = {k: {"bytes": 0.0, "bytes_adj": 0.0, "count": 0}
+           for k in _WIRE_FACTOR}
+    biggest = []
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        raw = _shape_bytes(type_str) * _WIRE_FACTOR[kind]
+        f32_b = _shape_bytes_of_dtype(type_str, "f32") * _WIRE_FACTOR[kind]
+        adj = raw - 0.5 * f32_b
+        out[kind]["bytes"] += raw
+        out[kind]["bytes_adj"] += adj
+        out[kind]["count"] += 1
+        biggest.append((raw, kind, type_str.strip()[:80]))
+    biggest.sort(reverse=True)
+    total = sum(v["bytes"] for v in out.values())
+    total_adj = sum(v["bytes_adj"] for v in out.values())
+    return total, total_adj, out, [{"bytes": b, "kind": k, "type": t}
+                                   for b, k, t in biggest[:12]]
+
+
+def _shape_bytes_of_dtype(type_str: str, dtype: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt != dtype:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def active_params(cfg) -> tuple[int, int]:
+    """(total, active) parameter counts; active scales routed experts by
+    top_k/E (MoE forward touches only top_k of E experts per token)."""
+    tree = M.model_init(cfg)
+    total = param_count(tree)
+    if not cfg.n_experts:
+        return total, total
+    expert = 0
+    for stage_tree in tree["stages"]:
+        flat = jax.tree.leaves_with_path(
+            stage_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+        for path, spec in flat:
+            keys = "/".join(str(p) for p in path)
+            if any(w in keys for w in ("w_gate", "w_up", "w_down")):
+                expert += int(np.prod(spec.shape))
+    active = total - expert + expert * cfg.top_k / cfg.n_experts
+    return total, int(active)
+
+
+def model_flops(cfg, shape) -> float:
+    total, active = active_params(cfg)
+    emb = cfg.vocab * cfg.d_model          # lookup table: no matmul flops
+    n = active - emb
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch    # decode: one token per sequence
+
+
+def _with_repeats(cfg, repeats_dec, repeats_enc):
+    import dataclasses
+
+    from ..configs.base import Stage
+    stages = tuple(Stage(s.layers, r)
+                   for s, r in zip(cfg.stages, repeats_dec))
+    enc = tuple(Stage(s.layers, r)
+                for s, r in zip(cfg.encoder_stages, repeats_enc))
+    return dataclasses.replace(cfg, stages=stages, encoder_stages=enc)
+
+
+def _cell_cost(cfg, shape, ctx):
+    """(flops, bytes, collective_bytes, coll_by_kind, biggest) per device."""
+    compiled = steps.lower_cell(cfg, shape, ctx).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll_bytes, coll_adj, coll_by_kind, biggest = parse_collectives(
+        compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            coll_bytes, coll_adj, coll_by_kind, biggest)
+
+
+def extrapolated_costs(cfg, shape, ctx):
+    """Honest full-model HLO costs from small UNROLLED probe lowerings.
+
+    XLA's cost_analysis counts a rolled ``while`` body once, so the full
+    rolled compile under-reports by ~n_layers.  Per-stage costs are affine
+    in the repeat count, so we compile tiny unrolled probes — all repeats
+    = 1 (intercept A), then repeats = 2 for one stage at a time (slope per
+    stage) — and extrapolate exactly:
+        cost(full) = A + sum_j (R_j - 1) * (E_j - A).
+    Every probe compiles on the SAME production mesh with the same
+    shardings, so per-device collective bytes extrapolate identically.
+    """
+    probe_ctx = ParallelContext(ctx.mesh, unroll_stages=True,
+                                weight_gather=ctx.weight_gather)
+    n_dec = len(cfg.stages)
+    n_enc = len(cfg.encoder_stages)
+    ones_dec = [1] * n_dec
+    ones_enc = [1] * n_enc
+    a = _cell_cost(_with_repeats(cfg, ones_dec, ones_enc), shape, probe_ctx)
+    fl, by, co, co_adj = a[0], a[1], a[2], a[3]
+    coll_kind, biggest = a[4], a[5]
+    for j in range(n_dec + n_enc):
+        rd, re_ = list(ones_dec), list(ones_enc)
+        if j < n_dec:
+            rd[j] = 2
+            mult = cfg.stages[j].repeat - 1
+        else:
+            re_[j - n_dec] = 2
+            mult = cfg.encoder_stages[j - n_dec].repeat - 1
+        if mult == 0:
+            continue
+        e = _cell_cost(_with_repeats(cfg, rd, re_), shape, probe_ctx)
+        fl += mult * (e[0] - a[0])
+        by += mult * (e[1] - a[1])
+        co += mult * (e[2] - a[2])
+        co_adj += mult * (e[3] - a[3])
+        for k in coll_kind:
+            for fld in ("bytes", "bytes_adj", "count"):
+                coll_kind[k][fld] += mult * (e[4][k][fld] - a[4][k][fld])
+    return (max(fl, 0.0), max(by, 0.0), max(co, 0.0), max(co_adj, 0.0),
+            coll_kind, biggest)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
+             verbose: bool = True, overrides: dict | None = None,
+             tag: str = "", weight_gather: bool = False):
+    import dataclasses
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    chips = int(np.prod(mesh.devices.shape))
+    # rolled stages: the real deployable program
+    ctx = ParallelContext(mesh, weight_gather=weight_gather)
+
+    t0 = time.time()
+    lowered = steps.lower_cell(cfg, shape, ctx)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+
+    t0 = time.time()
+    (flops_pd, bytes_pd, coll_bytes, coll_adj, coll_by_kind,
+     biggest) = extrapolated_costs(cfg, shape, ctx)
+    t_probe = time.time() - t0
+    compute_s = flops_pd / PEAK_FLOPS
+    memory_s = bytes_pd / HBM_BW
+    collective_s = coll_adj / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())
+
+    mf = model_flops(cfg, shape)
+    total_p, active_p = active_params(cfg)
+    hlo_flops_total = flops_pd * chips
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "chips": chips,
+        "kind": shape.kind,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "params_total": total_p, "params_active": active_p,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "probe_s": round(t_probe, 2),
+        "memory_analysis": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "hlo_flops_per_device": flops_pd,
+        "hlo_bytes_per_device": bytes_pd,
+        "collective_bytes_per_device": coll_bytes,
+        "collective_bytes_per_device_bf16adj": coll_adj,
+        "collectives": coll_by_kind,
+        "biggest_collectives": biggest,
+        "roofline": {
+            **terms,
+            "collective_s_raw": coll_bytes / ICI_BW,
+            "dominant": dominant,
+            "step_time_s": step_s,
+            "model_flops": mf,
+            "hlo_flops_total": hlo_flops_total,
+            "useful_flops_ratio": (mf / hlo_flops_total
+                                   if hlo_flops_total else None),
+            "mfu_bound": (mf / (chips * PEAK_FLOPS) / step_s
+                          if step_s else None),
+        },
+    }
+    if overrides:
+        result["overrides"] = {k: str(v) for k, v in overrides.items()}
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    name = f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+    (out_dir / name).write_text(json.dumps(result, indent=1))
+    if verbose:
+        r = result["roofline"]
+        print(f"[OK] {arch:22s} {shape_name:12s} {mesh_kind:8s} "
+              f"compile={t_compile:6.1f}s dominant={dominant:12s} "
+              f"step={step_s*1e3:8.2f}ms useful={r['useful_flops_ratio']}",
+              flush=True)
+    return result
+
+
+def probes_bytes(n_probes: int) -> float:
+    """f32 bytes per row of the CG RHS block, read+written per iteration."""
+    return (1 + n_probes) * 4.0 * 2
+
+
+def run_gp_cell(n: int, mesh_kind: str, out_dir: Path, kind: str = "k2",
+                n_probes: int = 16, tag: str = ""):
+    """Dry-run the distributed GP training step (the paper's technique on
+    the production mesh): one profiled-loglik+grad evaluation at size n."""
+    from ..core.distributed import lower_gp_cell
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    chips = int(np.prod(mesh.devices.shape))
+    t0 = time.time()
+    lowered = lower_gp_cell(kind, n, mesh, n_probes=n_probes)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll_bytes, coll_adj, coll_by_kind, biggest = parse_collectives(
+        compiled.as_text())
+    flops_pd = float(cost.get("flops", 0.0))
+    bytes_pd = float(cost.get("bytes accessed", 0.0))
+    # NOTE: CG/Lanczos are rolled while-loops; scale by measured iteration
+    # counts (~240 CG + 32 Lanczos at k2 tolerances — tests/test_iterative)
+    LOOP_SCALE = 270
+    flops_pd *= LOOP_SCALE
+    bytes_pd *= LOOP_SCALE
+    coll_bytes *= LOOP_SCALE
+    coll_adj *= LOOP_SCALE
+    # Interpret-mode Pallas hides the kernel's tile work from XLA's cost
+    # model (the grid is ANOTHER rolled loop) and materialises tiles to
+    # "HBM" that live in VMEM on real TPUs.  Report the measured terms but
+    # base the roofline on ANALYTIC per-device estimates:
+    #   compute: tile generation (~35 flops/K element for k2) + the MXU
+    #            contraction 2*(1+probes) flops/element, all regenerated
+    #            each of the ~LOOP_SCALE iterations;
+    #   memory:  true HBM traffic is only x (n f32) + the RHS block
+    #            (n x (1+probes)) read+written per iteration — K never
+    #            touches HBM (the design's point);
+    #   collective: one (n/shards) all-gather + O(1) psums per iteration
+    #            (measured value kept — the SPMD schedule is real).
+    tile_flops = 35.0 + 2.0 * (1 + n_probes)
+    ana_compute = LOOP_SCALE * (float(n) ** 2 / chips) * tile_flops \
+        / PEAK_FLOPS
+    ana_memory = LOOP_SCALE * (float(n) * (1 + probes_bytes(n_probes))
+                               / chips) / HBM_BW
+    terms = {"compute_s": ana_compute,
+             "memory_s": ana_memory,
+             "collective_s": coll_adj / ICI_BW}
+    dominant = max(terms, key=terms.get)
+    # model flops per evaluation: (1 + probes) CG solves x iters x 2n^2/chips
+    mf = LOOP_SCALE * 2.0 * float(n) ** 2 * (1 + n_probes)
+    result = {
+        "arch": f"gp-{kind}-n{n}", "shape": "gp_eval", "mesh": mesh_kind,
+        "chips": chips, "kind": "gp",
+        "seq_len": n, "global_batch": 1,
+        "params_total": 5, "params_active": 5,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "probe_s": 0.0,
+        "memory_analysis": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "hlo_flops_per_device": flops_pd,
+        "hlo_bytes_per_device": bytes_pd,
+        "collective_bytes_per_device": coll_bytes,
+        "collective_bytes_per_device_bf16adj": coll_adj,
+        "collectives": coll_by_kind,
+        "biggest_collectives": biggest,
+        "measured_terms_interpret_mode": {
+            "compute_s": flops_pd / PEAK_FLOPS,
+            "memory_s": bytes_pd / HBM_BW,
+        },
+        "roofline": {
+            **terms,
+            "collective_s_raw": coll_bytes * 1.0 / ICI_BW,
+            "dominant": dominant,
+            "step_time_s": max(terms.values()),
+            "model_flops": mf,
+            "hlo_flops_total": flops_pd * chips,
+            "useful_flops_ratio": (2.0 * (1 + n_probes)) / tile_flops,
+            "mfu_bound": None,
+        },
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    name = f"gp-{kind}-n{n}__gp_eval__{mesh_kind}{suffix}.json"
+    (out_dir / name).write_text(json.dumps(result, indent=1))
+    r = result["roofline"]
+    print(f"[OK] gp-{kind}-n{n:<14d} gp_eval      {mesh_kind:8s} "
+          f"compile={t_compile:6.1f}s dominant={dominant:12s} "
+          f"step={r['step_time_s']*1e3:8.2f}ms", flush=True)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--gp", action="store_true",
+                    help="run the distributed-GP cells (n=2^20)")
+    ap.add_argument("--gp-n", type=int, default=2**20)
+    ap.add_argument("--gp-probes", type=int, default=16)
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (perf experiments)")
+    ap.add_argument("--weight-gather", action="store_true",
+                    help="ZeRO-style inference layout (perf experiments)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output json (perf experiments)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        overrides[k] = v
+
+    if args.gp:
+        out_dir = Path(args.out)
+        meshes = (["pod", "multipod"] if args.mesh == "both"
+                  else [args.mesh])
+        for mk in meshes:
+            run_gp_cell(args.gp_n, mk, out_dir, n_probes=args.gp_probes,
+                        tag=args.tag)
+            jax.clear_caches()
+        return
+
+    out_dir = Path(args.out)
+    meshes = (["pod", "multipod"] if args.mesh == "both" else [args.mesh])
+    cells = []
+    if args.all:
+        for arch, cfg in sorted(all_configs().items()):
+            for shape_name in applicable_shapes(cfg):
+                for mk in meshes:
+                    cells.append((arch, shape_name, mk))
+    else:
+        cells = [(args.arch, args.shape, mk) for mk in meshes]
+
+    failures = []
+    for arch, shape_name, mk in cells:
+        tag = f"{arch}__{shape_name}__{mk}"
+        if args.skip_existing and (out_dir / f"{tag}.json").exists():
+            print(f"[skip] {tag}")
+            continue
+        try:
+            run_cell(arch, shape_name, mk, out_dir, overrides=overrides,
+                     tag=args.tag, weight_gather=args.weight_gather)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            failures.append((tag, repr(e)))
+            print(f"[FAIL] {tag}: {e}")
+            traceback.print_exc()
+        finally:
+            jax.clear_caches()   # bound host RAM across 64+ cells
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(f"  {tag}: {err[:200]}")
+        raise SystemExit(1)
+    print(f"\nall {len(cells)} cells passed")
+
+
+if __name__ == "__main__":
+    main()

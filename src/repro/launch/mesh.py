@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not module-level state) so importing
+this module never touches jax device state.  The single-pod mesh is
+(data=16, model=16) = 256 chips; the multi-pod mesh adds a leading pod axis:
+(pod=2, data=16, model=16) = 512 chips.  When more devices exist than the
+mesh needs (the 512-host-device dry-run container building a 256-chip pod),
+the leading prefix of ``jax.devices()`` is used.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devs)}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "before importing jax (launch/dryrun.py does this)")
+    return Mesh(np.asarray(devs[:need]).reshape(shape), axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh over available devices (smoke tests exercise the same
+    sharded code path on 1 CPU device)."""
+    devs = jax.devices()[: data * model]
+    return Mesh(np.asarray(devs).reshape(data, model), ("data", "model"))

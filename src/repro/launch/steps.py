@@ -1,0 +1,180 @@
+"""Step functions (train / prefill / decode) + their input specs.
+
+Everything here is expressed over ShapeDtypeStructs and NamedShardings so
+the SAME builders serve three purposes: the multi-pod dry-run
+(``.lower().compile()`` with no allocation), the smoke tests (real tiny
+arrays on 1 device), and an actual training run.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..models import model as M
+from ..optim import adamw
+from ..parallel.sharding import (ParallelContext, sanitize_pspec,
+                                 tree_pspecs, tree_shapes, tree_shardings)
+
+PARAM_DTYPE = jnp.bfloat16
+ACT_DTYPE = jnp.bfloat16
+AUX_LOSS_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+
+def _dp_or_none(ctx: ParallelContext, b: int):
+    """Shard batch over dp only when it divides evenly (long_500k has B=1)."""
+    return "dp" if ctx.dp_size() and b % max(ctx.dp_size(), 1) == 0 else None
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, ctx: ParallelContext):
+    """(ShapeDtypeStruct tree, PartitionSpec tree) for one input batch."""
+    B, S = shape.global_batch, shape.seq_len
+    dp = _dp_or_none(ctx, B)
+    i32 = jnp.int32
+    shapes: dict = {}
+    pspecs: dict = {}
+
+    if shape.kind == "decode":
+        shapes["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+        pspecs["tokens"] = P(ctx.resolve(dp), None)
+        return shapes, pspecs
+
+    s_text = S
+    if cfg.frontend == "vit_stub":
+        s_text = S - cfg.frontend_tokens
+    shapes["tokens"] = jax.ShapeDtypeStruct((B, s_text), i32)
+    pspecs["tokens"] = P(ctx.resolve(dp), None)
+    if cfg.frontend != "none":
+        shapes["frontend"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.frontend_dim), ACT_DTYPE)
+        pspecs["frontend"] = P(ctx.resolve(dp), None, None)
+    if shape.kind == "train":
+        shapes["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+        shapes["loss_mask"] = jax.ShapeDtypeStruct((B, S), ACT_DTYPE)
+        pspecs["targets"] = P(ctx.resolve(dp), None)
+        pspecs["loss_mask"] = P(ctx.resolve(dp), None)
+    return shapes, pspecs
+
+
+def state_specs(cfg: ModelConfig, ctx: ParallelContext, with_opt: bool):
+    """(shape tree, sharding tree) for params (+ optimizer state)."""
+    spec_tree = M.model_init(cfg)
+    p_shapes = tree_shapes(spec_tree, PARAM_DTYPE)
+    p_shard = tree_shardings(spec_tree, ctx)
+    if not with_opt:
+        return p_shapes, p_shard
+    f32 = lambda t: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
+    o_shapes = adamw.OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        m=f32(p_shapes), v=f32(p_shapes))
+    o_shard = adamw.OptState(
+        step=NamedSharding(ctx.mesh, P()) if ctx.mesh else None,
+        m=p_shard, v=p_shard)
+    return (p_shapes, o_shapes), (p_shard, o_shard)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, ctx: ParallelContext,
+                    ocfg: Optional[adamw.OptConfig] = None):
+    ocfg = ocfg or adamw.OptConfig()
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            logits, aux = M.forward(p, cfg, ctx, batch["tokens"],
+                                    batch.get("frontend"))
+            loss = M.lm_loss(logits[:, :-1], batch["targets"][:, 1:],
+                             batch["loss_mask"][:, 1:])
+            return loss + AUX_LOSS_WEIGHT * aux, (loss, aux)
+
+        (total, (loss, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_params, new_opt, om = adamw.apply_updates(ocfg, params, grads,
+                                                      opt_state)
+        metrics = {"loss": loss, "aux_loss": aux, "total_loss": total, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: ParallelContext):
+    def prefill_step(params, batch):
+        return M.prefill(params, cfg, ctx, batch["tokens"],
+                         batch.get("frontend"))
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, ctx: ParallelContext):
+    def decode_step(params, cache, batch, pos):
+        return M.decode_step(params, cfg, ctx, cache, batch["tokens"], pos)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Lowering helper: one (arch x shape x mesh) cell -> jax.stages.Lowered
+# ---------------------------------------------------------------------------
+
+def lower_cell(cfg: ModelConfig, shape: ShapeSpec, ctx: ParallelContext,
+               donate: bool = True):
+    """Build the jitted step for this cell and .lower() it with specs."""
+    mesh = ctx.mesh
+    ns = lambda spec: NamedSharding(mesh, spec)
+    b_shapes, b_pspecs = batch_specs(cfg, shape, ctx)
+    b_shard = jax.tree.map(ns, b_pspecs,
+                           is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "train":
+        (p_shapes, o_shapes), (p_shard, o_shard) = state_specs(
+            cfg, ctx, with_opt=True)
+        fn = make_train_step(cfg, ctx)
+        metric_shard = {k: ns(P()) for k in
+                        ("loss", "aux_loss", "total_loss", "grad_norm", "lr")}
+        jfn = jax.jit(fn,
+                      in_shardings=(p_shard, o_shard, b_shard),
+                      out_shardings=(p_shard, o_shard, metric_shard),
+                      donate_argnums=(0, 1) if donate else ())
+        return jfn.lower(p_shapes, o_shapes, b_shapes)
+
+    p_shapes, p_shard = state_specs(cfg, ctx, with_opt=False)
+    logits_shape = (shape.global_batch, cfg.vocab)
+    dp = _dp_or_none(ctx, shape.global_batch)
+    logits_shard = ns(sanitize_pspec(logits_shape, ctx.pspec(dp, "tp"),
+                                     mesh))
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, ctx)
+        jfn = jax.jit(fn, in_shardings=(p_shard, b_shard),
+                      out_shardings=logits_shard)
+        return jfn.lower(p_shapes, b_shapes)
+
+    # decode
+    c_shapes, c_pspecs = M.cache_specs(cfg, shape.global_batch,
+                                       shape.seq_len, ACT_DTYPE, ctx)
+    if dp is None:
+        # B not divisible by dp (long_500k B=1): replicate the batch dims
+        c_pspecs = jax.tree.map(
+            lambda s: P(*((None,) + tuple(s)[1:])), c_pspecs,
+            is_leaf=lambda x: isinstance(x, P))
+    c_shard = jax.tree.map(
+        lambda sh, sp: ns(sanitize_pspec(sh.shape, sp, mesh)),
+        c_shapes, c_pspecs)
+    fn = make_decode_step(cfg, ctx)
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    jfn = jax.jit(fn,
+                  in_shardings=(p_shard, c_shard, b_shard, ns(P())),
+                  out_shardings=(logits_shard, c_shard),
+                  donate_argnums=(1,) if donate else ())
+    return jfn.lower(p_shapes, c_shapes, b_shapes, pos_spec)

@@ -1,0 +1,876 @@
+"""Composable transformer / recurrent layers for the assigned architectures.
+
+Pure-JAX module style: every sub-layer is a pair of functions
+``*_init(cfg) -> ParamSpec tree`` and ``*_apply(params, x, ...) -> y``.
+Sharding is expressed through logical axes on the ParamSpecs plus a small
+number of activation constraints (ParallelContext); the same code lowers on
+1 CPU device and on the (pod, data, model) production mesh.
+
+Notable TPU-native choices (DESIGN.md §5):
+  * attention for long sequences uses a PAIR-LIST chunked flash pattern:
+    a scan over the statically-enumerated valid (q-chunk, kv-chunk) pairs
+    with online-softmax merging, so causal/windowed attention lowers with
+    the exact triangular/banded FLOP count (no masked-out waste);
+  * MoE uses sort + ``jax.lax.ragged_dot`` grouped GEMM (dropless,
+    MegaBlocks-style) inside a ``shard_map`` whose expert FFN dim is
+    tensor-sharded; the only collective is one psum on the combined output;
+  * RG-LRU lowers as ``jax.lax.associative_scan`` (log-depth), not a
+    sequential loop;
+  * sLSTM is an honest recurrence (scan over time); its tiny recurrent
+    matmuls are replicated rather than tensor-sharded (documented
+    TP-unfriendly, DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import LayerDef, ModelConfig
+from ..parallel.sharding import ParallelContext, ParamSpec
+
+ACT = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+}
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig, dim: Optional[int] = None):
+    d = dim or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": ParamSpec((d,), (None,), "ones"),
+                "bias": ParamSpec((d,), (None,), "zeros")}
+    return {"scale": ParamSpec((d,), (None,), "ones")}
+
+
+def norm_apply(p, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def _rms_head(x, scale, eps):
+    """qk-norm: RMS-normalise the head dim (Qwen3 style)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    while cos.ndim < x.ndim:
+        cos = cos[None]
+        sin = sin[None]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(length: int, dim: int, dtype=jnp.float32):
+    pos = np.arange(length)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / dim)
+    out = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(out, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attn_init(cfg: ModelConfig, cross: bool = False):
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": ParamSpec((D, H * hd), (None, "tp")),
+        "wk": ParamSpec((D, KV * hd), (None, "tp")),
+        "wv": ParamSpec((D, KV * hd), (None, "tp")),
+        "wo": ParamSpec((H * hd, D), ("tp", None)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ParamSpec((hd,), (None,), "ones")
+        p["k_norm"] = ParamSpec((hd,), (None,), "ones")
+    return p
+
+
+def _heads_spec(ctx: ParallelContext, n: int):
+    if ctx.weight_gather:            # seq-sharded activations, whole heads
+        return ("dp", "sp", None, None)
+    tp = ctx.tp_size()
+    return ("dp", None, "tp" if n % tp == 0 else None, None)
+
+
+def _plain_scores_attn(q, k, v, mask, dtype):
+    """q (B,Sq,G,Hg,hd) k/v (B,Skv,G,hd) grouped-query; mask (Sq,Skv)."""
+    s = jnp.einsum("bqghd,bkgd->bghqk", q, k).astype(jnp.float32)
+    s = s * (1.0 / math.sqrt(q.shape[-1]))
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bghqk,bkgd->bqghd", w.astype(dtype), v)
+    return o
+
+
+def _pair_list(nq: int, band: Optional[int]):
+    """Valid (qi, ki) chunk pairs for causal (band=None) or banded mask."""
+    pairs = []
+    for qi in range(nq):
+        lo = 0 if band is None else max(0, qi - band)
+        for ki in range(lo, qi + 1):
+            pairs.append((qi, ki))
+    return np.asarray(pairs, np.int32)
+
+
+def _chunked_causal_attn(q, k, v, chunk: int, window: int, dtype):
+    """Flash-pattern chunked attention via a scan over valid chunk pairs.
+
+    Exact-FLOP causal/banded attention: only chunk pairs intersecting the
+    mask are enumerated (statically), and online-softmax states merge
+    commutatively so any processing order is valid.
+    q: (B,S,G,Hg,hd) k/v: (B,S,G,hd).
+    """
+    B, S, G, Hg, hd = q.shape
+    nq = S // chunk
+    band = None if window <= 0 else (window + chunk - 1) // chunk
+    pairs = jnp.asarray(_pair_list(nq, band))
+
+    qc = q.reshape(B, nq, chunk, G, Hg, hd)
+    kc = k.reshape(B, nq, chunk, G, hd)
+    vc = v.reshape(B, nq, chunk, G, hd)
+
+    acc = jnp.zeros((nq, B, chunk, G, Hg, hd), jnp.float32)
+    mx = jnp.full((nq, B, G, Hg, chunk), -jnp.inf, jnp.float32)
+    den = jnp.zeros((nq, B, G, Hg, chunk), jnp.float32)
+
+    idx = jnp.arange(chunk)
+    scale = 1.0 / math.sqrt(hd)
+
+    def step(carry, pair):
+        acc, mx, den = carry
+        qi, ki = pair[0], pair[1]
+        qb = jax.lax.dynamic_index_in_dim(qc, qi, 1, keepdims=False)
+        kb = jax.lax.dynamic_index_in_dim(kc, ki, 1, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vc, ki, 1, keepdims=False)
+        s = jnp.einsum("bqghd,bkgd->bghqk", qb, kb).astype(jnp.float32)
+        s = s * scale
+        qpos = qi * chunk + idx[:, None]
+        kpos = ki * chunk + idx[None, :]
+        m = kpos <= qpos
+        if window > 0:
+            m &= kpos > qpos - window
+        s = jnp.where(m[None, None, None], s, -1e30)
+
+        m_new = jnp.maximum(mx[qi], jnp.max(s, axis=-1))
+        p_ = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(mx[qi] - m_new)
+        den_new = den[qi] * corr + jnp.sum(p_, axis=-1)
+        pv = jnp.einsum("bghqk,bkgd->bqghd", p_.astype(dtype), vb)
+        acc_new = (acc[qi] * corr.transpose(0, 3, 1, 2)[..., None]
+                   + pv.astype(jnp.float32))
+        return (acc.at[qi].set(acc_new), mx.at[qi].set(m_new),
+                den.at[qi].set(den_new)), None
+
+    (acc, mx, den), _ = jax.lax.scan(step, (acc, mx, den), pairs)
+    out = acc / jnp.maximum(den.transpose(0, 1, 4, 2, 3)[..., None], 1e-30)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, G, Hg, hd)
+    return out.astype(dtype)
+
+
+CHUNKED_THRESHOLD = 8192
+ATTN_CHUNK = 1024
+
+
+def _chunked_attn_kvfull(q, k, v, chunk: int, window: int, dtype,
+                         q_offset):
+    """Chunked attention where q is a LOCAL slice at global offset
+    ``q_offset`` (dynamic) against the FULL k/v.  Used by the weight-gather
+    sharded-attention path: every (q-chunk, kv-chunk) pair is enumerated
+    statically and masked dynamically (the local pair grid is small)."""
+    B, Sq, G, Hg, hd = q.shape
+    Skv = k.shape[1]
+    nq = Sq // chunk
+    nk = Skv // chunk
+    pairs = jnp.asarray([(i, j) for i in range(nq) for j in range(nk)],
+                        jnp.int32).reshape(nq * nk, 2)
+    qc = q.reshape(B, nq, chunk, G, Hg, hd)
+    kc = k.reshape(B, nk, chunk, G, hd)
+    vc = v.reshape(B, nk, chunk, G, hd)
+    acc = jnp.zeros((nq, B, chunk, G, Hg, hd), jnp.float32)
+    mx = jnp.full((nq, B, G, Hg, chunk), -jnp.inf, jnp.float32)
+    den = jnp.zeros((nq, B, G, Hg, chunk), jnp.float32)
+    idx = jnp.arange(chunk)
+    scale = 1.0 / math.sqrt(hd)
+
+    def step(carry, pair):
+        acc, mx, den = carry
+        qi, ki = pair[0], pair[1]
+        qb = jax.lax.dynamic_index_in_dim(qc, qi, 1, keepdims=False)
+        kb = jax.lax.dynamic_index_in_dim(kc, ki, 1, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vc, ki, 1, keepdims=False)
+        s = jnp.einsum("bqghd,bkgd->bghqk", qb, kb).astype(jnp.float32)
+        s = s * scale
+        qpos = q_offset + qi * chunk + idx[:, None]
+        kpos = ki * chunk + idx[None, :]
+        m = kpos <= qpos
+        if window > 0:
+            m &= kpos > qpos - window
+        s = jnp.where(m[None, None, None], s, -1e30)
+        m_new = jnp.maximum(mx[qi], jnp.max(s, axis=-1))
+        p_ = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(mx[qi] - m_new)
+        den_new = den[qi] * corr + jnp.sum(p_, axis=-1)
+        pv = jnp.einsum("bghqk,bkgd->bqghd", p_.astype(dtype), vb)
+        acc_new = (acc[qi] * corr.transpose(0, 3, 1, 2)[..., None]
+                   + pv.astype(jnp.float32))
+        return (acc.at[qi].set(acc_new), mx.at[qi].set(m_new),
+                den.at[qi].set(den_new)), None
+
+    (acc, mx, den), _ = jax.lax.scan(step, (acc, mx, den), pairs)
+    out = acc / jnp.maximum(den.transpose(0, 1, 4, 2, 3)[..., None], 1e-30)
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, G, Hg,
+                                                   hd).astype(dtype)
+
+
+def _wg_sharded_attn(q, k, v, ctx: ParallelContext, cfg: ModelConfig,
+                     window: int, dtype):
+    """Sequence-sharded attention for the weight-gather layout: q stays
+    local, k/v are all-gathered once per layer (tiny for MQA/GQA), the
+    flash pair-scan runs per shard with global position offsets
+    (EXPERIMENTS.md §Perf iteration 2c)."""
+    tp = ctx.tp_axis
+    dp = ctx.dp_axes or None
+    S = q.shape[1]
+    s_loc = S // ctx.tp_size()
+
+    def local(qb, kb, vb):
+        kf = jax.lax.all_gather(kb, tp, axis=1, tiled=True)
+        vf = jax.lax.all_gather(vb, tp, axis=1, tiled=True)
+        off = jax.lax.axis_index(tp) * s_loc
+        return _chunked_attn_kvfull(qb, kf, vf, min(ATTN_CHUNK, s_loc),
+                                    window, dtype, off)
+
+    spec_q = P(dp, tp, None, None, None)
+    spec_kv = P(dp, tp, None, None)
+    return jax.shard_map(local, mesh=ctx.mesh,
+                         in_specs=(spec_q, spec_kv, spec_kv),
+                         out_specs=spec_q, check_vma=False)(q, k, v)
+
+
+def attn_apply(p, x, ctx: ParallelContext, cfg: ModelConfig,
+               mode: str = "full", cache=None, pos=None, kv_src=None,
+               cross_kv=None):
+    """Attention sub-layer.
+
+    mode: "full" (causal), "bidir", "local" (banded causal, cfg.window).
+    cache: None for train/prefill-without-cache; dict(k, v[, pos_ids]) for
+      single-token decode — returns (y, new_cache).
+    kv_src: encoder output for cross-attention (bidirectional over kv_src).
+    cross_kv: precomputed (k, v) cross-attention cache (decode path).
+    """
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G, Hg = KV, H // KV
+    dtype = x.dtype
+
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    if cross_kv is not None:
+        k, v = cross_kv
+        Skv = k.shape[1]
+    else:
+        src = x if kv_src is None else kv_src
+        Skv = src.shape[1]
+        k = (src @ p["wk"]).reshape(B, Skv, KV, hd)
+        v = (src @ p["wv"]).reshape(B, Skv, KV, hd)
+
+    if cfg.qk_norm:
+        q = _rms_head(q, p["q_norm"], cfg.norm_eps)
+        if cross_kv is None:
+            k = _rms_head(k, p["k_norm"], cfg.norm_eps)
+
+    is_cross = kv_src is not None or cross_kv is not None
+    if cfg.use_rope and not is_cross:
+        qpos = (jnp.arange(S) if pos is None
+                else pos + jnp.arange(S))
+        kpos = jnp.arange(Skv) if cache is None else qpos
+        q = rope(q, qpos, cfg.rope_theta)
+        k = rope(k, kpos, cfg.rope_theta)
+
+    q = ctx.constrain(q, *_heads_spec(ctx, H))
+    k = ctx.constrain(k, *_heads_spec(ctx, KV))
+    v = ctx.constrain(v, *_heads_spec(ctx, KV))
+    qg = q.reshape(B, S, G, Hg, hd)
+
+    new_cache = None
+    if cache is not None:
+        # single-token (or short-segment) decode against a cache
+        assert S == 1
+        zero = jnp.zeros((), pos.dtype)
+        if "pos_ids" in cache:      # ring buffer (local attention)
+            W = cache["k"].shape[1]
+            slot = pos % W
+            ck = jax.lax.dynamic_update_slice(cache["k"], k,
+                                              (zero, slot, zero, zero))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v,
+                                              (zero, slot, zero, zero))
+            pids = jax.lax.dynamic_update_slice(
+                cache["pos_ids"], pos[None].astype(jnp.int32),
+                (slot.astype(jnp.int32),))
+            mask = (pids >= 0) & (pids <= pos) & (pids > pos - cfg.window)
+            new_cache = {"k": ck, "v": cv, "pos_ids": pids}
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k,
+                                              (zero, pos, zero, zero))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v,
+                                              (zero, pos, zero, zero))
+            mask = jnp.arange(ck.shape[1]) <= pos
+            new_cache = {"k": ck, "v": cv}
+        s = jnp.einsum("bqghd,bkgd->bghqk", qg, ck).astype(jnp.float32)
+        s = s * (1.0 / math.sqrt(hd))
+        s = jnp.where(mask[None, None, None, None, :], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bghqk,bkgd->bqghd", w.astype(dtype), cv)
+    elif is_cross or mode == "bidir":
+        mask = jnp.ones((S, Skv), bool)
+        o = _plain_scores_attn(qg, k, v, mask, dtype)
+    elif S <= CHUNKED_THRESHOLD:
+        i = jnp.arange(S)
+        mask = i[:, None] >= i[None, :]
+        if mode == "local":
+            mask &= i[:, None] - i[None, :] < cfg.window
+        o = _plain_scores_attn(qg, k, v, mask, dtype)
+    elif (ctx.weight_gather and ctx.active
+          and S % max(ctx.tp_size(), 1) == 0):
+        o = _wg_sharded_attn(qg, k, v, ctx, cfg,
+                             cfg.window if mode == "local" else 0, dtype)
+    else:
+        o = _chunked_causal_attn(qg, k, v, ATTN_CHUNK,
+                                 cfg.window if mode == "local" else 0, dtype)
+
+    y = o.reshape(B, S, H * hd) @ p["wo"]
+    return ctx.constrain(y, "dp", None, None), new_cache
+
+
+def attn_cache_spec(cfg: ModelConfig, mode: str, batch: int, s_max: int,
+                    dtype):
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    if mode == "local":
+        w = min(cfg.window, s_max)
+        return {
+            "k": jax.ShapeDtypeStruct((batch, w, KV, hd), dtype),
+            "v": jax.ShapeDtypeStruct((batch, w, KV, hd), dtype),
+            "pos_ids": jax.ShapeDtypeStruct((w,), jnp.int32),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct((batch, s_max, KV, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, s_max, KV, hd), dtype),
+    }
+
+
+def attn_cache_pspec(cfg: ModelConfig, mode: str, ctx: ParallelContext):
+    """Shard KV heads over tp when divisible, else the sequence dim (MQA)."""
+    tp = ctx.tp_size()
+    if cfg.n_kv_heads % tp == 0:
+        kvspec = ctx.pspec("dp", None, "tp", None)
+    else:
+        kvspec = ctx.pspec("dp", "sp", None, None)
+    out = {"k": kvspec, "v": kvspec}
+    if mode == "local":
+        out["pos_ids"] = P()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+def mlp_init(cfg: ModelConfig, d_ff: Optional[int] = None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        return {"wi": ParamSpec((D, 2 * F), (None, "tp")),
+                "wo": ParamSpec((F, D), ("tp", None))}
+    return {"wi": ParamSpec((D, F), (None, "tp")),
+            "wo": ParamSpec((F, D), ("tp", None))}
+
+
+def mlp_apply(p, x, ctx: ParallelContext, cfg: ModelConfig):
+    h = x @ p["wi"]
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        u, g = jnp.split(h, 2, axis=-1)
+        act = jax.nn.silu if cfg.mlp_act == "swiglu" else jax.nn.gelu
+        h = u * act(g)
+    else:
+        h = ACT[cfg.mlp_act](h)
+    if ctx.weight_gather:
+        h = ctx.constrain(h, "dp", "sp", None)
+        return ctx.constrain(h @ p["wo"], "dp", "sp", None)
+    h = ctx.constrain(h, "dp", None, "tp")
+    y = h @ p["wo"]
+    return ctx.constrain(y, "dp", None, None)
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN: sort + ragged_dot grouped GEMM (dropless), expert-ff tensor-sharded
+# ---------------------------------------------------------------------------
+
+def moe_init(cfg: ModelConfig):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    p = {
+        "router": ParamSpec((D, E), (None, None), scale=0.02),
+        "w_gate": ParamSpec((E, D, F), (None, None, "tp")),
+        "w_up": ParamSpec((E, D, F), (None, None, "tp")),
+        "w_down": ParamSpec((E, F, D), (None, "tp", None)),
+    }
+    if cfg.n_shared:
+        p["shared"] = mlp_init(
+            dataclasses.replace(cfg, mlp_act="swiglu"),
+            d_ff=cfg.n_shared * cfg.moe_d_ff)
+        p["shared_gate"] = ParamSpec((D, 1), (None, None), scale=0.02)
+    return p
+
+
+def _route(p, xt, cfg: ModelConfig):
+    """Router: top-k probs/ids + Switch load-balance aux."""
+    E, K = cfg.n_experts, cfg.top_k
+    logits = (xt @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)               # (T, K)
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)    # renormalise
+    me = jnp.mean(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=(0, 1))
+    ce = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(me * ce)
+    return top_p, top_e, aux
+
+
+def _moe_local(p, x, cfg: ModelConfig, n_tp: int):
+    """Per-shard MoE body (runs inside shard_map; x is the LOCAL block).
+
+    x: (b, S, D). Expert FFN dim is sharded (w_* carry 1/n_tp of F); the
+    partial outputs are psum'ed over the 'model' axis by the caller.
+    Two dispatch implementations (cfg.moe_impl):
+      * "ragged":  sort + jax.lax.ragged_dot grouped GEMM (dropless).
+        Ideal on TPU (megablox); XLA:CPU's cost model charges it as a
+        dense loop over ALL E experts — see EXPERIMENTS.md §Perf iter 1.
+      * "capacity": GShard-style statically-shaped dispatch — tokens sorted
+        into (E, C) capacity slots (C = T*K/E * capacity_factor; overflow
+        dropped), expert FFN as batched einsum, token-chunked to bound the
+        dispatch buffer.  Exact-FLOP batched GEMMs.
+    """
+    b, S, D = x.shape
+    T = b * S
+    xt = x.reshape(T, D)
+    top_p, top_e, aux = _route(p, xt, cfg)
+    if cfg.moe_impl == "capacity":
+        y = _dispatch_capacity(p, xt, top_p, top_e, cfg)
+    else:
+        y = _dispatch_ragged(p, xt, top_p, top_e, cfg)
+    return y.reshape(b, S, D), aux
+
+
+def _dispatch_ragged(p, xt, top_p, top_e, cfg: ModelConfig):
+    T, D = xt.shape
+    E, K = cfg.n_experts, cfg.top_k
+    flat_e = top_e.reshape(-1)                           # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    order = jnp.argsort(flat_e)
+    se, st = flat_e[order], flat_t[order]
+    group_sizes = jnp.bincount(se, length=E).astype(jnp.int32)
+
+    xs = xt[st]                                          # (T*K, D) gathered
+    g = jax.lax.ragged_dot(xs, p["w_gate"], group_sizes)
+    u = jax.lax.ragged_dot(xs, p["w_up"], group_sizes)
+    h = u * jax.nn.silu(g)
+    out = jax.lax.ragged_dot(h, p["w_down"], group_sizes)  # (T*K, D) partial
+    w = top_p.reshape(-1)[order].astype(out.dtype)
+    return jnp.zeros((T, D), out.dtype).at[st].add(out * w[:, None])
+
+
+def _dispatch_capacity(p, xt, top_p, top_e, cfg: ModelConfig):
+    """Capacity-slot dispatch, chunked over tokens."""
+    T, D = xt.shape
+    chunk = cfg.moe_chunk or T
+    chunk = min(chunk, T)
+    if T % chunk != 0:
+        chunk = T
+    nchunks = T // chunk
+
+    def one_chunk(xc, pc, ec):
+        Tc = xc.shape[0]
+        E, K = cfg.n_experts, cfg.top_k
+        C = int(np.ceil(Tc * K / E * cfg.moe_capacity_factor / 8.0) * 8)
+        flat_e = ec.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(Tc), K)
+        order = jnp.argsort(flat_e)
+        se, st = flat_e[order], flat_t[order]
+        counts = jnp.bincount(se, length=E)
+        offsets = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                                   jnp.cumsum(counts)[:-1]])
+        rank = jnp.arange(Tc * K) - offsets[se]
+        keep = rank < C
+        slot = jnp.where(keep, se * C + rank, E * C)     # overflow row E*C
+        xe = jnp.zeros((E * C + 1, D), xt.dtype).at[slot].set(xc[st])
+        xe = xe[:-1].reshape(E, C, D)
+        g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+        h = u * jax.nn.silu(g)
+        oe = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+        oe = jnp.concatenate([oe.reshape(E * C, D),
+                              jnp.zeros((1, D), oe.dtype)])
+        out = oe[slot]                                   # (Tc*K, D)
+        w = pc.reshape(-1)[order].astype(out.dtype) * keep.astype(out.dtype)
+        return jnp.zeros((Tc, D), out.dtype).at[st].add(out * w[:, None])
+
+    if nchunks == 1:
+        return one_chunk(xt, top_p, top_e)
+    xcs = xt.reshape(nchunks, chunk, D)
+    pcs = top_p.reshape(nchunks, chunk, -1)
+    ecs = top_e.reshape(nchunks, chunk, -1)
+    ys = jax.lax.map(lambda args: one_chunk(*args), (xcs, pcs, ecs))
+    return ys.reshape(T, D)
+
+
+def moe_apply(p, x, ctx: ParallelContext, cfg: ModelConfig):
+    if ctx.active:
+        mesh = ctx.mesh
+        dp = ctx.dp_axes or None
+        tp = ctx.tp_axis
+        pspec_x = P(dp, None, None)
+        pspec_w = {
+            "router": P(None, None),
+            "w_gate": P(None, None, tp),
+            "w_up": P(None, None, tp),
+            "w_down": P(None, tp, None),
+        }
+        moe_p = {k: p[k] for k in pspec_w}
+
+        def body(xb, wb):
+            y, aux = _moe_local(wb, xb, cfg, ctx.tp_size())
+            y = jax.lax.psum(y, tp) if tp else y
+            aux = jax.lax.pmean(aux, tp) if tp else aux
+            if dp:
+                aux = jax.lax.pmean(aux, dp)
+            return y, aux
+
+        y, aux = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(pspec_x, pspec_w),
+            out_specs=(pspec_x, P()),
+            check_vma=False)(x, moe_p)
+    else:
+        y, aux = _moe_local(p, x, cfg, 1)
+
+    if cfg.n_shared:
+        sg = jax.nn.sigmoid((x @ p["shared_gate"]).astype(jnp.float32))
+        shared_cfg = dataclasses.replace(cfg, mlp_act="swiglu")
+        y = y + (sg.astype(x.dtype)
+                 * mlp_apply(p["shared"], x, ctx, shared_cfg))
+    return ctx.constrain(y, "dp", None, None), aux
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin) recurrent block — associative scan
+# ---------------------------------------------------------------------------
+
+def rglru_init(cfg: ModelConfig):
+    D, L, CW = cfg.d_model, cfg.lru_width, cfg.conv_width
+    return {
+        "wx": ParamSpec((D, L), (None, "tp")),
+        "wgate": ParamSpec((D, L), (None, "tp")),
+        "conv": ParamSpec((CW, L), (None, "tp"), scale=0.1),
+        "w_rg": ParamSpec((L, L), ("tp", None), scale=0.5),
+        "w_ig": ParamSpec((L, L), ("tp", None), scale=0.5),
+        "lam": ParamSpec((L,), ("tp",), "ones", scale=2.0),
+        "wo": ParamSpec((L, D), ("tp", None)),
+    }
+
+
+_RGLRU_C = 8.0
+
+
+def _rglru_core(p, u, h0=None):
+    """Diagonal gated linear recurrence h_t = a_t h_{t-1} + b_t.
+
+    u: (B, S, L) post-conv activations. Returns (h (B,S,L), h_last).
+    """
+    r = jax.nn.sigmoid((u @ p["w_rg"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ p["w_ig"]).astype(jnp.float32))
+    log_a0 = -_RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    log_a = log_a0 * r                                   # (B,S,L)
+    a = jnp.exp(log_a)
+    gated = i * u.astype(jnp.float32)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    av, bv = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return bv.astype(u.dtype), bv[:, -1]
+
+
+def _causal_conv(p, x, state=None):
+    """Depthwise causal conv, width CW. x: (B,S,L). state: (B,CW-1,L)."""
+    CW = p["conv"].shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], CW - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * p["conv"][i][None, None]
+              for i in range(CW))
+    new_state = xp[:, -(CW - 1):]
+    return out, new_state
+
+
+def rglru_apply(p, x, ctx: ParallelContext, cfg: ModelConfig, cache=None):
+    u = x @ p["wx"]
+    gate = jax.nn.gelu(x @ p["wgate"])
+    conv_state = None if cache is None else cache["conv"]
+    h0 = None if cache is None else cache["h"]
+    u, new_conv = _causal_conv(p, u, conv_state)
+    u = ctx.constrain(u, "dp", None, "tp")
+    h, h_last = _rglru_core(p, u, h0)
+    y = (h * gate) @ p["wo"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h_last.astype(cache["h"].dtype),
+                     "conv": new_conv.astype(cache["conv"].dtype)}
+    return ctx.constrain(y, "dp", None, None), new_cache
+
+
+def rglru_cache_spec(cfg: ModelConfig, batch: int, dtype):
+    L, CW = cfg.lru_width, cfg.conv_width
+    return {"h": jax.ShapeDtypeStruct((batch, L), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((batch, CW - 1, L), dtype)}
+
+
+def rglru_cache_pspec(cfg: ModelConfig, ctx: ParallelContext):
+    return {"h": ctx.pspec("dp", "tp"), "conv": ctx.pspec("dp", None, "tp")}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks (sLSTM: true recurrence; mLSTM: chunked linear attention)
+# ---------------------------------------------------------------------------
+
+def slstm_init(cfg: ModelConfig):
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    F = int(cfg.slstm_proj * D)
+    return {
+        "w_in": ParamSpec((D, 4 * D), (None, None)),
+        "r": ParamSpec((H, dh, 4 * dh), (None, None, None), scale=0.5),
+        "up": ParamSpec((D, 2 * F), (None, "tp")),
+        "down": ParamSpec((F, D), ("tp", None)),
+    }
+
+
+def slstm_apply(p, x, ctx: ParallelContext, cfg: ModelConfig, cache=None):
+    """sLSTM with exponential gating + stabiliser (xLSTM eq. block).
+
+    Recurrence is inherently sequential (gates see h_{t-1}); lowered as a
+    time scan. x: (B,S,D)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    pre = (x @ p["w_in"]).astype(jnp.float32)            # (B,S,4D)
+    pre = pre.reshape(B, S, 4, H, dh)
+
+    if cache is None:
+        c0 = jnp.zeros((B, H, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        h0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.zeros((B, H, dh), jnp.float32)
+    else:
+        c0, n0, h0, m0 = (cache["c"], cache["n"], cache["h"], cache["m"])
+
+    rw = p["r"].astype(jnp.float32).reshape(H, dh, 4, dh)
+
+    def step(carry, pre_t):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhd,hdgk->bghk", h, rw)        # (B,4,H,dh)
+        zi, zf, zz, zo = [pre_t[:, g] + rec[:, g] for g in range(4)]
+        m_new = jnp.maximum(zf + m, zi)
+        i = jnp.exp(zi - m_new)
+        f = jnp.exp(zf + m - m_new)
+        c_new = f * c + i * jnp.tanh(zz)
+        n_new = f * n + i
+        h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    (c, n, h, m), hs = jax.lax.scan(step, (c0, n0, h0, m0),
+                                    pre.transpose(1, 0, 2, 3, 4))
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+
+    up = y @ p["up"]
+    u, g = jnp.split(up, 2, axis=-1)
+    y = (u * jax.nn.gelu(g)) @ p["down"]
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": c, "n": n, "h": h, "m": m}
+    return ctx.constrain(y, "dp", None, None), new_cache
+
+
+def slstm_cache_spec(cfg: ModelConfig, batch: int):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jax.ShapeDtypeStruct((batch, H, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def mlstm_init(cfg: ModelConfig):
+    D = cfg.d_model
+    I = int(cfg.mlstm_proj * D)
+    return {
+        "up": ParamSpec((D, 2 * I), (None, None)),
+        "wq": ParamSpec((I, I), (None, None)),
+        "wk": ParamSpec((I, I), (None, None)),
+        "wv": ParamSpec((I, I), (None, None)),
+        "wif": ParamSpec((I, 2), (None, None), scale=0.02),
+        "down": ParamSpec((I, D), (None, None)),
+    }
+
+
+MLSTM_CHUNK = 256
+
+
+def mlstm_apply(p, x, ctx: ParallelContext, cfg: ModelConfig, cache=None):
+    """mLSTM: matrix-memory linear recurrence, chunked parallel form.
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T ;  h_t = C_t q_t / max(|n_t.q_t|, 1).
+    Gates are scalar-per-head in log space (exponential gating with a
+    running stabiliser carried across chunks).
+    """
+    B, S, D = x.shape
+    H = cfg.n_heads
+    I = int(cfg.mlstm_proj * D)
+    dh = I // H
+    up = x @ p["up"]
+    inner, ogate = jnp.split(up, 2, axis=-1)
+
+    q = (inner @ p["wq"]).reshape(B, S, H, dh)
+    k = (inner @ p["wk"]).reshape(B, S, H, dh) / math.sqrt(dh)
+    v = (inner @ p["wv"]).reshape(B, S, H, dh)
+    gates = (inner @ p["wif"]).astype(jnp.float32)       # (B,S,2)
+    log_i = gates[..., 0:1]                              # pre-activations
+    log_f = -jax.nn.softplus(-gates[..., 1:2])           # log sigmoid
+
+    if cache is not None:
+        # single-token decode
+        C0, n0, m0 = cache["C"], cache["n"], cache["m"]
+        li = log_i[:, 0]
+        lf = log_f[:, 0]
+        m_new = jnp.maximum(lf + m0, li)                 # (B,1)
+        fg = jnp.exp(lf + m0 - m_new)[..., None, None]
+        ig = jnp.exp(li - m_new)[..., None, None]
+        kk = k[:, 0].astype(jnp.float32)
+        vv = v[:, 0].astype(jnp.float32)
+        C = fg * C0 + ig * jnp.einsum("bhd,bhe->bhde", vv, kk)
+        n = fg[..., 0] * n0 + ig[..., 0] * kk
+        qq = q[:, 0].astype(jnp.float32)
+        num = jnp.einsum("bhde,bhe->bhd", C, qq)
+        den = jnp.maximum(jnp.abs(jnp.sum(n * qq, -1, keepdims=True)),
+                          jnp.exp(-m_new)[..., None])
+        h = (num / den).reshape(B, 1, I).astype(x.dtype)
+        y = (h * jax.nn.silu(ogate)) @ p["down"]
+        return (ctx.constrain(y, "dp", None, None),
+                {"C": C, "n": n, "m": m_new})
+
+    # chunked parallel train/prefill
+    Cn = min(MLSTM_CHUNK, S)
+    nc = S // Cn
+    qc = q.reshape(B, nc, Cn, H, dh).astype(jnp.float32)
+    kc = k.reshape(B, nc, Cn, H, dh).astype(jnp.float32)
+    vc = v.reshape(B, nc, Cn, H, dh).astype(jnp.float32)
+    lic = log_i.reshape(B, nc, Cn)
+    lfc = log_f.reshape(B, nc, Cn)
+
+    F_c = jnp.cumsum(lfc, axis=2)                        # intra-chunk cum logf
+    # per-position stabiliser within chunk: m_t = max over j<=t of (F_t-F_j+li_j)
+    su = F_c[..., :, None] - F_c[..., None, :] + lic[..., None, :]
+    tri = jnp.tril(jnp.ones((Cn, Cn), bool))
+    su = jnp.where(tri[None, None], su, -jnp.inf)
+    m_intra = jnp.max(su, axis=-1)                       # (B,nc,Cn)
+
+    def chunk_step(carry, inp):
+        C0, n0, m0 = carry                               # (B,H,dh,dh) etc
+        qb, kb, vb, li, lf, Fb, su_b, m_in = inp
+        # total forget inside chunk
+        Ftot = Fb[:, -1]                                 # (B,)
+        m_new = jnp.maximum(Fb + m0[:, None], m_in)      # (B,Cn) stabiliser
+        # inter-chunk contribution: h_inter_t = exp(F_t + m0 - m_t) q_t C0
+        w_inter = jnp.exp(Fb + m0[:, None] - m_new)      # (B,Cn)
+        num_i = jnp.einsum("bchd,bhde->bche", qb, C0)
+        num_i = num_i * w_inter[..., None, None]
+        den_i = jnp.einsum("bche,bhe->bch",
+                           qb * w_inter[..., None, None], n0)
+        # intra-chunk: scores exp(F_t - F_j + li_j - m_t) q_t.k_j
+        w_intra = jnp.exp(su_b - m_new[..., None])       # (B,Cn,Cn)
+        s = jnp.einsum("bchd,bjhd->bhcj", qb, kb)
+        sw = s * w_intra[:, None]
+        num = num_i + jnp.einsum("bhcj,bjhd->bchd", sw, vb)
+        den = den_i + jnp.sum(sw, axis=-1).transpose(0, 2, 1)
+        den_floor = jnp.exp(-m_new)[:, :, None]          # stabilised "1"
+        h = num / jnp.maximum(jnp.abs(den), den_floor)[..., None]
+        # state update to end of chunk
+        m_end = m_new[:, -1]
+        # w_j = exp(F_tot - F_j + log i_j - m_end): per-position inject gain
+        wk = jnp.exp(Fb[:, -1:] - Fb + li - m_end[:, None])   # (B,Cn)
+        C_new = (jnp.exp(Ftot + m0 - m_end)[:, None, None, None] * C0
+                 + jnp.einsum("bjhd,bjhe,bj->bhde", vb, kb, wk))
+        n_new = (jnp.exp(Ftot + m0 - m_end)[:, None, None] * n0
+                 + jnp.einsum("bjhe,bj->bhe", kb, wk))
+        return (C_new, n_new, m_end), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.zeros((B,), jnp.float32)
+    xs = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), lic.transpose(1, 0, 2),
+          lfc.transpose(1, 0, 2), F_c.transpose(1, 0, 2),
+          su.transpose(1, 0, 2, 3), m_intra.transpose(1, 0, 2))
+    (_, _, _), hs = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, I).astype(x.dtype)
+    y = (h * jax.nn.silu(ogate)) @ p["down"]
+    return ctx.constrain(y, "dp", None, None), None
+
+
+def mlstm_cache_spec(cfg: ModelConfig, batch: int):
+    H = cfg.n_heads
+    I = int(cfg.mlstm_proj * cfg.d_model)
+    dh = I // H
+    return {"C": jax.ShapeDtypeStruct((batch, H, dh, dh), jnp.float32),
+            "n": jax.ShapeDtypeStruct((batch, H, dh), jnp.float32),
+            "m": jax.ShapeDtypeStruct((batch, 1), jnp.float32)}

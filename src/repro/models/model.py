@@ -1,0 +1,371 @@
+"""Model assembly: stages -> scanned blocks -> LM forward / prefill / decode.
+
+One generic decoder (plus optional encoder) covers all 10 assigned
+architectures; the per-arch differences live entirely in ModelConfig
+(mixer kinds, MoE, frontends).  Repeated stages are lowered as
+``jax.lax.scan`` over stacked parameters with ``jax.checkpoint`` on the
+body, so granite-34b's 88 layers compile as one rolled loop and activation
+memory stays O(1 layer).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import LayerDef, ModelConfig, Stage
+from ..parallel.sharding import ParallelContext, ParamSpec
+from . import layers as L
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _layer_init(cfg: ModelConfig, ldef: LayerDef):
+    p: dict = {"norm1": L.norm_init(cfg)}
+    if ldef.mixer in ("full", "bidir", "local"):
+        p["mixer"] = L.attn_init(cfg)
+    elif ldef.mixer == "rglru":
+        p["mixer"] = L.rglru_init(cfg)
+    elif ldef.mixer == "slstm":
+        p["mixer"] = L.slstm_init(cfg)
+    elif ldef.mixer == "mlstm":
+        p["mixer"] = L.mlstm_init(cfg)
+    else:
+        raise ValueError(ldef.mixer)
+    if ldef.cross:
+        p["norm_cross"] = L.norm_init(cfg)
+        p["cross"] = L.attn_init(cfg, cross=True)
+    if ldef.ffn == "mlp":
+        p["norm2"] = L.norm_init(cfg)
+        p["ffn"] = L.mlp_init(cfg)
+    elif ldef.ffn == "moe":
+        p["norm2"] = L.norm_init(cfg)
+        p["ffn"] = L.moe_init(cfg)
+    return p
+
+
+def _stack_specs(tree, repeat: int):
+    return jax.tree.map(
+        lambda s: ParamSpec((repeat,) + s.shape, (None,) + s.logical,
+                            s.init, s.scale),
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _stage_init(cfg: ModelConfig, stage: Stage):
+    body = {f"layer{i}": _layer_init(cfg, ld)
+            for i, ld in enumerate(stage.layers)}
+    return _stack_specs(body, stage.repeat)
+
+
+def model_init(cfg: ModelConfig):
+    D, V = cfg.d_model, cfg.vocab
+    p: dict = {
+        "embed": ParamSpec((V, D), ("tp", None), "embed", scale=0.02),
+        "final_norm": L.norm_init(cfg),
+        "stages": [_stage_init(cfg, s) for s in cfg.stages],
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ParamSpec((D, V), (None, "tp"))
+    if cfg.frontend != "none":
+        p["frontend_proj"] = ParamSpec((cfg.frontend_dim, D), (None, None))
+    if cfg.is_encdec:
+        p["enc_stages"] = [_stage_init(cfg, s) for s in cfg.encoder_stages]
+        p["enc_norm"] = L.norm_init(cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Block / stage application
+# ---------------------------------------------------------------------------
+
+def _block_apply(p, x, ctx, cfg, ldef: LayerDef, cache=None, pos=None,
+                 enc=None):
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+    h = L.norm_apply(p["norm1"], x, cfg)
+    if ldef.mixer in ("full", "bidir", "local"):
+        mc = None if cache is None else cache.get("mixer")
+        y, nc = L.attn_apply(p["mixer"], h, ctx, cfg, mode=ldef.mixer,
+                             cache=mc, pos=pos)
+    elif ldef.mixer == "rglru":
+        mc = None if cache is None else cache.get("mixer")
+        y, nc = L.rglru_apply(p["mixer"], h, ctx, cfg, cache=mc)
+    elif ldef.mixer == "slstm":
+        mc = None if cache is None else cache.get("mixer")
+        y, nc = L.slstm_apply(p["mixer"], h, ctx, cfg, cache=mc)
+    elif ldef.mixer == "mlstm":
+        mc = None if cache is None else cache.get("mixer")
+        y, nc = L.mlstm_apply(p["mixer"], h, ctx, cfg, cache=mc)
+    else:
+        raise ValueError(ldef.mixer)
+    if cache is not None and nc is not None:
+        new_cache["mixer"] = nc
+    x = x + y
+
+    if ldef.cross:
+        h = L.norm_apply(p["norm_cross"], x, cfg)
+        ckv = None if cache is None else cache.get("cross_kv")
+        if ckv is not None:
+            y, _ = L.attn_apply(p["cross"], h, ctx, cfg, cross_kv=ckv)
+            new_cache["cross_kv"] = ckv
+        else:
+            y, _ = L.attn_apply(p["cross"], h, ctx, cfg, kv_src=enc)
+        x = x + y
+
+    if ldef.ffn == "mlp":
+        h = L.norm_apply(p["norm2"], x, cfg)
+        x = x + L.mlp_apply(p["ffn"], h, ctx, cfg)
+    elif ldef.ffn == "moe":
+        h = L.norm_apply(p["norm2"], x, cfg)
+        y, a = L.moe_apply(p["ffn"], h, ctx, cfg)
+        x = x + y
+        aux = aux + a
+    return x, new_cache, aux
+
+
+def _run_stage(p_stacked, x, ctx, cfg, stage: Stage, caches=None, pos=None,
+               enc=None, seq_constraint=True):
+    """Scan the stage body over its stacked parameters (and caches)."""
+
+    def constrain(x):
+        if (seq_constraint or ctx.weight_gather) and x.shape[1] > 1:
+            return ctx.constrain(x, "dp", "sp", None)
+        return ctx.constrain(x, "dp", None, None)
+
+    unroll = stage.repeat if ctx.unroll_stages else 1
+
+    if caches is None:
+        def body(x, lp):
+            aux = jnp.zeros((), jnp.float32)
+            for i, ld in enumerate(stage.layers):
+                x, _, a = _block_apply(lp[f"layer{i}"], x, ctx, cfg, ld,
+                                       pos=pos, enc=enc)
+                aux += a
+            return constrain(x), aux
+
+        x, auxs = jax.lax.scan(jax.checkpoint(body), constrain(x), p_stacked,
+                               unroll=unroll)
+        return x, None, jnp.sum(auxs)
+
+    def body(x, inp):
+        lp, cin = inp
+        new = {}
+        for i, ld in enumerate(stage.layers):
+            x, nc, _ = _block_apply(lp[f"layer{i}"], x, ctx, cfg, ld,
+                                    cache=cin[f"layer{i}"], pos=pos, enc=enc)
+            new[f"layer{i}"] = nc
+        return constrain(x), new
+
+    x, new_caches = jax.lax.scan(body, constrain(x), (p_stacked, caches),
+                                 unroll=unroll)
+    return x, new_caches, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / heads
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg, tokens):
+    e = jnp.take(params["embed"], tokens, axis=0)
+    return e * jnp.asarray(cfg.d_model ** 0.5, e.dtype)
+
+
+def _logits(params, cfg, ctx, x):
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    out = x @ head
+    return ctx.constrain(out.astype(jnp.float32), "dp", None, "tp")
+
+
+def _encoder(params, cfg, ctx, frames):
+    """Whisper-style encoder over precomputed (stub) frame embeddings."""
+    x = frames @ params["frontend_proj"]
+    x = x + L.sinusoid_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+    for sp, stage in zip(params["enc_stages"], cfg.encoder_stages):
+        x, _, _ = _run_stage(sp, x, ctx, cfg, stage, seq_constraint=False)
+    return L.norm_apply(params["enc_norm"], x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, ctx: ParallelContext, tokens,
+            frontend_embeds=None, infer: bool = False):
+    """Full-sequence forward (training / prefill). Returns (logits, aux).
+
+    For VLM the frontend patch embeddings are projected and PREPENDED to the
+    text-token embeddings (total length = assigned seq_len); for enc-dec the
+    frontend embeddings feed the encoder instead.
+
+    infer=True drops the sequence-sharded carry constraint: it exists to
+    bound remat storage during training; at inference it only forces extra
+    seq<->heads resharding per layer (EXPERIMENTS.md §Perf iteration 2).
+    """
+    enc = None
+    if cfg.is_encdec:
+        enc = _encoder(params, cfg, ctx, frontend_embeds)
+        x = _embed(params, cfg, tokens)
+    elif cfg.frontend != "none":
+        pe = frontend_embeds @ params["frontend_proj"]
+        te = _embed(params, cfg, tokens)
+        x = jnp.concatenate([pe.astype(te.dtype), te], axis=1)
+    else:
+        x = _embed(params, cfg, tokens)
+
+    if not cfg.use_rope:
+        x = x + L.sinusoid_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+
+    aux = jnp.zeros((), jnp.float32)
+    for sp, stage in zip(params["stages"], cfg.stages):
+        x, _, a = _run_stage(sp, x, ctx, cfg, stage, enc=enc,
+                             seq_constraint=not infer)
+        aux += a
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    return _logits(params, cfg, ctx, x), aux
+
+
+def lm_loss(logits, labels, mask=None):
+    """Next-token cross entropy in f32; labels already shifted by caller.
+
+    Written to stay LOCAL over a vocab-sharded logits tensor: the gold
+    logit is extracted with a fused compare-select-reduce (NOT a gather,
+    which GSPMD would serve by all-gathering the full (B,S,V) logits), and
+    the logsumexp reduces locally with one tiny psum per partial.
+    """
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                    logits.ndim - 1)
+    gold = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0),
+                   axis=-1)
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(nll.dtype)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def prefill(params, cfg: ModelConfig, ctx: ParallelContext, tokens,
+            frontend_embeds=None):
+    """Serving prefill: forward pass, returns last-position logits only
+    (the realistic prefill output: next-token distribution)."""
+    logits, _ = forward(params, cfg, ctx, tokens, frontend_embeds,
+                        infer=True)
+    return logits[:, -1]
+
+
+def decode_step(params, cfg: ModelConfig, ctx: ParallelContext, cache,
+                tokens, pos, enc_out=None):
+    """One-token decode against a KV/state cache.
+
+    tokens: (B, 1) int32; pos: () int32 current position.
+    cache: pytree aligned with cfg.stages (see cache_specs).
+    Returns (logits (B, vocab) f32, new_cache).
+    """
+    x = _embed(params, cfg, tokens)
+    if not cfg.use_rope:
+        pe = L.sinusoid_positions(1, cfg.d_model, x.dtype)  # placeholder row
+        x = x + pe[None] * 0 + _sinusoid_at(pos, cfg.d_model, x.dtype)
+    new_caches = []
+    for sp, stage, c in zip(params["stages"], cfg.stages, cache):
+        x, nc, _ = _run_stage(sp, x, ctx, cfg, stage, caches=c, pos=pos,
+                              enc=enc_out)
+        new_caches.append(nc)
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = _logits(params, cfg, ctx, x)
+    return logits[:, 0], new_caches
+
+
+def _sinusoid_at(pos, dim, dtype):
+    half = dim // 2
+    i = jnp.arange(half, dtype=jnp.float32)
+    angle = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * i / dim)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)]).astype(dtype)[None, None]
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (specs for dry-run, zeros for smoke tests)
+# ---------------------------------------------------------------------------
+
+def _layer_cache_spec(cfg, ldef: LayerDef, batch, s_max, dtype):
+    c: dict = {}
+    if ldef.mixer in ("full", "bidir"):
+        c["mixer"] = L.attn_cache_spec(cfg, "full", batch, s_max, dtype)
+    elif ldef.mixer == "local":
+        c["mixer"] = L.attn_cache_spec(cfg, "local", batch, s_max, dtype)
+    elif ldef.mixer == "rglru":
+        c["mixer"] = L.rglru_cache_spec(cfg, batch, dtype)
+    elif ldef.mixer == "slstm":
+        c["mixer"] = L.slstm_cache_spec(cfg, batch)
+    elif ldef.mixer == "mlstm":
+        c["mixer"] = L.mlstm_cache_spec(cfg, batch)
+    if ldef.cross:
+        KV, hd = cfg.n_kv_heads, cfg.head_dim
+        kv = jax.ShapeDtypeStruct((batch, cfg.frontend_tokens, KV, hd), dtype)
+        c["cross_kv"] = (kv, kv)
+    return c
+
+
+def _layer_cache_pspec(cfg, ldef: LayerDef, ctx: ParallelContext):
+    c: dict = {}
+    if ldef.mixer in ("full", "bidir"):
+        c["mixer"] = L.attn_cache_pspec(cfg, "full", ctx)
+    elif ldef.mixer == "local":
+        c["mixer"] = L.attn_cache_pspec(cfg, "local", ctx)
+    elif ldef.mixer == "rglru":
+        c["mixer"] = L.rglru_cache_pspec(cfg, ctx)
+    elif ldef.mixer == "slstm":
+        z = ctx.pspec("dp", None, None)
+        c["mixer"] = {"c": z, "n": z, "h": z, "m": z}
+    elif ldef.mixer == "mlstm":
+        c["mixer"] = {"C": ctx.pspec("dp", None, None, None),
+                      "n": ctx.pspec("dp", None, None),
+                      "m": ctx.pspec("dp", None)}
+    if ldef.cross:
+        tp_ok = cfg.n_kv_heads % max(ctx.tp_size(), 1) == 0
+        kv = ctx.pspec("dp", None, "tp" if tp_ok else None, None)
+        c["cross_kv"] = (kv, kv)
+    return c
+
+
+def _stack_tree(tree, repeat: int, kind: str):
+    if kind == "spec":
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((repeat,) + s.shape, s.dtype),
+            tree)
+    return jax.tree.map(lambda s: P(*((None,) + tuple(s))), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int, dtype,
+                ctx: ParallelContext):
+    """(ShapeDtypeStruct tree, PartitionSpec tree) for the decode cache."""
+    shapes, pspecs = [], []
+    for stage in cfg.stages:
+        body_shapes = {f"layer{i}": _layer_cache_spec(cfg, ld, batch, s_max,
+                                                      dtype)
+                       for i, ld in enumerate(stage.layers)}
+        body_pspecs = {f"layer{i}": _layer_cache_pspec(cfg, ld, ctx)
+                       for i, ld in enumerate(stage.layers)}
+        shapes.append(_stack_tree(body_shapes, stage.repeat, "spec"))
+        pspecs.append(_stack_tree(body_pspecs, stage.repeat, "pspec"))
+    return shapes, pspecs
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype,
+               ctx: ParallelContext):
+    """Zero-initialised cache (smoke tests / real decoding)."""
+    shapes, _ = cache_specs(cfg, batch, s_max, dtype, ctx)
+
+    def zero(s):
+        if s.dtype == jnp.int32:   # pos_ids ring buffers start invalid
+            return jnp.full(s.shape, -1, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    return jax.tree.map(zero, shapes)

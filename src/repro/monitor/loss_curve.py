@@ -1,0 +1,106 @@
+"""GP loss-curve modelling: smoothing, divergence alarms, run comparison.
+
+Uses the paper's machinery on the training-loss time series:
+
+  * ``smooth``      — posterior mean/band of the loss curve (eq. 2.1) with
+    the hyperparameters trained by profiled-NCG (eq. 2.16/2.17);
+  * ``divergence``  — latest losses outside the posterior predictive band
+    => early-abort signal for runtime/;
+  * ``compare_runs`` — the paper's Laplace model comparison (eq. 2.13)
+    applied to "do two runs follow the same underlying curve?": evidence of
+    the pooled model vs the product of per-run evidences.  ln B > 0 means
+    one shared curve explains both runs (a hyperparameter change made no
+    real difference); ln B << 0 means the runs genuinely differ.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import covariances as C
+from ..core import laplace, predict, train
+from ..core.reparam import FlatBox, flat_box
+
+COV = C.MATERN32
+SIGMA_N = 0.2
+
+
+class Smoothed(NamedTuple):
+    mean: np.ndarray
+    std: np.ndarray
+    theta: np.ndarray
+
+
+def _fit(x, yn, key):
+    box = flat_box(COV, x)
+    res = train.train(COV, x, yn, SIGMA_N, key, n_starts=4, max_iters=30,
+                      jitter=1e-8, box=box)
+    return res, box
+
+
+def smooth(losses: Sequence[float], key=None) -> Smoothed:
+    y = jnp.asarray(np.asarray(losses, np.float64))
+    x = jnp.arange(y.shape[0], dtype=jnp.float64)
+    mu, sd = jnp.mean(y), jnp.std(y) + 1e-12
+    res, _ = _fit(x, (y - mu) / sd, key or jax.random.key(0))
+    post = predict.predict(COV, res.theta_hat, x, (y - mu) / sd, x, SIGMA_N,
+                           include_noise=False, jitter=1e-8)
+    return Smoothed(mean=np.asarray(post.mean * sd + mu),
+                    std=np.asarray(jnp.sqrt(post.var) * sd),
+                    theta=np.asarray(res.theta_hat))
+
+
+def divergence(losses: Sequence[float], k_sigma: float = 4.0,
+               recent: int = 5, key=None) -> bool:
+    """True when the last `recent` losses sit above the GP band fit to the
+    earlier history — the runtime aborts/restores on this signal."""
+    y = np.asarray(losses, np.float64)
+    if y.shape[0] < recent + 8:
+        return False
+    hist = jnp.asarray(y[:-recent])
+    x = jnp.arange(hist.shape[0], dtype=jnp.float64)
+    mu, sd = jnp.mean(hist), jnp.std(hist) + 1e-12
+    yn = (hist - mu) / sd
+    res, _ = _fit(x, yn, key or jax.random.key(0))
+    xq = jnp.arange(hist.shape[0], hist.shape[0] + recent,
+                    dtype=jnp.float64)
+    post = predict.predict(COV, res.theta_hat, x, yn, xq, SIGMA_N,
+                           include_noise=True, jitter=1e-8)
+    z = ((y[-recent:] - float(mu)) / float(sd) - np.asarray(post.mean)) \
+        / np.sqrt(np.asarray(post.var) + 1e-12)
+    return bool(np.mean(z) > k_sigma)
+
+
+def compare_runs(losses_a: Sequence[float], losses_b: Sequence[float],
+                 key=None) -> float:
+    """ln B (shared-curve vs separate-curves), via eq. 2.13 three times."""
+    key = key or jax.random.key(0)
+    ya = np.asarray(losses_a, np.float64)
+    yb = np.asarray(losses_b, np.float64)
+    xa = np.arange(ya.shape[0], dtype=np.float64)
+    xb = np.arange(yb.shape[0], dtype=np.float64)
+    pooled_x = np.concatenate([xa, xb])
+    pooled_y = np.concatenate([ya, yb])
+    order = np.argsort(pooled_x, kind="stable")
+
+    def evidence(x, y, k):
+        x = jnp.asarray(x)
+        y = jnp.asarray(y)
+        mu, sd = jnp.mean(y), jnp.std(y) + 1e-12
+        yn = (y - mu) / sd
+        box = flat_box(COV, x + 1e-3 * jnp.arange(x.shape[0]))
+        res = train.train(COV, x, yn, SIGMA_N, k, n_starts=4, max_iters=30,
+                          jitter=1e-8, box=box)
+        lap = laplace.evidence_profiled(COV, res.theta_hat, x, yn, SIGMA_N,
+                                        box, jitter=1e-8)
+        return float(lap.log_z)
+
+    k1, k2, k3 = jax.random.split(key, 3)
+    z_pool = evidence(pooled_x[order], pooled_y[order], k1)
+    z_a = evidence(xa, ya, k2)
+    z_b = evidence(xb, yb, k3)
+    return z_pool - (z_a + z_b)

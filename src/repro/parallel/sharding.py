@@ -1,0 +1,196 @@
+"""Logical-axis sharding: one model definition, any mesh.
+
+Every parameter and activation in `repro.models` is annotated with LOGICAL
+axis names; this module maps them onto whatever physical mesh the launcher
+built.  The same model code therefore lowers on a single CPU device (smoke
+tests), one 16x16 pod, or the (pod=2, data=16, model=16) production mesh —
+elastic re-meshing (DESIGN.md §5) falls out of re-binding the rules.
+
+Logical axes:
+  "dp"     data parallel — batch dims; maps to ("pod", "data") when the pod
+           axis exists, else ("data",)
+  "tp"     tensor parallel — heads / ff / vocab / expert-ff; maps to "model"
+  "sp"     sequence parallel — long KV caches when kv_heads < tp size
+  None     replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelContext:
+    """Binds logical axis names to a physical mesh (or no mesh at all).
+
+    unroll_stages: fully unroll the per-stage layer scans.  Used by the
+    dry-run so XLA's cost_analysis sees every layer's FLOPs (a rolled
+    ``while`` body is only counted once); training keeps rolled loops for
+    bounded compile time.
+
+    weight_gather: ZeRO-style INFERENCE layout — weights shard their
+    leading dim over "model" and are all-gathered per layer, activations
+    stay sequence-sharded.  Wins when activation bytes/layer >> weight
+    bytes/layer (long-context prefill of MQA models: granite prefill_32k,
+    EXPERIMENTS.md §Perf iteration 2b).
+    """
+
+    mesh: Optional[Mesh] = None
+    unroll_stages: bool = False
+    weight_gather: bool = False
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None and np.prod(self.mesh.devices.shape) > 1
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        if self.mesh is None:
+            return ()
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    @property
+    def tp_axis(self) -> Optional[str]:
+        if self.mesh is None or "model" not in self.mesh.axis_names:
+            return None
+        return "model"
+
+    def resolve(self, logical: Optional[str]):
+        if logical is None or self.mesh is None:
+            return None
+        if logical == "dp":
+            ax = self.dp_axes
+            return ax if ax else None
+        if logical in ("tp", "sp"):
+            return self.tp_axis
+        raise ValueError(f"unknown logical axis {logical!r}")
+
+    def pspec(self, *logical) -> P:
+        return P(*(self.resolve(l) for l in logical))
+
+    def sharding(self, *logical) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.pspec(*logical))
+
+    def constrain(self, x, *logical):
+        """with_sharding_constraint when a mesh is active, else identity."""
+        if not self.active:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.sharding(*logical))
+
+    def tp_size(self) -> int:
+        if self.mesh is None or self.tp_axis is None:
+            return 1
+        return self.mesh.shape[self.tp_axis]
+
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in self.dp_axes] or [1]))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs: shapes + logical axes declared together, materialised as
+# ShapeDtypeStructs (dry-run), NamedShardings, or real initialised arrays.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: float = 1.0            # stddev multiplier for "normal"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def tree_shapes(tree, dtype):
+    """ParamSpec tree -> ShapeDtypeStruct tree (for .lower; no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), tree,
+        is_leaf=_is_spec)
+
+
+def sanitize_pspec(shape, spec: P, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh does not divide evenly.
+
+    jit in_shardings require exact divisibility (unlike constraints);
+    e.g. internvl2's vocab 92553 cannot be 16-way sharded — it falls back
+    to replicated on that dim.
+    """
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape)
+                                                       - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        out.append(ax if dim % size == 0 else None)
+    return P(*out)
+
+
+def tree_shardings(tree, ctx: ParallelContext):
+    """ParamSpec tree -> NamedSharding tree (in_shardings for jit),
+    sanitised against non-divisible dims."""
+    if ctx.mesh is None:
+        return jax.tree.map(lambda s: None, tree, is_leaf=_is_spec)
+
+    def one(s: ParamSpec):
+        if ctx.weight_gather and len(s.shape) >= 2:
+            # ZeRO-style: leading dim over "model" (stacked stage params
+            # carry a layer dim first — shard the next one instead)
+            lead = 1 if s.logical and s.logical[0] is None \
+                and len(s.shape) >= 3 else 0
+            logical = [None] * len(s.shape)
+            logical[lead] = "tp"
+            spec = sanitize_pspec(s.shape, ctx.pspec(*logical), ctx.mesh)
+        else:
+            spec = sanitize_pspec(s.shape, ctx.pspec(*s.logical), ctx.mesh)
+        return NamedSharding(ctx.mesh, spec)
+
+    return jax.tree.map(one, tree, is_leaf=_is_spec)
+
+
+def tree_pspecs(tree, ctx: ParallelContext):
+    return jax.tree.map(lambda s: ctx.pspec(*s.logical), tree,
+                        is_leaf=_is_spec)
+
+
+def init_tree(key, tree, dtype=jnp.float32):
+    """ParamSpec tree -> real parameters (smoke tests / examples)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(k, s: ParamSpec):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dtype)
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+        # float(): keep the scalar weak-typed so params stay `dtype`
+        std = float(s.scale / np.sqrt(max(fan_in, 1)))
+        if s.init == "embed":
+            std = float(s.scale)
+        return std * jax.random.normal(k, s.shape, dtype)
+
+    return jax.tree.unflatten(treedef, [one(k, s) for k, s in
+                                        zip(keys, leaves)])
+
+
+def param_count(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))

@@ -1,0 +1,187 @@
+"""Fault tolerance: heartbeats, GP straggler detection, restart, elastic.
+
+Three layers, designed for 1000+ nodes (DESIGN.md §5) and exercised at
+container scale by tests/test_runtime.py:
+
+1. **Heartbeats / failure detection** — every host stamps a monotonic
+   heartbeat; the coordinator marks hosts dead after `timeout_s` and
+   triggers the restart path (checkpoint restore + optional re-mesh).
+
+2. **Straggler mitigation — the paper as infrastructure**: per-host step
+   times form a time series; we fit the paper's GP machinery (profiled
+   hyperlikelihood training, eq. 2.16) with a Matérn-3/2 covariance to the
+   fleet's step-time history and flag hosts whose latest time is improbable
+   under the fleet posterior (> k sigma).  Flagged hosts get their data
+   shards rebalanced away (`rebalance`).  This is a real deployment of the
+   paper's fast-training claim: the fit runs every few hundred steps, so it
+   must be cheap — one Cholesky + analytic gradients, not a sampler.
+
+3. **Elastic re-meshing** — shardings are expressed against logical axes
+   (parallel/sharding.py), so losing a pod means: rebuild the mesh with the
+   survivors, re-derive NamedShardings, and `checkpoint.restore(...,
+   shardings=new)` — no model-code changes.  `shrink_mesh` implements the
+   mesh arithmetic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from ..core import covariances as cov_lib
+from ..core import hyperlik, train as gp_train
+from ..core.reparam import flat_box
+
+
+@dataclasses.dataclass
+class HostState:
+    last_heartbeat: float
+    step_times: List[float]
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts: Sequence[int], timeout_s: float = 60.0):
+        now = time.monotonic()
+        self.timeout_s = timeout_s
+        self.hosts: Dict[int, HostState] = {
+            h: HostState(now, []) for h in hosts}
+
+    def beat(self, host: int, step_time_s: Optional[float] = None):
+        st = self.hosts[host]
+        st.last_heartbeat = time.monotonic()
+        if step_time_s is not None:
+            st.step_times.append(step_time_s)
+
+    def dead_hosts(self) -> List[int]:
+        now = time.monotonic()
+        return [h for h, st in self.hosts.items()
+                if now - st.last_heartbeat > self.timeout_s]
+
+
+class GPStragglerDetector:
+    """Fleet step-time model using the paper's fast GP training.
+
+    Fits sigma_f-profiled GP regression (Matérn-3/2 over step index) to the
+    pooled fleet step times, then scores each host's recent mean residual
+    against the posterior predictive; hosts beyond ``k_sigma`` are
+    stragglers.  Training cost: a handful of NCG iterations on an
+    n<=window Cholesky — milliseconds at window=128.
+    """
+
+    def __init__(self, window: int = 128, k_sigma: float = 4.0,
+                 recent: int = 8):
+        self.window = window
+        self.k_sigma = k_sigma
+        self.recent = recent
+
+    def fit_fleet(self, step_times: Dict[int, List[float]]):
+        """Fit the fleet trend on the per-step MEDIAN across hosts — robust
+        to the stragglers we are trying to detect (a pooled fit would
+        absorb their drift into the trend)."""
+        n_steps = min(len(ts) for ts in step_times.values())
+        if n_steps < 8:
+            return None
+        lo = max(n_steps - self.window, 0)
+        per_step = np.stack([np.asarray(ts[lo:n_steps])
+                             for ts in step_times.values()])
+        med = np.median(per_step, axis=0)
+        x = jnp.asarray(np.arange(lo, n_steps), jnp.float64)
+        y = jnp.asarray(med)
+        mu = jnp.mean(y)
+        sd = jnp.std(y) + 1e-12
+        yn = (y - mu) / sd
+        cov = cov_lib.MATERN32
+        res = gp_train.train(cov, x, yn, sigma_n=0.3, key=jax.random.key(0),
+                             n_starts=4, max_iters=30, jitter=1e-8)
+        return {"cov": cov, "theta": res.theta_hat, "x": x, "yn": yn,
+                "mu": mu, "sd": sd, "sigma_f": res.sigma_f_hat}
+
+    def stragglers(self, step_times: Dict[int, List[float]]) -> List[int]:
+        fit = self.fit_fleet(step_times)
+        if fit is None:
+            return []
+        from ..core import predict as gp_predict
+        out = []
+        for h, ts in step_times.items():
+            if len(ts) < self.recent:
+                continue
+            t = np.arange(len(ts) - self.recent, len(ts), dtype=np.float64)
+            post = gp_predict.predict(fit["cov"], fit["theta"], fit["x"],
+                                      fit["yn"], jnp.asarray(t), 0.3,
+                                      include_noise=True)
+            resid = ((np.asarray(ts[-self.recent:]) - float(fit["mu"]))
+                     / float(fit["sd"]) - np.asarray(post.mean))
+            z = resid / np.sqrt(np.asarray(post.var) + 1e-12)
+            if float(np.mean(z)) > self.k_sigma:
+                out.append(h)
+        return out
+
+
+def rebalance(shard_sizes: Dict[int, int], stragglers: Sequence[int],
+              factor: float = 0.5) -> Dict[int, int]:
+    """Shift `factor` of each straggler's shard onto the healthy hosts."""
+    healthy = [h for h in shard_sizes if h not in stragglers]
+    if not healthy:
+        return dict(shard_sizes)
+    out = dict(shard_sizes)
+    moved = 0
+    for h in stragglers:
+        take = int(out[h] * factor)
+        out[h] -= take
+        moved += take
+    for i, h in enumerate(healthy):
+        out[h] += moved // len(healthy) + (1 if i < moved % len(healthy)
+                                           else 0)
+    return out
+
+
+def shrink_mesh(mesh: Mesh, lost_pods: Sequence[int]) -> Mesh:
+    """Elastic: drop failed pod slices and rebuild the mesh.
+
+    Shardings are logical (parallel/sharding.py), so callers only re-derive
+    NamedShardings from the new mesh and restore the latest checkpoint with
+    them (checkpoint.store.restore(shardings=...)).
+    """
+    if "pod" not in mesh.axis_names:
+        raise ValueError("mesh has no pod axis to shrink")
+    ax = mesh.axis_names.index("pod")
+    keep = [i for i in range(mesh.devices.shape[ax]) if i not in lost_pods]
+    devs = np.take(mesh.devices, keep, axis=ax)
+    if devs.shape[ax] == 1:   # collapse to single-pod mesh
+        devs = np.squeeze(devs, axis=ax)
+        names = tuple(n for n in mesh.axis_names if n != "pod")
+        return Mesh(devs, names)
+    return Mesh(devs, mesh.axis_names)
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_restarts: int = 100
+    backoff_s: float = 5.0
+
+
+def run_with_restarts(train_loop: Callable[[int], int],
+                      policy: RestartPolicy = RestartPolicy(),
+                      on_failure: Optional[Callable[[Exception], None]]
+                      = None) -> int:
+    """Driver: call train_loop(start_step); on exception, restore from the
+    latest checkpoint (train_loop's job via its closure) and continue."""
+    restarts = 0
+    step = 0
+    while True:
+        try:
+            return train_loop(step)
+        except Exception as e:  # noqa: BLE001 — any worker failure
+            restarts += 1
+            if on_failure:
+                on_failure(e)
+            if restarts > policy.max_restarts:
+                raise
+            time.sleep(policy.backoff_s * min(restarts, 6))
+            step = -1   # sentinel: train_loop restores from checkpoint

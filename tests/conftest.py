@@ -1,0 +1,14 @@
+import jax
+
+# GP linear algebra needs f64; model code pins dtypes explicitly, so the
+# global flag is safe for the whole suite.  (The dry-run entry point is the
+# only place that may NOT import this — it sets device-count flags first.)
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,84 @@
+"""Covariance library: PSD-ness, symmetry, compact support, hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import covariances as C
+
+ALL = list(C.REGISTRY.values())
+THETAS = {
+    "k1": [3.0, 1.5, 0.1], "k2": [3.0, 1.5, 0.1, 2.5, -0.2],
+    "se": [1.0], "matern12": [0.5], "matern32": [0.5], "matern52": [0.5],
+    "rq": [0.5, 0.3], "periodic": [1.2, 0.1],
+}
+
+
+@pytest.mark.parametrize("cov", ALL, ids=[c.name for c in ALL])
+def test_symmetric_and_unit_diag(cov, rng):
+    x = jnp.asarray(np.sort(rng.uniform(0, 30, 50)))
+    K = cov(jnp.asarray(THETAS[cov.name]), x, x)
+    np.testing.assert_allclose(K, K.T, atol=1e-12)
+    np.testing.assert_allclose(jnp.diag(K), 1.0, atol=1e-10)
+
+
+@pytest.mark.parametrize("cov", ALL, ids=[c.name for c in ALL])
+def test_positive_semidefinite(cov, rng):
+    x = jnp.asarray(np.sort(rng.uniform(0, 30, 60)))
+    K = cov(jnp.asarray(THETAS[cov.name]), x, x)
+    ev = np.linalg.eigvalsh(np.asarray(K))
+    assert ev.min() > -1e-8, f"{cov.name}: min eig {ev.min()}"
+
+
+def test_wendland_misprint_documented():
+    """The printed eq. (3.3) polynomial is indefinite; our corrected
+    Wendland form is PD (see covariances.compact_support docstring)."""
+    t = jnp.arange(1, 101, dtype=jnp.float64)
+    dt = t[:, None] - t[None, :]
+    tau = jnp.abs(dt) / np.exp(3.5)
+    printed = jnp.where(tau < 1, (1 - tau) ** 5
+                        * (48 * tau**2 + 15 * tau + 3) / 3, 0.0)
+    assert np.linalg.eigvalsh(np.asarray(printed)).min() < -0.1
+    ours = C.compact_support(dt / np.exp(3.5))
+    assert np.linalg.eigvalsh(np.asarray(ours)).min() > -1e-8
+
+
+def test_compact_support_is_compact():
+    dt = jnp.asarray([0.0, 0.5, 0.999, 1.0, 1.5, -2.0])
+    v = C.compact_support(dt)
+    assert v[0] == 1.0
+    assert np.all(np.asarray(v[3:]) == 0.0)
+    assert np.all(np.asarray(v[:3]) > 0.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(phi0=st.floats(1.0, 4.0), phi1=st.floats(0.5, 3.0),
+       xi=st.floats(-0.4, 0.4))
+def test_k1_psd_property(phi0, phi1, xi):
+    """Hypothesis: k1 + noise stays PD across its hyperparameter box."""
+    x = jnp.arange(1.0, 41.0)
+    K = C.build_K(C.K1, jnp.asarray([phi0, phi1, xi]), x, 0.05)
+    assert np.linalg.eigvalsh(np.asarray(K)).min() > 0
+
+
+def test_product_and_mixture_composition(rng):
+    x = jnp.asarray(np.sort(rng.uniform(0, 10, 30)))
+    prod = C.product("sexm", C.SE, C.MATERN32)
+    th = jnp.asarray([0.5, 0.2])
+    K = prod(th, x, x)
+    np.testing.assert_allclose(
+        K, C.SE(th[:1], x, x) * C.MATERN32(th[1:], x, x), rtol=1e-12)
+    mix = C.mixture("mix", C.SE, C.MATERN32)
+    thm = jnp.asarray([0.3, 0.5, 0.2])
+    Km = mix(thm, x, x)
+    np.testing.assert_allclose(
+        Km, 0.3 * C.SE(th[:1], x, x) + 0.7 * C.MATERN32(th[1:], x, x),
+        rtol=1e-12)
+
+
+def test_multidim_inputs(rng):
+    x = jnp.asarray(rng.normal(size=(20, 3)))
+    K = C.SE(jnp.asarray([0.5]), x, x)
+    assert K.shape == (20, 20)
+    assert np.linalg.eigvalsh(np.asarray(K)).min() > -1e-10

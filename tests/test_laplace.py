@@ -1,0 +1,91 @@
+"""Laplace evidence (eq. 2.13) against brute-force quadrature; Fig-2-style
+posterior-Gaussianity check; error bars from the inverse Hessian."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import covariances as C
+from repro.core import hyperlik as H
+from repro.core import laplace, train
+from repro.core.reparam import FlatBox, flat_box
+from repro.data.synthetic import synthetic
+
+SIGMA_N = 0.1
+
+
+def test_laplace_matches_quadrature_1d():
+    """1-hyperparameter SE model: ln Z_est vs trapezoid quadrature."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(np.sort(rng.uniform(0, 20, 60)))
+    cov = C.SE
+    theta_true = jnp.asarray([0.7])
+    from repro.core import predict
+    y = predict.draw_prior(jax.random.key(0), cov, theta_true, x, 1.0,
+                           SIGMA_N)
+    box = FlatBox(jnp.asarray([-2.0]), jnp.asarray([2.5]))
+    res = train.train(cov, x, y, SIGMA_N, jax.random.key(1), n_starts=6,
+                      max_iters=60, box=box)
+    lap = laplace.evidence_profiled(cov, res.theta_hat, x, y, SIGMA_N, box)
+
+    # quadrature of P_marg over the flat box / V
+    grid = jnp.linspace(box.lo[0], box.hi[0], 1200)
+    lps = jnp.stack([H.profiled_loglik(cov, jnp.asarray([g]), x, y,
+                                       SIGMA_N)[0] for g in grid])
+    lps = lps + H.marginal_const(60)
+    log_quad = (jax.scipy.special.logsumexp(lps)
+                + jnp.log(grid[1] - grid[0])
+                - jnp.log(box.widths[0]))
+    assert abs(float(lap.log_z) - float(log_quad)) < 0.15, \
+        (float(lap.log_z), float(log_quad))
+
+
+def test_posterior_is_gaussian_at_peak_fig2():
+    """Paper Fig. 2: near the peak, ln P is quadratic with curvature -H.
+    Check the Hessian predicts finite differences of ln P_max."""
+    ds = synthetic(jax.random.key(42), 100, "k2")
+    cov = C.K2
+    res = train.train(cov, ds.x, ds.y, ds.sigma_n, jax.random.key(1),
+                      n_starts=8, max_iters=80, scan_points=1024)
+    th = res.theta_hat
+    _, cache = H.profiled_loglik(cov, th, ds.x, ds.y, ds.sigma_n)
+    Hm = -H.profiled_hessian(cov, th, ds.x, ds.y, ds.sigma_n, cache)
+    lp0 = float(res.log_p_max)
+    for i in range(cov.n_params):
+        e = jnp.zeros(cov.n_params).at[i].set(1.0)
+        # step small relative to the curvature scale
+        h = 0.05 / np.sqrt(max(float(Hm[i, i]), 1.0))
+        lp_p, _ = H.profiled_loglik(cov, th + h * e, ds.x, ds.y, ds.sigma_n)
+        lp_m, _ = H.profiled_loglik(cov, th - h * e, ds.x, ds.y, ds.sigma_n)
+        quad_pred = -0.5 * float(Hm[i, i]) * h * h
+        observed = 0.5 * (float(lp_p) + float(lp_m)) - lp0
+        np.testing.assert_allclose(observed, quad_pred, rtol=0.25,
+                                   atol=5e-3)
+
+
+def test_error_bars_positive_and_finite():
+    ds = synthetic(jax.random.key(7), 60, "k1")
+    cov = C.K1
+    box = flat_box(cov, ds.x)
+    res = train.train(cov, ds.x, ds.y, ds.sigma_n, jax.random.key(2),
+                      n_starts=8, max_iters=60, scan_points=512)
+    lap = laplace.evidence_profiled(cov, res.theta_hat, ds.x, ds.y,
+                                    ds.sigma_n, box)
+    assert np.all(np.isfinite(np.asarray(lap.errors)))
+    assert np.all(np.asarray(lap.errors) > 0)
+
+
+def test_bayes_factor_prefers_generating_model():
+    """Data drawn from k2 should (weakly) favour k2 at n=100 — the paper's
+    Table-1 trend (ln B > 0 at n >= 100)."""
+    ds = synthetic(jax.random.key(42), 100, "k2")
+    out = {}
+    for cov, seed in [(C.K1, 1), (C.K2, 2)]:
+        box = flat_box(cov, ds.x)
+        res = train.train(cov, ds.x, ds.y, ds.sigma_n, jax.random.key(seed),
+                          n_starts=10, max_iters=80, scan_points=1536)
+        lap = laplace.evidence_profiled(cov, res.theta_hat, ds.x, ds.y,
+                                        ds.sigma_n, box)
+        out[cov.name] = lap
+    lnb = laplace.log_bayes_factor(out["k2"], out["k1"])
+    assert float(lnb) > 0.0, float(lnb)

@@ -1,0 +1,59 @@
+"""GPR prediction (eq. 2.1): interpolation, variances, posterior draws."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import covariances as C
+from repro.core import predict
+
+
+def test_interpolates_training_points_noise_free():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(np.sort(rng.uniform(0, 10, 40)))
+    y = jnp.sin(x)
+    post = predict.predict(C.SE, jnp.asarray([0.0]), x, y, x, 1e-4)
+    np.testing.assert_allclose(post.mean, y, atol=1e-3)
+    assert float(jnp.max(post.var)) < 1e-4
+
+
+def test_reverts_to_prior_far_away():
+    x = jnp.linspace(0, 1, 20)
+    y = jnp.sin(3 * x)
+    xs = jnp.asarray([50.0])
+    post = predict.predict(C.SE, jnp.asarray([0.0]), x, y, xs, 0.05)
+    np.testing.assert_allclose(post.mean, 0.0, atol=1e-6)
+    np.testing.assert_allclose(post.var, post.sigma_f_hat**2, rtol=1e-5)
+
+
+def test_posterior_variance_shrinks_near_data():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(np.sort(rng.uniform(0, 10, 30)))
+    y = jnp.asarray(rng.normal(size=30))
+    xs = jnp.asarray([float(x[10]), 25.0])
+    post = predict.predict(C.MATERN32, jnp.asarray([0.5]), x, y, xs, 0.1)
+    assert float(post.var[0]) < float(post.var[1])
+
+
+def test_posterior_draws_match_moments():
+    x = jnp.linspace(0, 5, 15)
+    y = jnp.cos(x)
+    xs = jnp.linspace(0, 5, 7)
+    mean, cov_post = predict.predict_full_cov(C.SE, jnp.asarray([0.0]), x,
+                                              y, xs, 0.05)
+    draws = predict.draw_posterior(jax.random.key(0), C.SE,
+                                   jnp.asarray([0.0]), x, y, xs, 0.05,
+                                   n_draws=4000)
+    np.testing.assert_allclose(jnp.mean(draws, 0), mean, atol=0.05)
+    emp = np.cov(np.asarray(draws).T)
+    np.testing.assert_allclose(emp, np.asarray(cov_post), atol=0.05)
+
+
+def test_prior_draw_statistics():
+    """Fig-1-style realisations: empirical variance ~ sigma_f^2 (1+s_n^2)."""
+    x = jnp.arange(1.0, 201.0)
+    ys = jnp.stack([predict.draw_prior(jax.random.key(i), C.K1,
+                                       jnp.asarray([3.5, 1.5, 0.0]), x,
+                                       2.0, 0.1) for i in range(24)])
+    var = float(jnp.mean(ys**2))
+    assert 2.0 < var < 8.0   # ~ sigma_f^2 = 4 within sampling noise

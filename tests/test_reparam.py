@@ -1,0 +1,72 @@
+"""Flat-prior reparameterisation, volumes, ordering (paper Sec. 3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import covariances as C
+from repro.core import reparam as R
+
+
+def test_flat_box_ranges(rng):
+    x = jnp.asarray(np.sort(rng.uniform(0, 100, 50)))
+    box = R.flat_box(C.K2, x)
+    dt_min, dt_max = R.data_timescale_range(x)
+    for i in C.K2.timescale_idx:
+        np.testing.assert_allclose(box.lo[i], np.log(dt_min))
+        np.testing.assert_allclose(box.hi[i], np.log(dt_max))
+    for i in C.K2.smoothness_idx:
+        assert box.lo[i] == -0.5 and box.hi[i] == 0.5
+
+
+def test_log_volume_with_ordering_correction(rng):
+    x = jnp.arange(1.0, 101.0)
+    box1 = R.flat_box(C.K1, x)
+    box2 = R.flat_box(C.K2, x)
+    v1 = R.log_prior_volume(C.K1, box1)
+    v2 = R.log_prior_volume(C.K2, box2)
+    w = float(jnp.log(box1.widths[0]))
+    # k2 adds one timescale + one smoothness(-> *1) and halves for T2>=T1
+    np.testing.assert_allclose(float(v2) - float(v1), w - np.log(2),
+                               rtol=1e-10)
+
+
+def test_sampling_respects_ordering():
+    x = jnp.arange(1.0, 51.0)
+    box = R.flat_box(C.K2, x)
+    s = R.sample_uniform(jax.random.key(0), C.K2, box, (500,))
+    assert bool(jnp.all(s[:, 3] >= s[:, 1]))          # phi2 >= phi1
+    assert bool(jnp.all(R.in_box(box, s)))
+
+
+def test_ordering_preserves_likelihood():
+    """Sorting (T1,l1)<->(T2,l2) must not change k2 (exchange symmetry)."""
+    x = jnp.arange(1.0, 31.0)
+    theta = jnp.asarray([3.0, 2.5, 0.2, 1.5, -0.1])   # T2 < T1: unordered
+    fixed = R.apply_ordering(C.K2, theta)
+    assert fixed[1] <= fixed[3]
+    K_orig = C.K2(theta, x, x)
+    K_sort = C.K2(fixed, x, x)
+    np.testing.assert_allclose(K_orig, K_sort, rtol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(u=st.lists(st.floats(0.01, 0.99), min_size=5, max_size=5))
+def test_box_bijection_roundtrip(u):
+    x = jnp.arange(1.0, 51.0)
+    box = R.flat_box(C.K2, x)
+    theta = box.lo + jnp.asarray(u) * box.widths
+    z = R.from_box(theta, box)
+    back = R.to_box(z, box)
+    np.testing.assert_allclose(back, theta, rtol=1e-6, atol=1e-9)
+
+
+def test_smoothness_transform_lognormal():
+    """xi -> l of eq. (3.5): uniform xi must induce log-normal l."""
+    key = jax.random.key(0)
+    xi = jax.random.uniform(key, (20000,), minval=-0.5, maxval=0.5)
+    l = C.smoothness_from_flat(xi)
+    logl = jnp.log(l)
+    np.testing.assert_allclose(jnp.mean(logl), C.LOGNORMAL_MU, atol=0.05)
+    np.testing.assert_allclose(jnp.std(logl), C.LOGNORMAL_SIGMA, atol=0.05)

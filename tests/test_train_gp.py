@@ -1,0 +1,60 @@
+"""GP trainer (multi-start NCG on ln P_max) behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import covariances as C
+from repro.core import hyperlik as H
+from repro.core import predict, train
+from repro.core.reparam import FlatBox
+
+
+def test_recovers_se_lengthscale():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(np.sort(rng.uniform(0, 30, 120)))
+    true = jnp.asarray([0.8])
+    y = predict.draw_prior(jax.random.key(0), C.SE, true, x, 1.5, 0.05)
+    box = FlatBox(jnp.asarray([-2.0]), jnp.asarray([2.5]))
+    res = train.train(C.SE, x, y, 0.05, jax.random.key(1), n_starts=6,
+                      max_iters=60, box=box)
+    assert abs(float(res.theta_hat[0]) - 0.8) < 0.35
+    # the profiled scale should recover sigma_f ~ 1.5
+    assert 0.8 < float(res.sigma_f_hat) < 2.5
+
+
+def test_counts_likelihood_evaluations():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(np.sort(rng.uniform(0, 30, 60)))
+    y = jnp.asarray(rng.normal(size=60))
+    res = train.train(C.SE, x, y, 0.1, jax.random.key(0), n_starts=4,
+                      max_iters=30,
+                      box=FlatBox(jnp.asarray([-2.0]), jnp.asarray([2.0])))
+    assert int(res.n_evals) >= 4          # at least one per start
+    assert int(res.n_evals) < 4 * 30 * 30  # bounded by starts*iters*probes
+
+
+def test_scan_seeding_counts_and_improves():
+    from repro.data.synthetic import synthetic
+    ds = synthetic(jax.random.key(42), 80, "k2")
+    blind = train.train(C.K1, ds.x, ds.y, ds.sigma_n, jax.random.key(5),
+                        n_starts=4, max_iters=40)
+    seeded = train.train(C.K1, ds.x, ds.y, ds.sigma_n, jax.random.key(5),
+                         n_starts=4, max_iters=40, scan_points=1024)
+    assert int(seeded.n_evals) >= 1024     # scan evals are counted
+    assert float(seeded.log_p_max) >= float(blind.log_p_max) - 1e-6
+
+
+def test_result_is_stationary_point():
+    """At theta_hat the profiled gradient (eq. 2.17) should be ~0 in the
+    unconstrained coordinates (interior optimum)."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(np.sort(rng.uniform(0, 30, 100)))
+    y = predict.draw_prior(jax.random.key(3), C.SE, jnp.asarray([0.5]), x,
+                           1.0, 0.05)
+    box = FlatBox(jnp.asarray([-2.0]), jnp.asarray([2.5]))
+    res = train.train(C.SE, x, y, 0.05, jax.random.key(4), n_starts=6,
+                      max_iters=80, grad_tol=1e-7, box=box)
+    _, cache = H.profiled_loglik(C.SE, res.theta_hat, x, y, 0.05)
+    g = H.profiled_grad(C.SE, res.theta_hat, x, y, 0.05, cache)
+    assert float(jnp.max(jnp.abs(g))) < 2e-2, np.asarray(g)
