@@ -56,13 +56,72 @@ def run(sizes=(1024, 4096, 8192), b=8, verbose=True):
     return rows
 
 
+def run_stacked_tangent(n=2048, b=8, verbose=True):
+    """Stacked multi-direction tangent matvec vs m sequential launches.
+
+    The gradient of the k2 hyperlikelihood needs dK/dtheta_i @ V for all
+    m = 5 flat directions.  The baseline is m separate tangent-kernel
+    launches (each regenerates the separation tile and re-evaluates the
+    transcendental-heavy covariance primal); the stacked kernel widens the
+    pdot block to (m, slots) and shares one tile generation + one
+    ``jax.linearize`` across all directions (DESIGN.md §2.3).
+    """
+    from repro.kernels import kernel_matvec as km
+
+    m = 5
+    theta = jnp.asarray([3.2, 1.5, 0.05, 2.8, -0.1], jnp.float32)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(np.sort(rng.uniform(0, 500, n)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n, b)), jnp.float32)
+    p = ops.natural_params("k2", theta)
+    pdots = ops.natural_tangents("k2", theta)
+    interp = jax.default_backend() != "tpu"
+
+    # m INDEPENDENT dispatches — what the per-parameter gradient loop used
+    # to issue (one tangent launch per direction; jitting them together
+    # would let XLA CSE the shared covariance primal, which no sequence of
+    # real kernel launches gets to do).
+    seq_fns = [jax.jit(lambda vv, pd=pdots[i]: km.matvec_tangent_pallas(
+        "k2", p, pd, x, x, vv, interpret=interp)) for i in range(m)]
+
+    @jax.jit
+    def stacked(vv):
+        return km.matvec_stacked_tangent_pallas("k2", p, pdots, x, x, vv,
+                                                interpret=interp)
+
+    want = jnp.stack([f(v) for f in seq_fns])
+    got = stacked(v)
+    err = float(jnp.max(jnp.abs(got - want))
+                / (jnp.max(jnp.abs(want)) + 1e-30))
+
+    def timeit(f):
+        f(v).block_until_ready()
+        t0 = time.time()
+        for _ in range(3):
+            f(v + 1).block_until_ready()
+        return (time.time() - t0) / 3
+
+    t_seq = sum(timeit(f) for f in seq_fns)
+    t_stacked = timeit(stacked)
+    row = {"n": n, "m": m, "relerr": err, "t_seq_s": t_seq,
+           "t_stacked_s": t_stacked, "speedup": t_seq / t_stacked}
+    if verbose:
+        print(f"stacked-tangent n={n} m={m}: relerr={err:.2e} "
+              f"seq={t_seq*1e3:.0f}ms stacked={t_stacked*1e3:.0f}ms "
+              f"speedup x{row['speedup']:.2f}", flush=True)
+    return row
+
+
 def main():
     rows = run()
+    tang = run_stacked_tangent()
     print("name,us_per_call,derived")
     for r in rows:
         print(f"kernel_matvec_n{r['n']},{r['t_s']*1e6:.0f},"
               f"relerr={r['relerr']:.1e};hbm_saving={r['traffic_ratio']:.0f}x")
-    return rows
+    print(f"kernel_tangent_stacked_n{tang['n']},{tang['t_stacked_s']*1e6:.0f},"
+          f"relerr={tang['relerr']:.1e};speedup_vs_seq={tang['speedup']:.2f}x")
+    return rows + [tang]
 
 
 if __name__ == "__main__":

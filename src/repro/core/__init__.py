@@ -8,12 +8,15 @@ Public API:
   train       — multi-start NCG maximiser of the profiled hyperlikelihood
   predict     — GPR posterior (eq. 2.1) & GP sampling
   nested      — nested-sampling baseline (the paper's MULTINEST stand-in)
-  iterative   — beyond-paper matrix-free path (CG + SLQ)
+  engine      — pluggable solver backends (dense Cholesky | matrix-free);
+                train/laplace/model_compare/nested/predict all take
+                ``backend=`` and route through it (DESIGN.md §2)
+  iterative   — matrix-free primitives (CG, SLQ, pivoted-Cholesky precond)
   distributed — beyond-paper multi-pod sharded GP
 """
 
-from . import (covariances, hyperlik, laplace, model_compare, nested,  # noqa: F401
-               predict, reparam, train)
+from . import (covariances, engine, hyperlik, laplace, model_compare,  # noqa: F401
+               nested, predict, reparam, train)
 
 
 def enable_x64():

@@ -29,6 +29,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..kernels import ops as kops
@@ -189,11 +190,11 @@ def distributed_profiled_loglik(kind: str, theta, x, y, sigma_n: float,
 
     rowspec = P(axes if len(axes) > 1 else axes[0])
     rhs = jnp.concatenate([y[:, None], z], axis=1)
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(), rowspec, P(), rowspec),
         out_specs=(P(), P(), P(), P()),
-        check_vma=False)
+        check_rep=False)
     lp, g, s2, iters = fn(theta, x, x, rhs)
     return DistGPResult(lp, g, s2, iters)
 

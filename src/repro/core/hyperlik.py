@@ -89,6 +89,18 @@ def _dK(kfun: Callable, theta: jax.Array, i: int) -> jax.Array:
     return jax.jvp(kfun, (theta,), (e,))[1]
 
 
+def _dK_stacked(kfun: Callable, theta: jax.Array) -> jax.Array:
+    """(m, n, n) stack of dK/dtheta_i for ALL basis directions.
+
+    One vmapped forward-mode pass replaces the per-parameter Python loop
+    (the dense-path mirror of the stacked Pallas tangent matvec, DESIGN.md
+    §2.3): the covariance builder's primal work is traced once and the m
+    tangents batch on device.
+    """
+    eye = jnp.eye(theta.shape[0], dtype=theta.dtype)
+    return jax.vmap(lambda e: jax.jvp(kfun, (theta,), (e,))[1])(eye)
+
+
 def _d2K(kfun: Callable, theta: jax.Array, i: int, j: int) -> jax.Array:
     """d^2K/dtheta_i dtheta_j via nested forward-mode (O(n^2))."""
     ei = jnp.zeros_like(theta).at[i].set(1.0)
@@ -145,11 +157,9 @@ def loglik_grad(cov: Covariance, theta, x, y, sigma_n: float,
     kfun = _kbuilder(cov, x, sigma_n, jitter)
     theta = jnp.asarray(theta)
     a = cache.alpha
-    g = []
-    for i in range(cov.n_params):
-        dKi = _dK(kfun, theta, i)
-        g.append(0.5 * (a @ (dKi @ a)) - 0.5 * jnp.vdot(cache.Kinv, dKi))
-    return jnp.stack(g)
+    dKs = _dK_stacked(kfun, theta)
+    return (0.5 * jnp.einsum("i,mij,j->m", a, dKs, a)
+            - 0.5 * jnp.einsum("ij,mij->m", cache.Kinv, dKs))
 
 
 def loglik_hessian(cov: Covariance, theta, x, y, sigma_n: float,
@@ -167,10 +177,10 @@ def loglik_hessian(cov: Covariance, theta, x, y, sigma_n: float,
     a = cache.alpha
     Kinv = cache.Kinv
 
-    dKs = [_dK(kfun, theta, i) for i in range(m)]
-    dKa = [dk @ a for dk in dKs]           # dK_i a            O(n^2) each
-    KidKa = [Kinv @ v for v in dKa]        # K^-1 dK_i a       O(n^2) each
-    S = [Kinv @ dk for dk in dKs]          # K^-1 dK_i         O(n^3) each,
+    dKs = _dK_stacked(kfun, theta)                  # (m, n, n), one pass
+    dKa = jnp.einsum("mij,j->mi", dKs, a)           # dK_i a       O(n^2) each
+    KidKa = jnp.einsum("ij,mj->mi", Kinv, dKa)      # K^-1 dK_i a  O(n^2) each
+    S = jnp.einsum("ij,mjk->mik", Kinv, dKs)        # K^-1 dK_i    O(n^3) each,
     # amortised across the m^2 Hessian entries (see DESIGN.md §3).
 
     H = jnp.zeros((m, m), dtype=a.dtype)
@@ -211,12 +221,9 @@ def profiled_grad(cov: Covariance, theta, x, y, sigma_n: float,
     theta = jnp.asarray(theta)
     a = cache.alpha
     s2 = cache.sigma2_hat
-    g = []
-    for i in range(cov.n_params):
-        dKi = _dK(kfun, theta, i)
-        g.append(0.5 * (a @ (dKi @ a)) / s2
-                 - 0.5 * jnp.vdot(cache.Kinv, dKi))
-    return jnp.stack(g)
+    dKs = _dK_stacked(kfun, theta)
+    return (0.5 * jnp.einsum("i,mij,j->m", a, dKs, a) / s2
+            - 0.5 * jnp.einsum("ij,mij->m", cache.Kinv, dKs))
 
 
 def profiled_hessian(cov: Covariance, theta, x, y, sigma_n: float,
@@ -234,11 +241,11 @@ def profiled_hessian(cov: Covariance, theta, x, y, sigma_n: float,
     Kinv = cache.Kinv
     s2 = cache.sigma2_hat
 
-    dKs = [_dK(kfun, theta, i) for i in range(m)]
-    dKa = [dk @ a for dk in dKs]
-    KidKa = [Kinv @ v for v in dKa]
-    quadv = jnp.stack([a @ v for v in dKa])    # a^T dK_i a
-    S = [Kinv @ dk for dk in dKs]
+    dKs = _dK_stacked(kfun, theta)
+    dKa = jnp.einsum("mij,j->mi", dKs, a)
+    KidKa = jnp.einsum("ij,mj->mi", Kinv, dKa)
+    quadv = jnp.einsum("i,mi->m", a, dKa)      # a^T dK_i a
+    S = jnp.einsum("ij,mjk->mik", Kinv, dKs)
 
     H = jnp.zeros((m, m), dtype=a.dtype)
     for i in range(m):

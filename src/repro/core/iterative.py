@@ -218,27 +218,97 @@ def profiled_loglik_iterative(kind: str, theta, x, y, sigma_n: float, key,
         return IterativeResult(lp, jnp.zeros_like(theta), s2, sol.iters,
                                jnp.max(sol.resnorm))
 
-    g = []
-    for i in range(m):
-        e = jnp.zeros_like(theta).at[i].set(1.0)
-        dk_alpha = jax.jvp(lambda t: mv(t, alpha[:, None]), (theta,),
-                           (e,))[1][:, 0]
-        dk_z = jax.jvp(lambda t: mv(t, z), (theta,), (e,))[1]
-        quad = 0.5 * (alpha @ dk_alpha) / s2
-        tr = 0.5 * jnp.mean(jnp.sum(Kinv_z * dk_z, axis=0))
-        g.append(quad - tr)
-    return IterativeResult(lp, jnp.stack(g), s2, sol.iters,
+    # ONE stacked Pallas launch delivers dK_i @ [alpha | z] for every
+    # hyperparameter direction (DESIGN.md §2.3) — the former per-parameter
+    # jvp loop re-generated the covariance tiles m times.
+    V = jnp.concatenate([alpha[:, None], z], axis=1)
+    dkv = kops.matvec_tangents(kind, theta, x, x, V)      # (m, n, 1+p)
+    quad = 0.5 * jnp.einsum("j,mj->m", alpha, dkv[:, :, 0]) / s2
+    tr = 0.5 * jnp.mean(jnp.einsum("jp,mjp->mp", Kinv_z, dkv[:, :, 1:]),
+                        axis=-1)
+    return IterativeResult(lp, quad - tr, s2, sol.iters,
                            jnp.max(sol.resnorm))
 
 
-def pivoted_cholesky_precond(K_diag_fn, matcol_fn, n: int, rank: int):
-    """(Optional) pivoted-Cholesky preconditioner for ill-conditioned K.
+# ---------------------------------------------------------------------------
+# Pivoted-Cholesky preconditioner (GPyTorch-style, rank-r + noise Woodbury)
+# ---------------------------------------------------------------------------
 
-    Greedy rank-r approximation L_r L_r^T + sigma^2 I; returns the
-    Woodbury-based preconditioner apply function.  Exposed for the perf
-    hillclimb; the well-conditioned paper kernels converge in < 100 CG
-    iterations unpreconditioned.
+def pivoted_cholesky(diag, matcol_fn: Callable, rank: int,
+                     eps: float = 1e-30):
+    """Greedy rank-``rank`` pivoted Cholesky of the NOISE-FREE kernel matrix.
+
+    diag:       (n,) diagonal of k(x, x) (unit-scale kernels: all ones).
+    matcol_fn:  i -> column k(x, x_i), O(n) per call for closed-form tiles.
+
+    Returns L (n, rank) with k(x,x) ~= L L^T; the classic greedy scheme —
+    pivot on the largest residual diagonal, one column evaluation per step,
+    O(n r^2) total.  Unfilled columns of L are zero, so the running
+    correction ``L @ L[i]`` needs no masking inside the fori_loop.
     """
-    raise NotImplementedError(
-        "hillclimb hook — see EXPERIMENTS.md §Perf for the measured "
-        "unpreconditioned CG iteration counts that justified deferring this")
+    n = diag.shape[0]
+    L0 = jnp.zeros((n, rank), diag.dtype)
+
+    def body(k, carry):
+        L, d = carry
+        i = jnp.argmax(d)
+        dii = jnp.maximum(d[i], eps)
+        c = matcol_fn(i)
+        lk = (c - L @ L[i]) / jnp.sqrt(dii)
+        L = L.at[:, k].set(lk)
+        d = jnp.clip(d - lk * lk, 0.0)
+        return L, d
+
+    L, _ = jax.lax.fori_loop(0, rank, body, (L0, diag))
+    return L
+
+
+def pivoted_cholesky_precond(diag, matcol_fn: Callable, n: int, rank: int,
+                             noise2: float) -> Callable:
+    """Rank-r pivoted-Cholesky preconditioner  P = L L^T + noise2 * I.
+
+    Returns the Woodbury apply  r -> P^{-1} r  for :func:`cg_solve`'s
+    ``precond`` argument:
+
+        P^{-1} = (I - L (noise2 I_r + L^T L)^{-1} L^T) / noise2,
+
+    one (r, r) Cholesky at build time and O(n r) per application.  The
+    preconditioned system's spectrum clusters at 1 wherever the top-r
+    pivots capture K's smooth directions (the GPyTorch/BBMM observation),
+    collapsing CG iteration counts for ill-conditioned K.
+    """
+    from jax.scipy.linalg import cho_solve
+
+    L = pivoted_cholesky(diag, matcol_fn, rank)
+    M = noise2 * jnp.eye(rank, dtype=L.dtype) + L.T @ L
+    Lm = jnp.linalg.cholesky(M)
+
+    def apply(r):
+        t = L.T @ r
+        u = cho_solve((Lm, True), t)
+        return (r - L @ u) / noise2
+
+    return apply
+
+
+def pivoted_cholesky_precond_for_kind(kind: str, theta, x, sigma_n: float,
+                                      rank: int,
+                                      jitter: float = 1e-8) -> Callable:
+    """Matrix-free preconditioner builder for a Pallas tile registry kernel.
+
+    Columns come straight from the covariance tile function evaluated on the
+    (n,) separation vector x - x_i — O(n) per pivot, no matvec, K never
+    materialised.
+    """
+    from ..kernels import kernel_matvec
+
+    x = jnp.asarray(x)
+    tile_fn = kernel_matvec.TILE_FNS[kind]
+    p_nat = kops.natural_params(kind, theta).astype(x.dtype)
+    diag = tile_fn(jnp.zeros_like(x), p_nat)       # unit-scale: ones
+
+    def matcol(i):
+        return tile_fn(x - x[i], p_nat)
+
+    return pivoted_cholesky_precond(diag, matcol, x.shape[0], rank,
+                                    sigma_n**2 + jitter)

@@ -23,7 +23,9 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from . import engine as eng
 from . import hyperlik as hl
 from .covariances import Covariance
 from .reparam import FlatBox, log_prior_volume
@@ -42,34 +44,117 @@ class LaplaceResult(NamedTuple):
 
 def _laplace_log_z(log_peak, log_volume, H):
     m = H.shape[0]
-    sign, logdet = jnp.linalg.slogdet(H)
     # A non-positive-definite Hessian means theta_hat is not an interior
     # maximum; surface it as nan rather than a silently wrong evidence.
-    logdet = jnp.where(sign > 0, logdet, jnp.nan)
+    # The check must be on the EIGENVALUES: a saddle with an even number of
+    # negative directions has det H > 0, so a slogdet sign test passes it.
+    lam = jnp.linalg.eigvalsh(H)
+    logdet = jnp.where(jnp.all(lam > 0),
+                       jnp.sum(jnp.log(jnp.clip(lam, 1e-300))), jnp.nan)
     return log_peak - log_volume + 0.5 * m * jnp.log(2.0 * jnp.pi) \
         - 0.5 * logdet, logdet
 
 
 def evidence_profiled(cov: Covariance, theta_hat, x, y, sigma_n: float,
                       box: FlatBox, jeffreys_norm: float = 1.0,
-                      jitter: float = 1e-10) -> LaplaceResult:
+                      jitter: float = 1e-10, backend: str = "dense",
+                      key=None,
+                      solver_opts: eng.SolverOpts = eng.SolverOpts()
+                      ) -> LaplaceResult:
     """Laplace evidence with sigma_f marginalised analytically (fast path).
 
     ln P_marg(theta) = marginal_const(n) + ln P_max(theta)  (eq. 2.18), and
     the Hessian of ln P_marg equals the profiled Hessian (eq. 2.19).
+
+    ``backend="iterative"`` evaluates everything matrix-free through the
+    solver engine: ln P_max from CG + SLQ, and the Hessian by central
+    differences of the engine gradient (2m gradient evaluations with a
+    FIXED probe key, so the differences are smooth — DESIGN.md §2.4); K is
+    never materialised.
     """
     n = y.shape[0]
     theta_hat = jnp.asarray(theta_hat)
-    lp_max, cache = hl.profiled_loglik(cov, theta_hat, x, y, sigma_n, jitter)
+    if backend == "dense":
+        lp_max, cache = hl.profiled_loglik(cov, theta_hat, x, y, sigma_n,
+                                           jitter)
+        ddlp = hl.profiled_hessian(cov, theta_hat, x, y, sigma_n, cache,
+                                   jitter)
+        sf_hat = hl.sigma_f_hat(cache)
+    else:
+        solver = eng.make_solver(backend, cov, theta_hat, x, y, sigma_n,
+                                 key=key, jitter=jitter, opts=solver_opts)
+        lp_max = eng.profiled_loglik(solver)
+        grad_fn = eng.grad_fn(backend, cov, x, y, sigma_n, key=key,
+                              jitter=jitter, opts=solver_opts)
+        ddlp = eng.fd_hessian(grad_fn, theta_hat, step=solver_opts.fd_step)
+        sf_hat = jnp.sqrt(solver.sigma2_hat())
     lp_marg = lp_max + hl.marginal_const(n, jeffreys_norm)
-    ddlp = hl.profiled_hessian(cov, theta_hat, x, y, sigma_n, cache, jitter)
     H = -ddlp
     log_v = log_prior_volume(cov, box)
     log_z, logdet = _laplace_log_z(lp_marg, log_v, H)
     cov_theta = jnp.linalg.inv(H)
     errors = jnp.sqrt(jnp.clip(jnp.diagonal(cov_theta), 0.0))
     return LaplaceResult(log_z, lp_marg, theta_hat, H, errors, log_v, logdet,
-                         hl.sigma_f_hat(cache))
+                         sf_hat)
+
+
+class MultimodalResult(NamedTuple):
+    log_z: float              # ln sum_k Z_k over distinct modes
+    n_modes: int
+    modes: np.ndarray         # (k, m) deduplicated mode locations
+    log_z_modes: np.ndarray   # (k,) per-mode ln Z (nan where H not PD)
+    best: LaplaceResult       # full result at the highest-evidence mode
+
+
+def evidence_multimodal(cov: Covariance, theta_all, log_p_all, x, y,
+                        sigma_n: float, box: FlatBox,
+                        jeffreys_norm: float = 1.0, jitter: float = 1e-10,
+                        dedupe_tol: float = 0.05, lp_window: float = 15.0,
+                        backend: str = "dense", key=None,
+                        solver_opts: eng.SolverOpts = eng.SolverOpts()
+                        ) -> MultimodalResult:
+    """Multi-modal Laplace evidence: ln Z ~= ln sum_k Z_k over restart peaks.
+
+    The periodic covariances' hyperlikelihood surface is comb-multimodal —
+    on a regular grid every period has Nyquist ALIAS copies at distinct
+    theta with identical likelihood.  The hyperevidence integral (what the
+    nested-sampling baseline measures) includes every such mode, so a
+    single-mode Laplace estimate systematically under-reports multi-peaked
+    models; summing per-mode Gaussian approximations (MultiNest's
+    mode-separated evidence) removes that bias.  This is a host-side driver:
+    restart peaks from :func:`train.train` are deduplicated (L_inf distance
+    <= ``dedupe_tol``), peaks more than ``lp_window`` nats below the best
+    are dropped, and modes whose Hessian is not positive definite (ridges /
+    unconverged restarts) contribute nothing rather than nan-poisoning the
+    sum.
+    """
+    thetas = np.asarray(theta_all)
+    lps = np.asarray(log_p_all)
+    best_lp = np.nanmax(lps)
+    order = np.argsort(-np.where(np.isnan(lps), -np.inf, lps))
+    modes = []
+    for i in order:
+        if not np.isfinite(lps[i]) or lps[i] < best_lp - lp_window:
+            continue
+        if any(np.max(np.abs(thetas[i] - m)) < dedupe_tol for m in modes):
+            continue
+        modes.append(thetas[i])
+    results = [evidence_profiled(cov, m, x, y, sigma_n, box, jeffreys_norm,
+                                 jitter, backend=backend, key=key,
+                                 solver_opts=solver_opts) for m in modes]
+    log_zs = np.asarray([float(r.log_z) for r in results])
+    finite = np.isfinite(log_zs)
+    if finite.any():
+        zmax = log_zs[finite].max()
+        log_z = zmax + np.log(np.sum(np.exp(log_zs[finite] - zmax)))
+        best = results[int(np.flatnonzero(finite)[
+            np.argmax(log_zs[finite])])]
+    else:                       # every mode degenerate: surface the nan
+        log_z = float("nan")
+        best = results[0] if results else None
+    return MultimodalResult(log_z=log_z, n_modes=len(modes),
+                            modes=np.asarray(modes), log_z_modes=log_zs,
+                            best=best)
 
 
 def evidence_full(cov: Covariance, theta_hat, log_sigma_f_hat, x, y,

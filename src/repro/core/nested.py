@@ -173,15 +173,35 @@ def nested_sample(key,
 
 
 def make_gp_marg_loglik(cov: Covariance, x, y, sigma_n: float,
-                        jeffreys_norm: float = 1.0, jitter: float = 1e-10):
+                        jeffreys_norm: float = 1.0, jitter: float = 1e-10,
+                        backend: str = "dense", key=None,
+                        solver_opts=None):
     """theta -> ln P_marg(y|x,theta) (eq. 2.18): the integrand whose
     prior-weighted integral nested sampling evaluates, matching the
-    quantity approximated by the profiled Laplace evidence (eq. 2.13)."""
+    quantity approximated by the profiled Laplace evidence (eq. 2.13).
+
+    Any solver backend plugs in (DESIGN.md §2): with
+    ``backend="iterative"`` each likelihood evaluation is a CG + SLQ pass
+    with a fixed probe key (deterministic integrand), so the nested
+    baseline itself runs matrix-free.
+    """
     n = jnp.asarray(y).shape[0]
     const = hl.marginal_const(n, jeffreys_norm)
 
+    if backend == "dense":
+        def log_l(theta):
+            val, _ = hl.profiled_loglik(cov, theta, x, y, sigma_n, jitter)
+            return jnp.where(jnp.isnan(val), -1e290, val + const)
+
+        return log_l
+
+    from . import engine as eng
+    opts = solver_opts or eng.SolverOpts()
+    val_fn = eng.value_fn(backend, cov, x, y, sigma_n, key=key,
+                          jitter=jitter, opts=opts)
+
     def log_l(theta):
-        val, _ = hl.profiled_loglik(cov, theta, x, y, sigma_n, jitter)
+        val = val_fn(theta)
         return jnp.where(jnp.isnan(val), -1e290, val + const)
 
     return log_l
@@ -191,9 +211,13 @@ def evidence_nested(key, cov: Covariance, x, y, sigma_n: float,
                     box: FlatBox, n_live: int = 400, n_chains: int = 8,
                     n_steps: int = 16, max_iter: int = 30000,
                     jeffreys_norm: float = 1.0,
-                    jitter: float = 1e-10) -> NestedResult:
+                    jitter: float = 1e-10, backend: str = "dense",
+                    solver_opts=None) -> NestedResult:
     """Numerical hyperevidence ln Z_num for a GP model (paper Table 1)."""
-    log_l = make_gp_marg_loglik(cov, x, y, sigma_n, jeffreys_norm, jitter)
+    key, kp = jax.random.split(key)
+    log_l = make_gp_marg_loglik(cov, x, y, sigma_n, jeffreys_norm, jitter,
+                                backend=backend, key=kp,
+                                solver_opts=solver_opts)
     fn = jax.jit(partial(nested_sample, log_l=log_l, cov=cov, box=box,
                          n_live=n_live, n_chains=n_chains, n_steps=n_steps,
                          max_iter=max_iter))

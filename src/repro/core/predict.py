@@ -19,18 +19,36 @@ import jax.numpy as jnp
 from jax.scipy.linalg import cho_solve, solve_triangular
 
 from .covariances import Covariance, build_K
+from . import engine as eng
 from . import hyperlik as hl
 
 
 class Posterior(NamedTuple):
     mean: jax.Array
-    var: jax.Array           # pointwise predictive variance
+    var: jax.Array           # pointwise predictive variance (None if skipped)
     sigma_f_hat: jax.Array
 
 
 def predict(cov: Covariance, theta, x, y, xstar, sigma_n: float,
-            include_noise: bool = False, jitter: float = 1e-10) -> Posterior:
-    """Posterior mean/variance at xstar (eq. 2.1), sigma_f profiled."""
+            include_noise: bool = False, jitter: float = 1e-10,
+            backend: str = "dense", key=None,
+            solver_opts: eng.SolverOpts = eng.SolverOpts(),
+            compute_var: bool = True) -> Posterior:
+    """Posterior mean/variance at xstar (eq. 2.1), sigma_f profiled.
+
+    ``backend="iterative"`` computes the posterior MEAN fully matrix-free:
+    alpha = K^{-1} y by CG through the Pallas gram matvec, then
+    k*^T alpha by one cross-covariance matvec — neither K (n, n) nor
+    k* (n, n*) is materialised, so memory stays O(n).  The variance needs
+    K^{-1} k* column solves; with ``compute_var=True`` the k* block IS
+    materialised (O(n n*), fine for modest batches of test points) and
+    solved by one batched CG.  Pass ``compute_var=False`` for the pure
+    O(n) mean path (var returned as None).
+    """
+    if backend == "iterative":
+        return _predict_iterative(cov, theta, x, y, xstar, sigma_n,
+                                  include_noise, jitter, solver_opts,
+                                  compute_var, key=key)
     K = build_K(cov, theta, x, sigma_n, jitter)
     cache = hl.factorize(K, y)
     ks = cov(theta, x, xstar)                    # (n, n*)
@@ -42,6 +60,40 @@ def predict(cov: Covariance, theta, x, y, xstar, sigma_n: float,
         var_unit = var_unit + sigma_n**2
     var = cache.sigma2_hat * jnp.clip(var_unit, 0.0)
     return Posterior(mean=mean, var=var, sigma_f_hat=hl.sigma_f_hat(cache))
+
+
+def _predict_iterative(cov: Covariance, theta, x, y, xstar, sigma_n: float,
+                       include_noise: bool, jitter: float,
+                       opts: eng.SolverOpts, compute_var: bool,
+                       key=None) -> Posterior:
+    """Matrix-free posterior (DESIGN.md §2.5).
+
+    All solves go through the engine's IterativeSolver, so SolverOpts —
+    including ``precond_rank`` — apply here exactly as in training.
+    """
+    from ..kernels import ops as kops
+
+    kind = eng.resolve_kind(cov)
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    xstar = jnp.asarray(xstar)
+    theta = jnp.asarray(theta)
+    solver = eng.make_solver("iterative", cov, theta, x, y, sigma_n,
+                             key=key, jitter=jitter, opts=opts)
+    s2 = solver.sigma2_hat()               # triggers the K^{-1} y solve
+    alpha = solver.alpha
+    # k*^T alpha without materialising k*: one (n*, n) Pallas matvec.
+    mean = kops.matvec(kind, theta, xstar, x, alpha)
+    if not compute_var:
+        return Posterior(mean=mean, var=None, sigma_f_hat=jnp.sqrt(s2))
+    ks = kops.matrix(kind, theta, x, xstar)          # (n, n*) cross block
+    w = solver.solve(ks)                             # K^{-1} k*, batched CG
+    # unit-scale stationary kernels: k(x*, x*) diagonal is exactly 1
+    var_unit = 1.0 - jnp.sum(ks * w, axis=0)
+    if include_noise:
+        var_unit = var_unit + sigma_n**2
+    return Posterior(mean=mean, var=s2 * jnp.clip(var_unit, 0.0),
+                     sigma_f_hat=jnp.sqrt(s2))
 
 
 def predict_full_cov(cov: Covariance, theta, x, y, xstar, sigma_n: float,

@@ -26,6 +26,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from . import engine as eng
 from . import hyperlik as hl
 from .covariances import Covariance
 from .reparam import (FlatBox, apply_ordering, flat_box, from_box,
@@ -53,23 +54,49 @@ class TrainResult(NamedTuple):
 
 
 def make_objective(cov: Covariance, x, y, sigma_n: float, box: FlatBox,
-                   jitter: float = 1e-10):
+                   jitter: float = 1e-10, backend: str = "dense",
+                   key=None, solver_opts: eng.SolverOpts = eng.SolverOpts()):
     """(value, grad) and value-only callables of z, both counting one
-    likelihood evaluation (one Cholesky) each."""
+    likelihood evaluation (one Cholesky / one CG+SLQ pass) each.
+
+    Any solver backend plugs in here (DESIGN.md §2): the dense path keeps
+    the paper's one-factorisation closures; the iterative path evaluates
+    through the engine with a FIXED probe key so the stochastic objective
+    is a deterministic smooth function of theta (line searches stay valid).
+    """
     lo, hi = box.lo, box.hi
     widths = box.widths
 
+    if backend == "dense":
+        def value_and_grad(z):
+            theta = to_box(z, box)
+            val, cache = hl.profiled_loglik(cov, theta, x, y, sigma_n,
+                                            jitter)
+            g_theta = hl.profiled_grad(cov, theta, x, y, sigma_n, cache,
+                                       jitter)
+            dtheta_dz = (theta - lo) * (hi - theta) / widths  # sigmoid chain
+            return -val, -(g_theta * dtheta_dz)
+
+        def value(z):
+            theta = to_box(z, box)
+            val, _ = hl.profiled_loglik(cov, theta, x, y, sigma_n, jitter)
+            return -val
+
+        return value_and_grad, value
+
+    vag_t = eng.value_and_grad_fn(backend, cov, x, y, sigma_n, key=key,
+                                  jitter=jitter, opts=solver_opts)
+    val_t = eng.value_fn(backend, cov, x, y, sigma_n, key=key,
+                         jitter=jitter, opts=solver_opts)
+
     def value_and_grad(z):
         theta = to_box(z, box)
-        val, cache = hl.profiled_loglik(cov, theta, x, y, sigma_n, jitter)
-        g_theta = hl.profiled_grad(cov, theta, x, y, sigma_n, cache, jitter)
-        dtheta_dz = (theta - lo) * (hi - theta) / widths   # sigmoid chain rule
+        val, g_theta = vag_t(theta)
+        dtheta_dz = (theta - lo) * (hi - theta) / widths
         return -val, -(g_theta * dtheta_dz)
 
     def value(z):
-        theta = to_box(z, box)
-        val, _ = hl.profiled_loglik(cov, theta, x, y, sigma_n, jitter)
-        return -val
+        return -val_t(to_box(z, box))
 
     return value_and_grad, value
 
@@ -161,7 +188,8 @@ def _scan_objective(cov, x, y, sigma_n, thetas, jitter):
 def train(cov: Covariance, x, y, sigma_n: float, key,
           n_starts: int = 10, max_iters: int = 80, grad_tol: float = 1e-5,
           jitter: float = 1e-10, box: FlatBox | None = None,
-          z0s=None, scan_points: int = 0) -> TrainResult:
+          z0s=None, scan_points: int = 0, backend: str = "dense",
+          solver_opts: eng.SolverOpts = eng.SolverOpts()) -> TrainResult:
     """Paper Sec. 3a training procedure: multi-start NCG on ln P_max.
 
     ``scan_points > 0`` enables scan-seeded restarts: a vmapped uniform scan
@@ -170,6 +198,13 @@ def train(cov: Covariance, x, y, sigma_n: float, key,
     (period aliasing), so this finds the global basin far more reliably than
     the paper's blind restarts; every scan evaluation is counted in
     ``n_evals`` so speed-up factors remain honest.
+
+    ``backend="iterative"`` routes every likelihood/gradient evaluation
+    through the matrix-free solver engine (CG + SLQ + stacked tangent
+    matvec; K never materialised), enabling training at n where the dense
+    Cholesky does not fit.  Restarts then run under ``lax.map`` (sequential)
+    rather than ``vmap``: the working set of one restart is O(n * probes)
+    and large-n is exactly when you cannot afford n_starts of those at once.
     """
     x = jnp.asarray(x)
     y = jnp.asarray(y)
@@ -180,7 +215,16 @@ def train(cov: Covariance, x, y, sigma_n: float, key,
         if scan_points > 0:
             ks, key = jax.random.split(key)
             cand = sample_uniform(ks, cov, box, (scan_points,)).astype(x.dtype)
-            vals = _scan_objective(cov, x, y, sigma_n, cand, jitter)
+            if backend == "dense":
+                vals = _scan_objective(cov, x, y, sigma_n, cand, jitter)
+            else:
+                # matrix-free scan: sequential map (each evaluation is a
+                # CG + SLQ pass; vmapping scan_points of those at once
+                # would defeat the O(n * probes) memory point)
+                val_t = eng.value_fn(backend, cov, x, y, sigma_n,
+                                     key=jax.random.fold_in(key, 0x5eed),
+                                     jitter=jitter, opts=solver_opts)
+                vals = jax.jit(lambda c: jax.lax.map(val_t, c))(cand)
             top = jnp.argsort(jnp.where(jnp.isnan(vals), -jnp.inf, vals))
             top = top[-n_starts:]
             z0s = jax.vmap(lambda t: from_box(t, box, eps=1e-3))(cand[top])
@@ -191,15 +235,33 @@ def train(cov: Covariance, x, y, sigma_n: float, key,
             u = jax.random.uniform(key, (n_starts, cov.n_params),
                                    minval=0.05, maxval=0.95, dtype=x.dtype)
             z0s = jnp.log(u) - jnp.log1p(-u)
-    box_arr = jnp.stack([box.lo.astype(x.dtype), box.hi.astype(x.dtype)])
-    zs, fs, evals, iters = _train_jit(cov, x, y, sigma_n, z0s, max_iters,
-                                      grad_tol, jitter, box_arr)
+    if backend == "dense":
+        box_arr = jnp.stack([box.lo.astype(x.dtype), box.hi.astype(x.dtype)])
+        zs, fs, evals, iters = _train_jit(cov, x, y, sigma_n, z0s, max_iters,
+                                          grad_tol, jitter, box_arr)
+    else:
+        probe_key = jax.random.fold_in(key, 0x5eed)
+        vag, val = make_objective(cov, x, y, sigma_n, box, jitter,
+                                  backend=backend, key=probe_key,
+                                  solver_opts=solver_opts)
+        run = partial(_ncg_minimize, vag, val, max_iters=max_iters,
+                      grad_tol=grad_tol)
+        zs, fs, evals, iters = jax.jit(
+            lambda z: jax.lax.map(run, z))(z0s)
     thetas = jax.vmap(lambda z: to_box(z, box))(zs)
     thetas = jax.vmap(lambda t: apply_ordering(cov, t))(thetas)
     best = jnp.nanargmin(fs)
     theta_hat = thetas[best]
-    lp, cache = hl.profiled_loglik(cov, theta_hat, x, y, sigma_n, jitter)
+    if backend == "dense":
+        lp, cache = hl.profiled_loglik(cov, theta_hat, x, y, sigma_n, jitter)
+        sf_hat = hl.sigma_f_hat(cache)
+    else:
+        solver = eng.make_solver(backend, cov, theta_hat, x, y, sigma_n,
+                                 key=jax.random.fold_in(key, 0x5eed),
+                                 jitter=jitter, opts=solver_opts)
+        lp = eng.profiled_loglik(solver)
+        sf_hat = jnp.sqrt(solver.sigma2_hat())
     return TrainResult(theta_hat=theta_hat, log_p_max=lp,
-                       sigma_f_hat=hl.sigma_f_hat(cache),
+                       sigma_f_hat=sf_hat,
                        n_evals=jnp.sum(evals) + scan_evals, theta_all=thetas,
                        log_p_all=-fs, iters_all=iters)

@@ -39,6 +39,16 @@ def natural_params(kind: str, theta):
     return out.at[: vals.shape[0]].set(vals)
 
 
+def natural_tangents(kind: str, theta):
+    """(m, N_PARAM_SLOTS) natural-parameter tangents of the m flat basis
+    directions: row i is  d(natural)/d(theta) @ e_i — the chain-rule factor
+    that lets the stacked Pallas tangent kernel work in natural scale while
+    callers differentiate in flat coordinates."""
+    theta = jnp.asarray(theta)
+    jac = jax.jacfwd(lambda th: natural_params(kind, th))(theta)
+    return jac.T  # (m, N_PARAM_SLOTS)
+
+
 def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
@@ -119,6 +129,36 @@ def gram_matvec(kind: str, theta, x, v, sigma_n: float = 0.0,
     """(K(x,x) + (sigma_n^2 + jitter) I) @ v — the training-matrix matvec."""
     kv = matvec(kind, theta, x, x, v)
     return kv + (sigma_n**2 + jitter) * v
+
+
+@functools.partial(jax.jit, static_argnums=(0, 5, 6))
+def matvec_tangents(kind: str, theta, x1, x2, v,
+                    tile_r: int = kernel_matvec.TILE_R,
+                    tile_c: int = kernel_matvec.TILE_C):
+    """All m = len(theta) tangent matvecs  dK/dtheta_i @ V  in ONE launch.
+
+    Stacked multi-direction forward mode (DESIGN.md §2.3): the flat->natural
+    jacobian rows become the widened pdot block of the stacked Pallas kernel,
+    so the per-parameter Python loop of the gradient disappears into a single
+    grid sweep.  The noise diagonal is theta-independent, so these are also
+    the tangents of the full training matrix.
+
+    Returns (m, n1, b); v may be (n2,) or (n2, b).
+    """
+    squeeze = v.ndim == 1
+    if squeeze:
+        v = v[:, None]
+    n1 = x1.shape[0]
+    p = natural_params(kind, theta).astype(v.dtype)
+    pdots = natural_tangents(kind, theta).astype(v.dtype)
+    x1p = _pad_to(jnp.asarray(x1, v.dtype), tile_r, _SENTINEL)
+    x2p = _pad_to(jnp.asarray(x2, v.dtype), tile_c, 2.0 * _SENTINEL)
+    vp = _pad_to(v, tile_c, 0.0)
+    out = kernel_matvec.matvec_stacked_tangent_pallas(
+        kind, p, pdots, x1p, x2p, vp, tile_r=tile_r, tile_c=tile_c,
+        interpret=_use_interpret())
+    out = out[:, :n1]
+    return out[:, :, 0] if squeeze else out
 
 
 @functools.partial(jax.jit, static_argnums=(0, 4))

@@ -138,7 +138,7 @@ def active_params(cfg) -> tuple[int, int]:
         return total, total
     expert = 0
     for stage_tree in tree["stages"]:
-        flat = jax.tree.leaves_with_path(
+        flat = jax.tree_util.tree_leaves_with_path(
             stage_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
         for path, spec in flat:
             keys = "/".join(str(p) for p in path)

@@ -31,6 +31,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import LayerDef, ModelConfig
@@ -280,9 +281,9 @@ def _wg_sharded_attn(q, k, v, ctx: ParallelContext, cfg: ModelConfig,
 
     spec_q = P(dp, tp, None, None, None)
     spec_kv = P(dp, tp, None, None)
-    return jax.shard_map(local, mesh=ctx.mesh,
-                         in_specs=(spec_q, spec_kv, spec_kv),
-                         out_specs=spec_q, check_vma=False)(q, k, v)
+    return shard_map(local, mesh=ctx.mesh,
+                     in_specs=(spec_q, spec_kv, spec_kv),
+                     out_specs=spec_q, check_rep=False)(q, k, v)
 
 
 def attn_apply(p, x, ctx: ParallelContext, cfg: ModelConfig,
@@ -580,11 +581,11 @@ def moe_apply(p, x, ctx: ParallelContext, cfg: ModelConfig):
                 aux = jax.lax.pmean(aux, dp)
             return y, aux
 
-        y, aux = jax.shard_map(
+        y, aux = shard_map(
             body, mesh=mesh,
             in_specs=(pspec_x, pspec_w),
             out_specs=(pspec_x, P()),
-            check_vma=False)(x, moe_p)
+            check_rep=False)(x, moe_p)
     else:
         y, aux = _moe_local(p, x, cfg, 1)
 

@@ -1,0 +1,219 @@
+"""Solver-engine layer: dense vs iterative backend agreement, the stacked
+multi-direction tangent matvec, the pivoted-Cholesky preconditioner, and
+the matrix-free memory guarantee (no (n, n) intermediate anywhere on the
+iterative path)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import covariances as C
+from repro.core import engine as E
+from repro.core import iterative as I
+from repro.core import model_compare, predict
+from repro.data.synthetic import synthetic
+from repro.kernels import ops
+
+THETA = jnp.array([3.2, 1.5, 0.05, 2.8, -0.1])
+
+
+# ---------------------------------------------------------------------------
+# Backend agreement (rtol ~1e-2: SLQ/Hutchinson are stochastic estimators)
+# ---------------------------------------------------------------------------
+
+def test_backends_agree_on_loglik_and_grad():
+    ds = synthetic(jax.random.key(0), 600, "k2")
+    sd = E.make_solver("dense", C.K2, THETA, ds.x, ds.y, ds.sigma_n)
+    si = E.make_solver("iterative", C.K2, THETA, ds.x, ds.y, ds.sigma_n,
+                       key=jax.random.key(42),
+                       opts=E.SolverOpts(n_probes=24, lanczos_k=80))
+    lp_d, lp_i = E.profiled_loglik(sd), E.profiled_loglik(si)
+    assert abs(float((lp_i - lp_d) / lp_d)) < 1e-2
+    g_d, g_i = E.profiled_grad(sd), E.profiled_grad(si)
+    assert float(jnp.linalg.norm(g_i - g_d) / jnp.linalg.norm(g_d)) < 0.1
+    cos = float(jnp.dot(g_i, g_d)
+                / (jnp.linalg.norm(g_i) * jnp.linalg.norm(g_d)))
+    assert cos > 0.99
+    # sigma2_hat comes from the same CG solve
+    np.testing.assert_allclose(float(si.sigma2_hat()),
+                               float(sd.sigma2_hat()), rtol=1e-5)
+
+
+def test_dense_solver_matches_hyperlik_reference():
+    """The engine's dense backend IS the paper path: exact match."""
+    from repro.core import hyperlik as H
+    ds = synthetic(jax.random.key(0), 300, "k2")
+    sd = E.make_solver("dense", C.K2, THETA, ds.x, ds.y, ds.sigma_n)
+    lp_ref, cache = H.profiled_loglik(C.K2, THETA, ds.x, ds.y, ds.sigma_n)
+    g_ref = H.profiled_grad(C.K2, THETA, ds.x, ds.y, ds.sigma_n, cache)
+    np.testing.assert_allclose(float(E.profiled_loglik(sd)), float(lp_ref),
+                               rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(E.profiled_grad(sd)),
+                               np.asarray(g_ref), rtol=1e-9)
+
+
+def test_backends_agree_on_posterior_mean():
+    ds = synthetic(jax.random.key(3), 500, "k2")
+    xs = jnp.linspace(20.0, 80.0, 50)
+    pd_ = predict.predict(C.K2, THETA, ds.x, ds.y, xs, ds.sigma_n)
+    pi = predict.predict(C.K2, THETA, ds.x, ds.y, xs, ds.sigma_n,
+                         backend="iterative")
+    scale = float(jnp.max(jnp.abs(pd_.mean)))
+    assert float(jnp.max(jnp.abs(pd_.mean - pi.mean))) < 1e-2 * scale
+    np.testing.assert_allclose(np.asarray(pi.var), np.asarray(pd_.var),
+                               rtol=1e-2, atol=1e-6)
+    # mean-only path skips the variance solves entirely
+    pm = predict.predict(C.K2, THETA, ds.x, ds.y, xs, ds.sigma_n,
+                         backend="iterative", compute_var=False)
+    assert pm.var is None
+    np.testing.assert_allclose(np.asarray(pm.mean), np.asarray(pi.mean))
+
+
+# ---------------------------------------------------------------------------
+# Stacked multi-direction tangent matvec
+# ---------------------------------------------------------------------------
+
+def test_stacked_tangent_matches_per_direction_jvp():
+    """One widened launch == m sequential jvp launches, to fp precision."""
+    rng = np.random.default_rng(0)
+    n = 384
+    x = jnp.asarray(np.sort(rng.uniform(0, 150, n)))
+    v = jnp.asarray(rng.normal(size=(n, 4)))
+    for kind, theta in [("k2", THETA), ("k1", THETA[:3]),
+                        ("se", THETA[:1]), ("matern32", THETA[:1])]:
+        stacked = ops.matvec_tangents(kind, theta, x, x, v)
+        assert stacked.shape == (theta.shape[0], n, 4)
+        for i in range(theta.shape[0]):
+            e = jnp.zeros_like(theta).at[i].set(1.0)
+            ref = jax.jvp(lambda t: ops.matvec(kind, t, x, x, v),
+                          (theta,), (e,))[1]
+            np.testing.assert_allclose(np.asarray(stacked[i]),
+                                       np.asarray(ref),
+                                       rtol=1e-9, atol=1e-12)
+
+
+def test_stacked_tangent_single_vector_rhs():
+    rng = np.random.default_rng(1)
+    n = 256
+    x = jnp.asarray(np.sort(rng.uniform(0, 90, n)))
+    v = jnp.asarray(rng.normal(size=n))
+    out = ops.matvec_tangents("k2", THETA, x, x, v)
+    assert out.shape == (5, n)
+
+
+# ---------------------------------------------------------------------------
+# Pivoted-Cholesky preconditioner
+# ---------------------------------------------------------------------------
+
+def test_pivoted_cholesky_approximates_kernel():
+    """Greedy pivoted Cholesky captures a smooth (fast-eigendecay) kernel.
+
+    The SE kernel is numerically low-rank, so a small factor nails it; the
+    paper's compact-support kernels are near-banded (slow eigendecay) and
+    are covered by the preconditioner-correctness test below instead.
+    """
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(np.sort(rng.uniform(0, 10, 300)))
+    theta_se = jnp.asarray([0.5])                    # lengthscale e^0.5
+    Kfree = C.SE(theta_se, x, x)
+    p_nat = ops.natural_params("se", theta_se).astype(x.dtype)
+    from repro.kernels.kernel_matvec import TILE_FNS
+    diag = jnp.ones_like(x)
+    L = I.pivoted_cholesky(diag, lambda i: TILE_FNS["se"](x - x[i], p_nat),
+                           40)
+    resid = Kfree - L @ L.T
+    assert float(jnp.trace(resid)) < 1e-6 * float(jnp.trace(Kfree))
+    assert float(jnp.max(jnp.abs(resid))) < 1e-5
+
+
+def test_preconditioned_cg_matches_direct():
+    """Woodbury apply is exact, so preconditioned CG converges to the same
+    solution — and at least as fast on an ill-conditioned system."""
+    ds = synthetic(jax.random.key(6), 400, "k2")
+    sigma_n = 0.01                                   # harder conditioning
+    K = C.build_K(C.K2, THETA, ds.x, sigma_n, 1e-8)
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.normal(size=(400, 2)))
+    M = I.pivoted_cholesky_precond_for_kind("k2", THETA, ds.x, sigma_n,
+                                            rank=40, jitter=1e-8)
+    plain = I.cg_solve(lambda v: K @ v, b, tol=1e-10, max_iter=2000)
+    pre = I.cg_solve(lambda v: K @ v, b, tol=1e-10, max_iter=2000, precond=M)
+    direct = jnp.linalg.solve(K, b)
+    np.testing.assert_allclose(np.asarray(pre.x), np.asarray(direct),
+                               rtol=1e-5, atol=1e-7)
+    assert int(pre.iters) <= int(plain.iters)
+
+
+# ---------------------------------------------------------------------------
+# Matrix-free memory guarantee
+# ---------------------------------------------------------------------------
+
+def _all_avals(jaxpr):
+    """Every abstract value in a jaxpr, recursing into sub-jaxprs."""
+    from jax.core import Jaxpr, ClosedJaxpr
+    seen = []
+
+    def walk(j):
+        for v in list(j.invars) + list(j.outvars) + list(j.constvars):
+            if hasattr(v, "aval"):
+                seen.append(v.aval)
+        for eqn in j.eqns:
+            for v in list(eqn.invars) + list(eqn.outvars):
+                if hasattr(v, "aval"):
+                    seen.append(v.aval)
+            for p in eqn.params.values():
+                for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                    if isinstance(sub, ClosedJaxpr):
+                        walk(sub.jaxpr)
+                    elif isinstance(sub, Jaxpr):
+                        walk(sub)
+
+    walk(jaxpr)
+    return seen
+
+
+def test_iterative_path_never_materialises_K():
+    """Trace the full iterative value+gradient at n = 4096 and assert no
+    (n, n) intermediate exists anywhere in the program — the engine's
+    O(n * probes) memory contract."""
+    n = 4096
+    x = jnp.arange(1, n + 1, dtype=jnp.float64)
+    y = jnp.sin(0.1 * x)
+    opts = E.SolverOpts(n_probes=4, lanczos_k=8, cg_max_iter=10)
+    vag = E.value_and_grad_fn("iterative", C.K2, x, y, 0.1,
+                              key=jax.random.key(0), opts=opts)
+    jaxpr = jax.make_jaxpr(vag)(THETA)
+    bad = [a for a in _all_avals(jaxpr.jaxpr)
+           if hasattr(a, "shape") and a.shape
+           and a.shape.count(n) >= 2]
+    assert not bad, f"(n, n)-sized intermediates on the iterative path: " \
+                    f"{sorted({tuple(a.shape) for a in bad})}"
+    # the dense path, traced the same way, DOES contain (n, n) buffers —
+    # proving the walker actually sees them (guard against a vacuous pass)
+    n_small = 256
+    xs = x[:n_small]
+    vag_d = E.value_and_grad_fn("dense", C.K2, xs, y[:n_small], 0.1)
+    jaxpr_d = jax.make_jaxpr(vag_d)(THETA)
+    dense_big = [a for a in _all_avals(jaxpr_d.jaxpr)
+                 if hasattr(a, "shape") and a.shape.count(n_small) >= 2]
+    assert dense_big, "jaxpr walker failed to find K on the dense path"
+
+
+@pytest.mark.slow
+def test_model_compare_iterative_completes_n4096():
+    """End-to-end Bayes-factor pipeline, fully matrix-free at n = 4096
+    (tiny optimisation budgets: this certifies the path, not the science)."""
+    n = 4096
+    ds = synthetic(jax.random.key(9), n, "k1", dtype=jnp.float64)
+    opts = E.SolverOpts(n_probes=2, lanczos_k=8, cg_tol=1e-3,
+                        cg_max_iter=15, fd_step=1e-3)
+    reports = model_compare.compare(
+        jax.random.key(1), [C.K1], ds.x, ds.y, ds.sigma_n,
+        n_starts=1, max_iters=1, backend="iterative", solver_opts=opts,
+        scan_points=0, multimodal=False)
+    assert len(reports) == 1
+    rep = reports[0]
+    assert np.isfinite(rep.log_p_max)
+    assert np.all(np.isfinite(np.asarray(rep.theta_hat)))
+    assert rep.sigma_f_hat > 0

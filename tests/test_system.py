@@ -16,6 +16,7 @@ from repro.core import model_compare, predict
 from repro.data.synthetic import synthetic
 
 
+@pytest.mark.slow
 def test_gp_end_to_end_model_comparison():
     ds = synthetic(jax.random.key(42), 100, "k2")
     reports = model_compare.compare(
@@ -35,6 +36,7 @@ def test_gp_end_to_end_model_comparison():
     assert np.sqrt(np.mean(resid**2)) < 3 * ds.sigma_n * r.sigma_f_hat
 
 
+@pytest.mark.slow
 def test_lm_train_loss_decreases_with_restart(tmp_path):
     """Train 60 steps, kill, restore from checkpoint, train 60 more —
     the restarted curve must continue (not reset) and end lower."""

@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.monitor import loss_curve
 from repro.tuner.gp_tuner import GPTuner
@@ -14,6 +15,7 @@ def _objective(x):
     return float(((x - np.asarray([0.3, 0.7])) ** 2).sum())
 
 
+@pytest.mark.slow
 def test_tuner_beats_random_search():
     tuner = GPTuner(n_dims=2, sigma_n=0.02)
     key = jax.random.key(0)
