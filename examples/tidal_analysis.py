@@ -17,7 +17,9 @@ from repro.core import enable_x64
 enable_x64()
 
 from benchmarks.tidal import analyse  # noqa: E402
+from repro.data.grid import grid_spacing  # noqa: E402
 from repro.data.tidal import load_noaa_csv, woods_hole_like  # noqa: E402
+from repro.kernels.operators import select_operator  # noqa: E402
 
 
 def main():
@@ -32,6 +34,11 @@ def main():
         ds = woods_hole_like(jax.random.key(0), months=args.months)
         print(f"synthetic Woods-Hole-like series: n={ds.x.shape[0]} "
               f"({args.months} lunar month(s), 2 h cadence)")
+    h = grid_spacing(ds.x)
+    op = select_operator("k2", ds.x, ds.sigma_n).name
+    print(f"structure probe: {'regular grid, h=%.3g h' % h if h else 'irregular sampling'}"
+          f" -> iterative engine dispatches the {op!r} operator "
+          f"({'O(n log n) FFT matvec' if op == 'toeplitz' else 'O(n^2) Pallas tiles'})")
     out = analyse(ds)
     print(f"\nk1: T1 = {out['k1']['T1_h']:.2f} +- "
           f"{out['k1']['T1_err']:.2f} h (paper: 12.8 +- 0.2 h)")

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 
 from . import hyperlik as hl
 from .covariances import Covariance, build_K
+from ..kernels import operators as kopers
 from ..kernels import ops as kops
 
 LOG2PI = jnp.log(2.0 * jnp.pi)
@@ -79,6 +80,8 @@ class SolverOpts(NamedTuple):
     cg_max_iter: int = 800
     precond_rank: int = 0       # > 0 enables the pivoted-Cholesky preconditioner
     fd_step: float = 1e-4       # central-difference step for the iterative Hessian
+    operator: Optional[str] = None  # linear-operator override ("pallas" |
+    # "toeplitz" | "lowrank"); None = structure auto-detect (DESIGN.md §9)
 
 
 # ---------------------------------------------------------------------------
@@ -130,11 +133,16 @@ class DenseCholeskySolver:
 # ---------------------------------------------------------------------------
 
 class IterativeSolver:
-    """Matrix-free path: Pallas matvec + batched CG + SLQ + Hutchinson.
+    """Matrix-free path: structured matvec + batched CG + SLQ + Hutchinson.
 
     One batched CG solves [y | z_1..z_p] together; the probes then serve
     both the SLQ log-det and the Hutchinson traces, and the stacked tangent
     matvec delivers all m directions of eq. (2.17) in one kernel launch.
+
+    Every matrix access goes through a :mod:`..kernels.operators`
+    LinearOperator selected by structure (DESIGN.md §9): regular-grid inputs
+    get the O(n log n) Toeplitz/FFT matvec, everything else the O(n^2)
+    Pallas tile sweep; ``SolverOpts(operator=...)`` overrides the dispatch.
     """
 
     backend = "iterative"
@@ -153,7 +161,9 @@ class IterativeSolver:
         self.opts = opts
         self.n = self.y.shape[0]
         self._it = it
-        self._mv = it.make_gram_matvec(kind, self.x, sigma_n, jitter)
+        self.op = kopers.select_operator(kind, self.x, sigma_n, jitter,
+                                         operator=opts.operator)
+        self._mv = self.op.gram_matvec
 
         precond = None
         if opts.precond_rank > 0:
@@ -223,7 +233,7 @@ class IterativeSolver:
         alpha = self.alpha
         # ONE stacked launch: dK_i @ [alpha | z] for every direction i.
         V = jnp.concatenate([alpha[:, None], self.z], axis=1)
-        dkv = kops.matvec_tangents(self.kind, self.theta, self.x, self.x, V)
+        dkv = self.op.tangent_matvecs(self.theta, V)
         quad = jnp.einsum("j,mj->m", alpha, dkv[:, :, 0])
         tr = jnp.mean(jnp.einsum("jp,mjp->mp", Kinv_z, dkv[:, :, 1:]),
                       axis=-1)

@@ -4,8 +4,10 @@ BEYOND-PAPER path (DESIGN.md §3).  The paper's algorithm is bound by the
 O(n^3) Cholesky and the O(n^2) storage of K.  On TPU we replace both:
 
   * solves  K^{-1} b     -> batched conjugate gradients, each iteration one
-    matrix-free covariance matvec (the Pallas kernel: K is generated
-    tile-by-tile in VMEM, never stored — O(n) memory);
+    matrix-free covariance matvec through the structure-dispatched
+    LinearOperator (kernels/operators, DESIGN.md §9): circulant-embedding
+    FFT in O(n log n) on regular grids, otherwise the Pallas kernel — K
+    generated tile-by-tile in VMEM, never stored — O(n) memory either way;
   * ln det K             -> stochastic Lanczos quadrature (SLQ): m-step
     Lanczos per Rademacher probe, Gauss quadrature of ln(lambda);
   * tr(K^{-1} dK_i)      -> Hutchinson estimator with the SAME probes:
@@ -27,27 +29,26 @@ import jax.numpy as jnp
 
 from . import hyperlik as hl
 from .covariances import Covariance, build_K
+from ..kernels import operators
 from ..kernels import ops as kops
 
 LOG2PI = jnp.log(2.0 * jnp.pi)
 
 
 def make_gram_matvec(kind_or_cov, x, sigma_n: float, jitter: float = 1e-8,
-                     use_pallas: Optional[bool] = None) -> Callable:
+                     operator: Optional[str] = None) -> Callable:
     """(theta, V) -> (K + sigma_n^2 I) V, matrix-free where possible.
 
-    kind_or_cov: a string key into the Pallas tile registry (k1, k2, se,
-    matern*) -> fused Pallas matvec; or a Covariance -> dense fallback
-    (still jit-fused, but materialises K).
+    kind_or_cov: a string key into the covariance tile registry (k1, k2, se,
+    matern*) -> structure-dispatched LinearOperator matvec (Toeplitz/FFT on
+    regular grids, Pallas tiles otherwise; ``operator=`` overrides — see
+    DESIGN.md §9); or a Covariance -> dense fallback (still jit-fused, but
+    materialises K).
     """
     if isinstance(kind_or_cov, str):
-        kind = kind_or_cov
-
-        def mv(theta, v):
-            return kops.gram_matvec(kind, theta, x, v,
-                                    float(sigma_n), float(jitter))
-
-        return mv
+        op = operators.select_operator(kind_or_cov, x, float(sigma_n),
+                                       float(jitter), operator=operator)
+        return op.gram_matvec
 
     cov: Covariance = kind_or_cov
 
@@ -185,21 +186,26 @@ def profiled_loglik_iterative(kind: str, theta, x, y, sigma_n: float, key,
                               n_probes: int = 16, lanczos_k: int = 64,
                               cg_tol: float = 1e-8, cg_max_iter: int = 800,
                               jitter: float = 1e-8,
-                              with_grad: bool = True) -> IterativeResult:
+                              with_grad: bool = True,
+                              operator: Optional[str] = None
+                              ) -> IterativeResult:
     """Matrix-free ln P_max (eq. 2.16) and its gradient (eq. 2.17).
 
     One batched CG solves [y | z_1..z_p] simultaneously; the probes then
     serve both the SLQ log-det and the Hutchinson traces of eq. (2.17):
       tr(K^{-1} dK_i) ~= mean_z  (K^{-1} z)^T (dK_i z).
-    dK_i z is a jvp through the matrix-free matvec — K and dK are never
-    materialised.
+    dK_i z comes through the structure-dispatched LinearOperator (tangent
+    of the Toeplitz first column on grids, stacked Pallas tangent tile
+    otherwise) — K and dK are never materialised.
     """
     theta = jnp.asarray(theta)
     x = jnp.asarray(x)
     y = jnp.asarray(y)
     n = y.shape[0]
     m = theta.shape[0]
-    mv = make_gram_matvec(kind, x, sigma_n, jitter)
+    op = operators.select_operator(kind, x, float(sigma_n), float(jitter),
+                                   operator=operator)
+    mv = op.gram_matvec
 
     z = jax.random.rademacher(key, (n, n_probes)).astype(y.dtype)
     rhs = jnp.concatenate([y[:, None], z], axis=1)
@@ -218,11 +224,11 @@ def profiled_loglik_iterative(kind: str, theta, x, y, sigma_n: float, key,
         return IterativeResult(lp, jnp.zeros_like(theta), s2, sol.iters,
                                jnp.max(sol.resnorm))
 
-    # ONE stacked Pallas launch delivers dK_i @ [alpha | z] for every
+    # ONE stacked launch delivers dK_i @ [alpha | z] for every
     # hyperparameter direction (DESIGN.md §2.3) — the former per-parameter
     # jvp loop re-generated the covariance tiles m times.
     V = jnp.concatenate([alpha[:, None], z], axis=1)
-    dkv = kops.matvec_tangents(kind, theta, x, x, V)      # (m, n, 1+p)
+    dkv = op.tangent_matvecs(theta, V)                    # (m, n, 1+p)
     quad = 0.5 * jnp.einsum("j,mj->m", alpha, dkv[:, :, 0]) / s2
     tr = 0.5 * jnp.mean(jnp.einsum("jp,mjp->mp", Kinv_z, dkv[:, :, 1:]),
                         axis=-1)

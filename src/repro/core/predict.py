@@ -42,8 +42,15 @@ def predict(cov: Covariance, theta, x, y, xstar, sigma_n: float,
     k* (n, n*) is materialised, so memory stays O(n).  The variance needs
     K^{-1} k* column solves; with ``compute_var=True`` the k* block IS
     materialised (O(n n*), fine for modest batches of test points) and
-    solved by one batched CG.  Pass ``compute_var=False`` for the pure
-    O(n) mean path (var returned as None).
+    solved by one batched CG.  ``compute_var=False`` skips the variance on
+    EITHER backend (var returned as None): the pure O(n)-memory mean path
+    iteratively, and no k**/triangular solve densely.
+
+    Training-matrix solves on the iterative backend go through the
+    structure-dispatched LinearOperator (DESIGN.md §9) — on regular-grid
+    training inputs the whole mean/variance path costs O(n log n) per CG
+    iteration via the Toeplitz/FFT matvec; ``SolverOpts(operator=...)``
+    overrides the dispatch.
     """
     if backend == "iterative":
         return _predict_iterative(cov, theta, x, y, xstar, sigma_n,
@@ -52,8 +59,11 @@ def predict(cov: Covariance, theta, x, y, xstar, sigma_n: float,
     K = build_K(cov, theta, x, sigma_n, jitter)
     cache = hl.factorize(K, y)
     ks = cov(theta, x, xstar)                    # (n, n*)
-    kss = cov(theta, xstar, xstar)               # (n*, n*) diag used only
     mean = ks.T @ cache.alpha
+    if not compute_var:                          # mean-only: skip k** and
+        return Posterior(mean=mean, var=None,    # the triangular solve
+                         sigma_f_hat=hl.sigma_f_hat(cache))
+    kss = cov(theta, xstar, xstar)               # (n*, n*) diag used only
     v = solve_triangular(cache.L, ks, lower=True)
     var_unit = jnp.diagonal(kss) - jnp.sum(v * v, axis=0)
     if include_noise:

@@ -1,0 +1,60 @@
+"""Grid-structure probes for input coordinates (DESIGN.md §9).
+
+A regular 1-D sampling grid — the paper's own flagship data set, the Woods
+Hole tidal series on its two-hour cadence — makes the Gram matrix of every
+stationary covariance symmetric Toeplitz, which unlocks the O(n log n)
+circulant-embedding FFT matvec (`kernels.operators.ToeplitzOperator`).
+
+:func:`is_regular_grid` is the structure probe behind the operator dispatch.
+It inspects CONCRETE coordinates only (host-side numpy) and returns a plain
+Python bool, so the fast-path decision is made once at trace time and never
+appears inside the traced program; under a trace where ``x`` is abstract the
+probe conservatively answers False and the dispatch falls back to the
+general Pallas tile operator.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+# Relative spacing tolerance: hours-from-timestamp arithmetic (data/tidal)
+# is exact to ~1e-12, while genuinely jittered samplings deviate at >=1e-3
+# relative; 1e-6 splits those regimes with orders of magnitude to spare.
+GRID_RTOL = 1e-6
+
+
+def _concrete(x) -> Optional[np.ndarray]:
+    """Host array for concrete inputs, None for tracers."""
+    try:
+        return np.asarray(x)
+    except Exception:  # TracerArrayConversionError and friends
+        return None
+
+
+def grid_spacing(x, rtol: float = GRID_RTOL) -> Optional[float]:
+    """Spacing h of a regular ascending grid, or None if x is not one.
+
+    Regular means: concrete, 1-D, n >= 2, strictly ascending, and every
+    consecutive spacing within ``rtol`` (relative to the mean spacing) of
+    uniform.  Single points carry no spacing and two distinct ascending
+    points are trivially regular.
+    """
+    xc = _concrete(x)
+    if xc is None or xc.ndim != 1 or xc.shape[0] < 2:
+        return None
+    if not np.all(np.isfinite(xc)):
+        return None
+    d = np.diff(xc)
+    h = float(xc[-1] - xc[0]) / (xc.shape[0] - 1)
+    if h <= 0.0 or np.any(d <= 0.0):       # unsorted, descending, duplicates
+        return None
+    if float(np.max(np.abs(d - h))) > rtol * abs(h):
+        return None
+    return h
+
+
+def is_regular_grid(x, rtol: float = GRID_RTOL) -> bool:
+    """True iff x is a concrete, strictly ascending, uniform 1-D grid."""
+    return grid_spacing(x, rtol=rtol) is not None

@@ -1,0 +1,307 @@
+"""Structure-aware linear operators for the training covariance (DESIGN.md §9).
+
+The matrix-access layer of the solver engine.  Everything the matrix-free
+backend consumes — the gram matvec ``(K + noise2 I) @ v`` and the stacked
+tangent matvecs ``dK/dtheta_i @ V`` for all m flat directions — is provided
+by a :class:`LinearOperator` bound to one ``(kind, x, sigma_n, jitter)``
+training geometry, with ``theta`` a per-call argument (it changes every
+optimiser step; the geometry does not).  Three registered structures:
+
+  * :class:`PallasTileOperator` — the general path: K generated tile-by-tile
+    in VMEM by the Pallas kernels (DESIGN.md §3).  O(n^2) work, O(n) memory,
+    any sorted or unsorted 1-D inputs.
+  * :class:`ToeplitzOperator` — the gridded fast path: a stationary 1-D
+    covariance on a regular grid has a symmetric Toeplitz Gram matrix, fully
+    described by its first column k(x - x[0]).  Matvec by circulant
+    embedding (size 2n-2) + real FFT: O(n log n) work, O(n) memory.  The
+    tangent matvecs differentiate the FIRST COLUMN (n scalars, jacfwd)
+    instead of n^2 matrix entries, then ride the same FFT — so the whole
+    train -> evidence -> predict pipeline is O(n log n) per iteration on the
+    paper's own two-hour tidal cadence.
+  * :class:`LowRankPlusDiagOperator` — the surrogate ``L L^T + noise2 I``
+    with L the greedy rank-r pivoted Cholesky (DESIGN.md §2.6).  Its matvec
+    is O(n r) and its ``solve`` is the exact Woodbury inverse of the
+    surrogate; tangents fall back to the exact Pallas stacked tangents.
+
+Dispatch (:func:`select_operator`): an explicit ``operator=`` name always
+wins; otherwise the ``data.grid.is_regular_grid`` probe picks Toeplitz for
+concrete regular grids and the Pallas tiles for everything else.  The probe
+runs host-side on concrete coordinates, so the decision is made at trace
+time and the traced program contains only the chosen structure.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from ..data.grid import GRID_RTOL, is_regular_grid
+from . import kernel_matvec
+from . import ops as kops
+
+
+@runtime_checkable
+class LinearOperator(Protocol):
+    """Matrix-access contract consumed by the iterative solver engine."""
+
+    name: str
+    kind: str
+    n: int
+
+    def matvec(self, theta, v) -> jax.Array:
+        """Noise-free K(x, x) @ v;  v is (n,) or (n, b)."""
+        ...
+
+    def gram_matvec(self, theta, v) -> jax.Array:
+        """(K + (sigma_n^2 + jitter) I) @ v — the training-matrix matvec."""
+        ...
+
+    def tangent_matvecs(self, theta, V) -> jax.Array:
+        """dK/dtheta_i @ V stacked over ALL m flat directions: (m, n, b).
+
+        The noise diagonal is theta-independent, so these are also the
+        tangents of the full training matrix.
+        """
+        ...
+
+
+# ---------------------------------------------------------------------------
+# General path: Pallas tiles
+# ---------------------------------------------------------------------------
+
+class PallasTileOperator:
+    """Tile-generated matrix-free matvec (DESIGN.md §3) — works for any x."""
+
+    name = "pallas"
+
+    def __init__(self, kind: str, x, sigma_n: float = 0.0,
+                 jitter: float = 0.0):
+        if kind not in kernel_matvec.TILE_FNS:
+            raise KeyError(f"no Pallas tile for covariance {kind!r}; "
+                           f"registered: {sorted(kernel_matvec.TILE_FNS)}")
+        self.kind = kind
+        self.x = jnp.asarray(x)
+        self.n = self.x.shape[0]
+        self.sigma_n = float(sigma_n)
+        self.jitter = float(jitter)
+
+    def matvec(self, theta, v):
+        return kops.matvec(self.kind, theta, self.x, self.x, v)
+
+    def gram_matvec(self, theta, v):
+        return kops.gram_matvec(self.kind, theta, self.x, v,
+                                self.sigma_n, self.jitter)
+
+    def tangent_matvecs(self, theta, V):
+        return kops.matvec_tangents(self.kind, theta, self.x, self.x, V)
+
+
+# ---------------------------------------------------------------------------
+# Gridded fast path: symmetric Toeplitz via circulant embedding + real FFT
+# ---------------------------------------------------------------------------
+
+def _embed(t):
+    """First column (..., n) -> circulant generator (..., 2n-2).
+
+    c = [t_0 .. t_{n-1}, t_{n-2} .. t_1]: the minimal circulant whose
+    top-left (n, n) block is the symmetric Toeplitz matrix of t.  The
+    embedding is ALGEBRAICALLY exact for matvecs whatever the sign of the
+    circulant spectrum (negative embedding eigenvalues would only matter
+    for sampling/quadrature USES of the spectrum, which we never make —
+    see DESIGN.md §9).
+    """
+    return jnp.concatenate([t, t[..., t.shape[-1] - 2:0:-1]], axis=-1)
+
+
+def _toeplitz_matvec(t, v):
+    """Symmetric-Toeplitz matvec: t (n,) first column, v (n, b) -> (n, b)."""
+    n = t.shape[0]
+    L = 2 * n - 2
+    vp = jnp.zeros((L, v.shape[1]), v.dtype).at[:n].set(v)
+    w = jnp.fft.irfft(jnp.fft.rfft(_embed(t))[:, None]
+                      * jnp.fft.rfft(vp, axis=0), n=L, axis=0)
+    return w[:n].astype(v.dtype)
+
+
+def _toeplitz_matvec_stacked(T, v):
+    """m first columns at once: T (m, n), v (n, b) -> (m, n, b).
+
+    One rfft of v serves all m spectra — the FFT analogue of the stacked
+    Pallas tangent kernel's shared tile generation (DESIGN.md §2.3).
+    """
+    n = v.shape[0]
+    L = 2 * n - 2
+    vp = jnp.zeros((L, v.shape[1]), v.dtype).at[:n].set(v)
+    vhat = jnp.fft.rfft(vp, axis=0)                    # (Lf, b)
+    chat = jnp.fft.rfft(_embed(T), axis=-1)            # (m, Lf)
+    w = jnp.fft.irfft(chat[:, :, None] * vhat[None], n=L, axis=1)
+    return w[:, :n].astype(v.dtype)
+
+
+class ToeplitzOperator:
+    """O(n log n) gram/tangent matvecs for stationary kernels on a grid.
+
+    Requires strictly ascending uniformly spaced 1-D inputs (checked at
+    construction via the ``data.grid`` probe) and an even covariance
+    k(dt) = k(-dt) — true of every registered tile function.  The whole
+    matrix is represented by its first column ``k(x - x[0])``: n kernel
+    evaluations per theta instead of n^2.
+    """
+
+    name = "toeplitz"
+
+    def __init__(self, kind: str, x, sigma_n: float = 0.0,
+                 jitter: float = 0.0, rtol: float = GRID_RTOL):
+        if kind not in kernel_matvec.TILE_FNS:
+            raise KeyError(f"no covariance tile for {kind!r}; "
+                           f"registered: {sorted(kernel_matvec.TILE_FNS)}")
+        if not is_regular_grid(x, rtol=rtol):
+            raise ValueError(
+                "ToeplitzOperator needs a concrete, strictly ascending, "
+                "uniformly spaced 1-D x (data.grid.is_regular_grid); use "
+                "the 'pallas' operator for irregular inputs")
+        self.kind = kind
+        self.x = jnp.asarray(x)
+        self.n = self.x.shape[0]
+        self.sigma_n = float(sigma_n)
+        self.jitter = float(jitter)
+        self.noise2 = float(sigma_n) ** 2 + float(jitter)
+        self._dt0 = self.x - self.x[0]          # separations of column 0
+
+    def first_column(self, theta, dtype=None):
+        """k(x - x[0]) — the n numbers that define the whole matrix."""
+        dtype = self._dt0.dtype if dtype is None else dtype
+        p = kops.natural_params(self.kind, theta).astype(dtype)
+        return kernel_matvec.TILE_FNS[self.kind](
+            self._dt0.astype(dtype), p)
+
+    def embedding_eigenvalues(self, theta):
+        """Spectrum of the size-(2n-2) circulant embedding (diagnostic).
+
+        Real because the generator is symmetric.  May dip negative for
+        kernels whose spectral density is not resolved by the grid; that is
+        harmless here (matvecs are exact regardless, see :func:`_embed`).
+        """
+        return jnp.fft.fft(_embed(self.first_column(theta))).real
+
+    def matvec(self, theta, v):
+        squeeze = v.ndim == 1
+        if squeeze:
+            v = v[:, None]
+        out = _toeplitz_matvec(self.first_column(theta, v.dtype), v)
+        return out[:, 0] if squeeze else out
+
+    def gram_matvec(self, theta, v):
+        return self.matvec(theta, v) + jnp.asarray(self.noise2, v.dtype) * v
+
+    def tangent_matvecs(self, theta, V):
+        squeeze = V.ndim == 1
+        if squeeze:
+            V = V[:, None]
+        dtype = V.dtype
+        theta = jnp.asarray(theta, dtype)
+        # differentiate the FIRST COLUMN: (n, m) jacobian of n scalars —
+        # the Toeplitz mirror of the stacked Pallas tangent tile.
+        rows = jax.jacfwd(lambda th: self.first_column(th, dtype))(theta)
+        out = _toeplitz_matvec_stacked(rows.T, V)       # (m, n, b)
+        return out[:, :, 0] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
+# Low-rank surrogate: pivoted Cholesky + noise diagonal (Woodbury-solvable)
+# ---------------------------------------------------------------------------
+
+class LowRankPlusDiagOperator:
+    """K ~= L L^T + noise2 I with L the greedy rank-r pivoted Cholesky.
+
+    An APPROXIMATE operator (DESIGN.md §2.6): ``matvec``/``gram_matvec``
+    apply the surrogate in O(n r), and :meth:`solve` is the surrogate's
+    exact O(n r) Woodbury inverse — the same apply that serves as the CG
+    preconditioner.  ``tangent_matvecs`` stay EXACT via the Pallas stacked
+    tangents (differentiating the greedy pivot order is ill-defined).
+    """
+
+    name = "lowrank"
+
+    def __init__(self, kind: str, x, sigma_n: float = 0.0,
+                 jitter: float = 0.0, rank: int = 32):
+        self._pallas = PallasTileOperator(kind, x, sigma_n, jitter)
+        self.kind = kind
+        self.x = self._pallas.x
+        self.n = self._pallas.n
+        self.rank = int(rank)
+        self.noise2 = float(sigma_n) ** 2 + float(jitter)
+
+    def _factor(self, theta):
+        from ..core.iterative import pivoted_cholesky   # lazy: avoids cycle
+
+        x = self.x
+        tile_fn = kernel_matvec.TILE_FNS[self.kind]
+        p = kops.natural_params(self.kind, theta).astype(x.dtype)
+        diag = tile_fn(jnp.zeros_like(x), p)
+        return pivoted_cholesky(diag, lambda i: tile_fn(x - x[i], p),
+                                self.rank)
+
+    def matvec(self, theta, v):
+        L = self._factor(theta)
+        return L @ (L.T @ v)
+
+    def gram_matvec(self, theta, v):
+        return self.matvec(theta, v) + self.noise2 * v
+
+    def solve(self, theta, r):
+        """Exact (L L^T + noise2 I)^{-1} r by Woodbury — O(n r) apply."""
+        from jax.scipy.linalg import cho_solve
+
+        if self.noise2 <= 0.0:
+            raise ValueError(
+                "LowRankPlusDiagOperator.solve needs noise2 > 0 (the rank-r "
+                "part alone is singular); pass sigma_n or jitter")
+        L = self._factor(theta)
+        M = self.noise2 * jnp.eye(self.rank, dtype=L.dtype) + L.T @ L
+        Lm = jnp.linalg.cholesky(M)
+        return (r - L @ cho_solve((Lm, True), L.T @ r)) / self.noise2
+
+    def tangent_matvecs(self, theta, V):
+        return self._pallas.tangent_matvecs(theta, V)
+
+
+# ---------------------------------------------------------------------------
+# Registry + structure dispatch
+# ---------------------------------------------------------------------------
+
+OPERATORS = {
+    PallasTileOperator.name: PallasTileOperator,
+    ToeplitzOperator.name: ToeplitzOperator,
+    LowRankPlusDiagOperator.name: LowRankPlusDiagOperator,
+}
+
+
+def make_operator(name: str, kind: str, x, sigma_n: float = 0.0,
+                  jitter: float = 0.0, **kwargs) -> LinearOperator:
+    """Construct a registered operator by name (no structure detection)."""
+    try:
+        cls = OPERATORS[name]
+    except KeyError:
+        raise ValueError(f"unknown operator {name!r}; registered: "
+                         f"{sorted(OPERATORS)}") from None
+    return cls(kind, x, sigma_n, jitter, **kwargs)
+
+
+def select_operator(kind: str, x, sigma_n: float = 0.0, jitter: float = 0.0,
+                    operator: Optional[str] = None,
+                    rtol: float = GRID_RTOL) -> LinearOperator:
+    """Structure-aware dispatch (DESIGN.md §9).
+
+    An explicit ``operator`` name always wins (``SolverOpts(operator=...)``
+    reaches here).  Otherwise: Toeplitz/FFT iff x is a concrete regular
+    ascending grid and the covariance has a registered tile; the general
+    Pallas tile operator for everything else (irregular x, traced x).
+    """
+    if operator is not None:
+        return make_operator(operator, kind, x, sigma_n, jitter)
+    if kind in kernel_matvec.TILE_FNS and is_regular_grid(x, rtol=rtol):
+        return ToeplitzOperator(kind, x, sigma_n, jitter, rtol=rtol)
+    return PallasTileOperator(kind, x, sigma_n, jitter)

@@ -176,11 +176,14 @@ def _all_avals(jaxpr):
 def test_iterative_path_never_materialises_K():
     """Trace the full iterative value+gradient at n = 4096 and assert no
     (n, n) intermediate exists anywhere in the program — the engine's
-    O(n * probes) memory contract."""
+    O(n * probes) memory contract.  Pinned to the PALLAS tile operator
+    (x here is a regular grid, so auto-dispatch would pick Toeplitz —
+    that path's twin test lives in test_operators.py)."""
     n = 4096
     x = jnp.arange(1, n + 1, dtype=jnp.float64)
     y = jnp.sin(0.1 * x)
-    opts = E.SolverOpts(n_probes=4, lanczos_k=8, cg_max_iter=10)
+    opts = E.SolverOpts(n_probes=4, lanczos_k=8, cg_max_iter=10,
+                        operator="pallas")
     vag = E.value_and_grad_fn("iterative", C.K2, x, y, 0.1,
                               key=jax.random.key(0), opts=opts)
     jaxpr = jax.make_jaxpr(vag)(THETA)

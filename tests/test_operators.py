@@ -1,0 +1,277 @@
+"""Structure-aware linear-operator layer (DESIGN.md §9).
+
+Toeplitz/FFT operator exactness against the dense reference on the paper's
+own 6-month tidal grid (n = 1968) for every registered covariance, the
+stacked tangent matvecs, grid-detection edge cases, dispatch rules, the
+low-rank surrogate, and the no-(n, n) memory contract of the gridded
+pipeline."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import covariances as C
+from repro.core import engine as E
+from repro.core import iterative as I
+from repro.core import predict
+from repro.data.grid import grid_spacing, is_regular_grid
+from repro.data.tidal import woods_hole_like
+from repro.kernels import operators as OPS
+from repro.kernels import ops as kops
+
+from test_engine import _all_avals
+
+# Flat hyperparameters per registered tile kind (timescales in HOURS for the
+# tidal grid: T0 ~ e^5 ≈ 148 h window, periods ~ e^2.5 ≈ 12 h).
+KIND_THETAS = {
+    "k1": jnp.array([5.0, 2.5, 0.05]),
+    "k2": jnp.array([5.0, 2.5, 0.05, 3.2, -0.1]),
+    "se": jnp.array([2.0]),
+    "matern12": jnp.array([2.0]),
+    "matern32": jnp.array([2.0]),
+    "matern52": jnp.array([2.0]),
+}
+
+SIGMA_N = 0.01
+JITTER = 1e-8
+
+
+@pytest.fixture(scope="module")
+def tidal_grid():
+    ds = woods_hole_like(jax.random.key(0), months=6)
+    assert ds.x.shape[0] in (1967, 1968)   # 6 lunar months at 2 h cadence
+    return ds.x
+
+
+# ---------------------------------------------------------------------------
+# Toeplitz exactness on the 6-month tidal grid, every registered covariance
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", sorted(KIND_THETAS))
+def test_toeplitz_matches_dense_on_tidal_grid(kind, tidal_grid):
+    """FFT matvec and stacked tangent matvecs vs the dense build_K/jvp
+    reference at n = 1968, rtol <= 1e-6 (acceptance criterion)."""
+    x = tidal_grid
+    n = x.shape[0]
+    theta = KIND_THETAS[kind]
+    cov = C.REGISTRY[kind]
+    rng = np.random.default_rng(3)
+    v = jnp.asarray(rng.normal(size=(n, 3)))
+
+    op = OPS.ToeplitzOperator(kind, x, SIGMA_N, JITTER)
+    K = C.build_K(cov, theta, x, SIGMA_N, JITTER)
+    want = K @ v
+    got = op.gram_matvec(theta, v)
+    scale = float(jnp.max(jnp.abs(want)))
+    assert float(jnp.max(jnp.abs(got - want))) <= 1e-6 * scale
+
+    tangents = op.tangent_matvecs(theta, v)
+    assert tangents.shape == (theta.shape[0], n, 3)
+    for i in range(theta.shape[0]):
+        e = jnp.zeros_like(theta).at[i].set(1.0)
+        ref = jax.jvp(lambda t: cov(t, x, x) @ v, (theta,), (e,))[1]
+        tscale = float(jnp.max(jnp.abs(ref))) + 1e-30
+        assert float(jnp.max(jnp.abs(tangents[i] - ref))) <= 1e-6 * tscale
+
+
+def test_toeplitz_matches_pallas_stacked_tangents(tidal_grid):
+    """The two tangent implementations (FFT first-column jacobian vs stacked
+    Pallas tile) are the SAME linear map, to fp precision."""
+    x = tidal_grid[:512]
+    theta = KIND_THETAS["k2"]
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.normal(size=(512, 2)))
+    op = OPS.ToeplitzOperator("k2", x, SIGMA_N, JITTER)
+    got = op.tangent_matvecs(theta, v)
+    ref = kops.matvec_tangents("k2", theta, x, x, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-9, atol=1e-10)
+
+
+def test_toeplitz_single_vector_and_tiny_grids():
+    theta = KIND_THETAS["se"]
+    x = jnp.asarray([0.0, 2.0])                      # two-point grid
+    op = OPS.ToeplitzOperator("se", x, 0.1, 0.0)
+    v = jnp.asarray([1.0, -2.0])
+    K = C.build_K(C.SE, theta, x, 0.1, 0.0)
+    np.testing.assert_allclose(np.asarray(op.gram_matvec(theta, v)),
+                               np.asarray(K @ v), rtol=1e-12)
+    assert op.matvec(theta, v).shape == (2,)
+    assert op.tangent_matvecs(theta, v).shape == (1, 2)
+
+
+def test_toeplitz_embedding_eigenvalues_diagnostic(tidal_grid):
+    x = tidal_grid[:256]
+    op = OPS.ToeplitzOperator("se", x, 0.0, 0.0)
+    lam = op.embedding_eigenvalues(KIND_THETAS["se"])
+    assert lam.shape == (2 * 256 - 2,)
+    # the SE spectrum decays smoothly: the embedding is near-PSD and its
+    # mean equals the kernel diagonal (trace/L identity for circulants)
+    np.testing.assert_allclose(float(jnp.mean(lam)), 1.0, rtol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# Grid detection edge cases
+# ---------------------------------------------------------------------------
+
+def test_grid_detection_edge_cases():
+    assert is_regular_grid(jnp.arange(16.0))
+    assert grid_spacing(jnp.arange(16.0) * 2.0) == pytest.approx(2.0)
+    assert is_regular_grid(jnp.asarray([0.0, 2.0]))       # two points
+    assert not is_regular_grid(jnp.asarray([1.0]))        # single point
+    assert not is_regular_grid(jnp.asarray([]))           # empty
+    assert not is_regular_grid(jnp.arange(16.0)[::-1])    # descending
+    assert not is_regular_grid(jnp.asarray([0.0, 1.0, 1.0, 2.0]))  # dupes
+    x = np.arange(64.0)
+    rng = np.random.default_rng(0)
+    shuffled = rng.permutation(x)
+    assert not is_regular_grid(jnp.asarray(shuffled))     # non-sorted
+    assert not is_regular_grid(jnp.asarray(x).reshape(8, 8))  # 2-D
+    assert not is_regular_grid(jnp.asarray([0.0, 1.0, jnp.inf]))
+
+
+def test_grid_detection_jitter_tolerance():
+    x = np.arange(128.0)
+    jittered = x + 1e-3 * np.random.default_rng(1).uniform(size=128)
+    assert not is_regular_grid(jnp.asarray(jittered))     # beyond rtol
+    assert is_regular_grid(jnp.asarray(x + 1e-10 * x))    # within rtol
+    assert is_regular_grid(jnp.asarray(jittered), rtol=1e-2)  # loosened
+
+
+def test_grid_detection_is_trace_safe():
+    """Under a trace the probe answers False (no ConcretizationTypeError)
+    and the dispatch falls back to the Pallas operator."""
+    picked = []
+
+    def f(x):
+        picked.append(is_regular_grid(x))
+        return jnp.sum(x)
+
+    jax.make_jaxpr(f)(jnp.arange(8.0))
+    assert picked == [False]
+
+
+# ---------------------------------------------------------------------------
+# Dispatch rules
+# ---------------------------------------------------------------------------
+
+def test_dispatch_auto_and_override():
+    grid = jnp.arange(64.0) * 2.0
+    rnd = jnp.asarray(np.sort(np.random.default_rng(0).uniform(0, 100, 64)))
+    assert OPS.select_operator("k1", grid, 0.1, 1e-8).name == "toeplitz"
+    assert OPS.select_operator("k1", rnd, 0.1, 1e-8).name == "pallas"
+    # explicit override beats structure detection
+    assert OPS.select_operator("k1", grid, 0.1, 1e-8,
+                               operator="pallas").name == "pallas"
+    with pytest.raises(ValueError):
+        OPS.select_operator("k1", rnd, 0.1, 1e-8, operator="toeplitz")
+    with pytest.raises(ValueError):
+        OPS.make_operator("nope", "k1", grid)
+    with pytest.raises(KeyError):
+        OPS.ToeplitzOperator("rq", grid)          # no tile for rq
+
+
+def test_solver_autodispatches_toeplitz_and_agrees_with_dense():
+    """End-to-end engine on the 1-month tidal grid: the iterative solver
+    silently rides the FFT path and still matches the dense reference."""
+    ds = woods_hole_like(jax.random.key(1), months=1)
+    theta = KIND_THETAS["k1"]
+    sigma_n = 0.1                     # CG-friendly conditioning (DESIGN §7)
+    sd = E.make_solver("dense", C.K1, theta, ds.x, ds.y, sigma_n)
+    si = E.make_solver("iterative", C.K1, theta, ds.x, ds.y, sigma_n,
+                       key=jax.random.key(7),
+                       opts=E.SolverOpts(n_probes=24, lanczos_k=80))
+    assert si.op.name == "toeplitz"
+    # SLQ noise scales with |ln det K|, not with lp (which sits near zero
+    # at this theta): assert a ~2 sigma band of the estimator
+    lp_d, lp_i = E.profiled_loglik(sd), E.profiled_loglik(si)
+    assert abs(float(lp_i - lp_d)) < 0.02 * abs(float(sd.logdet()))
+    g_d, g_i = E.profiled_grad(sd), E.profiled_grad(si)
+    cos = float(jnp.dot(g_i, g_d)
+                / (jnp.linalg.norm(g_i) * jnp.linalg.norm(g_d)))
+    assert cos > 0.99
+    np.testing.assert_allclose(float(si.sigma2_hat()),
+                               float(sd.sigma2_hat()), rtol=1e-5)
+    # forcing the tile path through SolverOpts still works
+    sp = E.make_solver("iterative", C.K1, theta, ds.x, ds.y, sigma_n,
+                       key=jax.random.key(7),
+                       opts=E.SolverOpts(operator="pallas"))
+    assert sp.op.name == "pallas"
+
+
+def test_predict_rides_toeplitz_on_gridded_training_inputs():
+    ds = woods_hole_like(jax.random.key(2), months=1)
+    theta = KIND_THETAS["k1"]
+    xs = jnp.linspace(10.0, 600.0, 40)            # off-grid test points
+    pd_ = predict.predict(C.K1, theta, ds.x, ds.y, xs, ds.sigma_n)
+    pi = predict.predict(C.K1, theta, ds.x, ds.y, xs, ds.sigma_n,
+                         backend="iterative")
+    scale = float(jnp.max(jnp.abs(pd_.mean)))
+    assert float(jnp.max(jnp.abs(pd_.mean - pi.mean))) < 1e-4 * scale
+    np.testing.assert_allclose(np.asarray(pi.var), np.asarray(pd_.var),
+                               rtol=1e-3, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# Low-rank surrogate operator
+# ---------------------------------------------------------------------------
+
+def test_lowrank_operator_matches_dense_for_smooth_kernel():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(np.sort(rng.uniform(0, 10, 200)))
+    theta = jnp.asarray([0.5])
+    op = OPS.LowRankPlusDiagOperator("se", x, 0.1, 0.0, rank=40)
+    v = jnp.asarray(rng.normal(size=(200, 2)))
+    K = C.build_K(C.SE, theta, x, 0.1, 0.0)
+    np.testing.assert_allclose(np.asarray(op.gram_matvec(theta, v)),
+                               np.asarray(K @ v), rtol=1e-4, atol=1e-5)
+    # solve is the EXACT inverse of the surrogate apply
+    b = jnp.asarray(rng.normal(size=(200,)))
+    back = op.gram_matvec(theta, op.solve(theta, b))
+    np.testing.assert_allclose(np.asarray(back), np.asarray(b),
+                               rtol=1e-8, atol=1e-9)
+    # tangents are the exact (Pallas) ones
+    ref = kops.matvec_tangents("se", theta, x, x, v)
+    np.testing.assert_allclose(np.asarray(op.tangent_matvecs(theta, v)),
+                               np.asarray(ref), rtol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# Memory contract of the gridded pipeline
+# ---------------------------------------------------------------------------
+
+def test_gridded_pipeline_never_materialises_K():
+    """Trace the full value+gradient on a regular grid at n = 4096 (operator
+    auto-detected -> toeplitz) and assert no (n, n) intermediate exists —
+    the O(n log n) work bound comes with an O(n) memory bound."""
+    n = 4096
+    x = jnp.arange(n, dtype=jnp.float64) * 2.0
+    y = jnp.sin(0.05 * x)
+    opts = E.SolverOpts(n_probes=4, lanczos_k=8, cg_max_iter=10)
+    vag = E.value_and_grad_fn("iterative", C.K2, x, y, 0.1,
+                              key=jax.random.key(0), opts=opts)
+    jaxpr = jax.make_jaxpr(vag)(KIND_THETAS["k2"])
+    bad = [a for a in _all_avals(jaxpr.jaxpr)
+           if hasattr(a, "shape") and a.shape and a.shape.count(n) >= 2]
+    assert not bad, f"(n, n)-sized intermediates on the gridded path: " \
+                    f"{sorted({tuple(a.shape) for a in bad})}"
+    # and the trace really used the FFT path: the circulant embedding's
+    # characteristic 2n-2 axis appears
+    L = 2 * n - 2
+    assert any(hasattr(a, "shape") and L in tuple(a.shape)
+               for a in _all_avals(jaxpr.jaxpr))
+
+
+def test_make_gram_matvec_dispatch():
+    grid = jnp.arange(128.0)
+    mv = I.make_gram_matvec("k1", grid, 0.1, 1e-8)
+    theta = KIND_THETAS["k1"]
+    v = jnp.ones(128)
+    want = C.build_K(C.K1, theta, grid, 0.1, 1e-8) @ v
+    np.testing.assert_allclose(np.asarray(mv(theta, v)), np.asarray(want),
+                               rtol=1e-10)
+    # explicit operator name passes through
+    mv_p = I.make_gram_matvec("k1", grid, 0.1, 1e-8, operator="pallas")
+    np.testing.assert_allclose(np.asarray(mv_p(theta, v)), np.asarray(want),
+                               rtol=1e-8)

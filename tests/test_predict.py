@@ -17,6 +17,22 @@ def test_interpolates_training_points_noise_free():
     assert float(jnp.max(post.var)) < 1e-4
 
 
+def test_dense_compute_var_false_returns_none_var():
+    """The dense branch honors compute_var=False (mean-only, var is None —
+    the Posterior docstring's promise) and the mean is unchanged."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(np.sort(rng.uniform(0, 10, 40)))
+    y = jnp.sin(x)
+    xs = jnp.linspace(1.0, 9.0, 17)
+    full = predict.predict(C.SE, jnp.asarray([0.0]), x, y, xs, 0.05)
+    mean_only = predict.predict(C.SE, jnp.asarray([0.0]), x, y, xs, 0.05,
+                                compute_var=False)
+    assert mean_only.var is None
+    np.testing.assert_allclose(np.asarray(mean_only.mean),
+                               np.asarray(full.mean), rtol=1e-12)
+    assert full.var is not None
+
+
 def test_reverts_to_prior_far_away():
     x = jnp.linspace(0, 1, 20)
     y = jnp.sin(3 * x)

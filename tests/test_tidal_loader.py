@@ -1,0 +1,68 @@
+"""data/tidal.load_noaa_csv round-trips: header variants, column order,
+blank rows, hours-from-start grid, mean-centred levels."""
+
+import numpy as np
+
+from repro.data.grid import grid_spacing, is_regular_grid
+from repro.data.tidal import load_noaa_csv
+
+
+def _write(path, lines):
+    path.write_text("\n".join(lines) + "\n")
+    return str(path)
+
+
+def test_load_basic_two_hour_grid(tmp_path):
+    levels = [1.50, 0.80, -0.40, -1.10, 0.30, 1.20]
+    lines = ["Date Time, Water Level, Sigma"]
+    for i, wl in enumerate(levels):
+        hh = 2 * i
+        lines.append(f"2015-01-01 {hh:02d}:00,{wl}, 0.003")
+    ds = load_noaa_csv(_write(tmp_path / "wl.csv", lines))
+    x = np.asarray(ds.x)
+    y = np.asarray(ds.y)
+    np.testing.assert_allclose(x, 2.0 * np.arange(6), atol=1e-9)
+    assert is_regular_grid(ds.x)                    # rides the FFT fast path
+    assert grid_spacing(ds.x) == 2.0
+    want = np.asarray(levels) - np.mean(levels)
+    np.testing.assert_allclose(y, want, atol=1e-12)
+    assert abs(float(y.mean())) < 1e-12             # mean-centred
+
+
+def test_load_column_order_variant(tmp_path):
+    """Water Level in a non-default column; Date Time not first."""
+    lines = [
+        "Station ID, Date Time, Quality, Water Level",
+        "8447930,2015-06-01 00:00, v, 0.10",
+        "8447930,2015-06-01 01:00, v, 0.30",
+        "8447930,2015-06-01 02:00, v, 0.50",
+    ]
+    ds = load_noaa_csv(_write(tmp_path / "cols.csv", lines))
+    np.testing.assert_allclose(np.asarray(ds.x), [0.0, 1.0, 2.0], atol=1e-9)
+    np.testing.assert_allclose(np.asarray(ds.y), [-0.2, 0.0, 0.2],
+                               atol=1e-12)
+
+
+def test_load_skips_blank_and_empty_level_rows(tmp_path):
+    lines = [
+        "Date Time, Water Level",
+        "2015-01-01 00:00, 1.0",
+        "",                                  # blank line
+        "2015-01-01 02:00,",                 # missing level -> skipped
+        "2015-01-01 04:00, 3.0",
+    ]
+    ds = load_noaa_csv(_write(tmp_path / "gaps.csv", lines))
+    assert ds.x.shape[0] == 2
+    np.testing.assert_allclose(np.asarray(ds.x), [0.0, 4.0], atol=1e-9)
+    np.testing.assert_allclose(np.asarray(ds.y), [-1.0, 1.0], atol=1e-12)
+
+
+def test_load_wl_header_shorthand(tmp_path):
+    lines = [
+        "date,wl",
+        "2015-01-01T00:00, 0.25",
+        "2015-01-01T02:00, 0.75",
+    ]
+    ds = load_noaa_csv(_write(tmp_path / "short.csv", lines))
+    np.testing.assert_allclose(np.asarray(ds.x), [0.0, 2.0], atol=1e-9)
+    np.testing.assert_allclose(np.asarray(ds.y), [-0.25, 0.25], atol=1e-12)
