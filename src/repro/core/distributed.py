@@ -5,9 +5,14 @@ rows of K are block-sharded over the ("pod", "data") axes; hyperparameters
 and the input coordinates are replicated (x is only n floats).  Everything
 runs inside ONE ``shard_map`` region per evaluation:
 
-  * matvec: each shard generates its own row-block of K with the Pallas
-    matrix-free kernel and contracts against the replicated vector — zero
-    collectives in the matvec itself;
+  * matvec: OPERATOR-AWARE (DESIGN.md §10).  The structure probe runs
+    host-side on the unpadded inputs before the shard_map region; Pallas
+    shards generate their own row-block of K tile-by-tile and contract
+    against the replicated vector — zero collectives in the matvec itself —
+    while gridded/SKI shards run their own length-(2m-2) FFT matvec on the
+    gathered vector and slice out their row block: O(n log n) work per
+    shard instead of O(n^2 / shards), a win whenever
+    shards < n / log n (always on the production meshes);
   * CG state stays row-sharded; per iteration the search direction is
     re-assembled with one all-gather of (n/shards) elements and the two
     scalar dots are psums — the total wire traffic per CG step is O(n),
@@ -32,6 +37,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..kernels import operators as kopers
 from ..kernels import ops as kops
 
 LOG2PI = jnp.log(2.0 * jnp.pi)
@@ -65,9 +71,28 @@ def distributed_profiled_loglik(kind: str, theta, x, y, sigma_n: float,
                                 lanczos_k: int = 64, cg_tol: float = 1e-8,
                                 cg_max_iter: int = 600,
                                 jitter: float = 1e-8,
-                                with_grad: bool = True) -> DistGPResult:
-    """Row-sharded matrix-free ln P_max (eq. 2.16) + gradient (eq. 2.17)."""
+                                with_grad: bool = True,
+                                operator=None) -> DistGPResult:
+    """Row-sharded matrix-free ln P_max (eq. 2.16) + gradient (eq. 2.17).
+
+    The matvec behind CG/SLQ/Hutchinson goes through the linear-operator
+    registry (DESIGN.md §9-§10): structure is probed host-side on the
+    UNPADDED inputs, so gridded shards run per-shard Toeplitz FFTs and
+    near-grid shards per-shard SKI gather-FFT-scatter instead of the
+    O(n^2/shards) Pallas row-block sweep; ``operator=`` overrides the
+    dispatch ("pallas" | "toeplitz" | "ski" — the exact-matvec operators;
+    approximate surrogates like "lowrank" are rejected).  Traced x (the
+    dry-run lowering path) conservatively selects the Pallas tiles.
+    """
     axes = _row_axes(mesh)
+    # structure probe on the ORIGINAL coordinates: sentinel padding below
+    # deliberately breaks grid regularity, the real data need not
+    op = kopers.select_operator(kind, x, 0.0, 0.0, operator=operator)
+    if op.name not in ("pallas", "toeplitz", "ski"):
+        raise ValueError(
+            f"distributed path supports the exact matvec operators "
+            f"('pallas' | 'toeplitz' | 'ski'), got {op.name!r}")
+    structured = op.name in ("toeplitz", "ski")
     x, y, n_orig = pad_for_mesh(jnp.asarray(x), jnp.asarray(y), mesh)
     n_pad = x.shape[0]
     pad = n_pad - n_orig
@@ -82,11 +107,30 @@ def distributed_profiled_loglik(kind: str, theta, x, y, sigma_n: float,
 
     def local_fn(theta, x_loc, x_full, rhs_loc):
         """Everything below runs per-shard; rhs_loc = [y | z] row block."""
+        block = x_loc.shape[0]
+
+        def row_start():
+            idx = jnp.asarray(0, jnp.int32)
+            for a in axes:
+                idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+            return idx * block
+
+        def kv_rows(theta_, v_full):
+            """This shard's row block of the noise-free K @ v."""
+            if structured:
+                # per-shard FFT on the gathered vector, then slice our
+                # rows; sentinel pad rows decouple (zero covariance), so
+                # their K·v block is exactly zero
+                kv = op.matvec(theta_, v_full[:n_orig])
+                if pad:
+                    kv = jnp.concatenate(
+                        [kv, jnp.zeros((pad,) + kv.shape[1:], kv.dtype)])
+                return jax.lax.dynamic_slice_in_dim(kv, row_start(), block)
+            return kops.matvec(kind, theta_, x_loc, x_full, v_full)
 
         def mv_loc(theta_, v_loc):
             v_full = jax.lax.all_gather(v_loc, axes, axis=0, tiled=True)
-            kv = kops.matvec(kind, theta_, x_loc, x_full, v_full)
-            return kv + noise2 * v_loc
+            return kv_rows(theta_, v_full) + noise2 * v_loc
 
         def dots(a, b):
             return jax.lax.psum(jnp.sum(a * b, axis=0), axes)
@@ -176,7 +220,7 @@ def distributed_profiled_loglik(kind: str, theta, x, y, sigma_n: float,
                 def kv_only(theta_, v_loc):
                     v_full = jax.lax.all_gather(v_loc, axes, axis=0,
                                                 tiled=True)
-                    return kops.matvec(kind, theta_, x_loc, x_full, v_full)
+                    return kv_rows(theta_, v_full)
 
                 dk_a = jax.jvp(lambda t: kv_only(t, alpha_loc[:, None]),
                                (theta,), (e,))[1][:, 0]

@@ -78,10 +78,14 @@ class SolverOpts(NamedTuple):
     lanczos_k: int = 64
     cg_tol: float = 1e-8
     cg_max_iter: int = 800
-    precond_rank: int = 0       # > 0 enables the pivoted-Cholesky preconditioner
+    precond_rank: int = 0       # pivoted-Cholesky rank (legacy: > 0 alone
+    # enables "pivchol"; also sizes the factor when precond="pivchol")
     fd_step: float = 1e-4       # central-difference step for the iterative Hessian
     operator: Optional[str] = None  # linear-operator override ("pallas" |
-    # "toeplitz" | "lowrank"); None = structure auto-detect (DESIGN.md §9)
+    # "toeplitz" | "ski" | "lowrank"); None = structure auto-detect
+    # (DESIGN.md §9-§10)
+    precond: Optional[str] = None   # CG preconditioner selection ("pivchol"
+    # | "circulant" | None); see iterative.make_preconditioner
 
 
 # ---------------------------------------------------------------------------
@@ -140,9 +144,13 @@ class IterativeSolver:
     matvec delivers all m directions of eq. (2.17) in one kernel launch.
 
     Every matrix access goes through a :mod:`..kernels.operators`
-    LinearOperator selected by structure (DESIGN.md §9): regular-grid inputs
-    get the O(n log n) Toeplitz/FFT matvec, everything else the O(n^2)
-    Pallas tile sweep; ``SolverOpts(operator=...)`` overrides the dispatch.
+    LinearOperator selected by structure (DESIGN.md §9-§10): exact-grid
+    inputs get the O(n log n) Toeplitz/FFT matvec, near-grid inputs the
+    SKI gather-FFT-scatter sandwich, everything else the O(n^2) Pallas
+    tile sweep; ``SolverOpts(operator=...)`` overrides the dispatch and
+    ``SolverOpts(precond=...)`` selects the CG preconditioner
+    (pivoted-Cholesky or circulant), built against the dispatched
+    operator's own access hooks.
     """
 
     backend = "iterative"
@@ -165,12 +173,12 @@ class IterativeSolver:
                                          operator=opts.operator)
         self._mv = self.op.gram_matvec
 
-        precond = None
-        if opts.precond_rank > 0:
-            precond = it.pivoted_cholesky_precond_for_kind(
-                kind, self.theta, self.x, sigma_n, opts.precond_rank,
-                jitter=jitter)
-        self._precond = precond
+        # pluggable preconditioner, built against the DISPATCHED operator's
+        # own diag/column/first-column access — pivoted Cholesky and the
+        # circulant apply work on the Toeplitz/SKI paths too
+        self._precond = it.make_preconditioner(self.op, self.theta,
+                                               opts.precond,
+                                               opts.precond_rank)
 
         # Solves are LAZY: a value-only evaluation (line-search probe,
         # nested sampling) pays one 1-RHS CG; the first grad_terms() call

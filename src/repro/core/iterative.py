@@ -3,11 +3,13 @@
 BEYOND-PAPER path (DESIGN.md §3).  The paper's algorithm is bound by the
 O(n^3) Cholesky and the O(n^2) storage of K.  On TPU we replace both:
 
-  * solves  K^{-1} b     -> batched conjugate gradients, each iteration one
-    matrix-free covariance matvec through the structure-dispatched
-    LinearOperator (kernels/operators, DESIGN.md §9): circulant-embedding
-    FFT in O(n log n) on regular grids, otherwise the Pallas kernel — K
-    generated tile-by-tile in VMEM, never stored — O(n) memory either way;
+  * solves  K^{-1} b     -> batched (optionally preconditioned) conjugate
+    gradients, each iteration one matrix-free covariance matvec through
+    the structure-dispatched LinearOperator (kernels/operators, DESIGN.md
+    §9-§10): circulant-embedding FFT in O(n log n) on regular grids, the
+    SKI gather-FFT-scatter sandwich on near-grid samplings, otherwise the
+    Pallas kernel — K generated tile-by-tile in VMEM, never stored — O(n)
+    memory in every case;
   * ln det K             -> stochastic Lanczos quadrature (SLQ): m-step
     Lanczos per Rademacher probe, Gauss quadrature of ln(lambda);
   * tr(K^{-1} dK_i)      -> Hutchinson estimator with the SAME probes:
@@ -187,7 +189,9 @@ def profiled_loglik_iterative(kind: str, theta, x, y, sigma_n: float, key,
                               cg_tol: float = 1e-8, cg_max_iter: int = 800,
                               jitter: float = 1e-8,
                               with_grad: bool = True,
-                              operator: Optional[str] = None
+                              operator: Optional[str] = None,
+                              precond: Optional[str] = None,
+                              precond_rank: int = 0
                               ) -> IterativeResult:
     """Matrix-free ln P_max (eq. 2.16) and its gradient (eq. 2.17).
 
@@ -196,7 +200,9 @@ def profiled_loglik_iterative(kind: str, theta, x, y, sigma_n: float, key,
       tr(K^{-1} dK_i) ~= mean_z  (K^{-1} z)^T (dK_i z).
     dK_i z comes through the structure-dispatched LinearOperator (tangent
     of the Toeplitz first column on grids, stacked Pallas tangent tile
-    otherwise) — K and dK are never materialised.
+    otherwise) — K and dK are never materialised.  ``precond`` /
+    ``precond_rank`` select the CG preconditioner
+    (:func:`make_preconditioner`); SLQ runs on K itself either way.
     """
     theta = jnp.asarray(theta)
     x = jnp.asarray(x)
@@ -206,11 +212,12 @@ def profiled_loglik_iterative(kind: str, theta, x, y, sigma_n: float, key,
     op = operators.select_operator(kind, x, float(sigma_n), float(jitter),
                                    operator=operator)
     mv = op.gram_matvec
+    M = make_preconditioner(op, theta, precond, precond_rank)
 
     z = jax.random.rademacher(key, (n, n_probes)).astype(y.dtype)
     rhs = jnp.concatenate([y[:, None], z], axis=1)
     sol = cg_solve(lambda v: mv(theta, v), rhs, tol=cg_tol,
-                   max_iter=cg_max_iter)
+                   max_iter=cg_max_iter, precond=M)
     alpha = sol.x[:, 0]                     # K^-1 y
     Kinv_z = sol.x[:, 1:]                   # K^-1 z
 
@@ -297,24 +304,88 @@ def pivoted_cholesky_precond(diag, matcol_fn: Callable, n: int, rank: int,
     return apply
 
 
+def pivoted_cholesky_precond_for_operator(op, theta, rank: int) -> Callable:
+    """Pivoted-Cholesky preconditioner from ANY registered LinearOperator.
+
+    The greedy factorisation only needs a diagonal and a column oracle;
+    every operator exposes both (``diag(theta)`` / ``matcol(theta, i)``,
+    traced-index-safe), so the preconditioner works identically on the
+    Pallas-tile, Toeplitz and SKI paths — no tile-registry hardwiring.
+    On the SKI path the oracle returns SURROGATE columns (W K_grid Wᵀ e_i
+    in O(m_grid s)), matching the matrix CG actually solves against.
+    """
+    diag = op.diag(theta)
+    return pivoted_cholesky_precond(diag, lambda i: op.matcol(theta, i),
+                                    op.n, rank, op.noise2)
+
+
 def pivoted_cholesky_precond_for_kind(kind: str, theta, x, sigma_n: float,
                                       rank: int,
                                       jitter: float = 1e-8) -> Callable:
-    """Matrix-free preconditioner builder for a Pallas tile registry kernel.
+    """Tile-registry convenience wrapper over the operator-generic builder.
 
     Columns come straight from the covariance tile function evaluated on the
     (n,) separation vector x - x_i — O(n) per pivot, no matvec, K never
     materialised.
     """
-    from ..kernels import kernel_matvec
+    op = operators.PallasTileOperator(kind, x, sigma_n, jitter)
+    return pivoted_cholesky_precond_for_operator(op, theta, rank)
 
-    x = jnp.asarray(x)
-    tile_fn = kernel_matvec.TILE_FNS[kind]
-    p_nat = kops.natural_params(kind, theta).astype(x.dtype)
-    diag = tile_fn(jnp.zeros_like(x), p_nat)       # unit-scale: ones
 
-    def matcol(i):
-        return tile_fn(x - x[i], p_nat)
+# ---------------------------------------------------------------------------
+# Circulant (Strang-type) preconditioner from the 2n-2 embedding
+# ---------------------------------------------------------------------------
 
-    return pivoted_cholesky_precond(diag, matcol, x.shape[0], rank,
-                                    sigma_n**2 + jitter)
+def circulant_precond(t, noise2: float, floor: float = 1e-12) -> Callable:
+    """FFT preconditioner from the circulant embedding of a first column.
+
+    ``t`` (n,) is a Toeplitz first column of the NOISE-FREE kernel.  Its
+    size-(2n-2) circulant embedding C diagonalises in Fourier space; the
+    apply is the Strang-type projection
+
+        P^{-1} r  =  Eᵀ (C_+ + noise2 I)^{-1} E r,     E = zero-padding,
+
+    i.e. pad r to 2n-2, one rfft, divide by the (clipped-positive)
+    embedding spectrum + noise2, irfft, truncate — O(n log n) per apply,
+    asymptotically free next to the CG matvec it accelerates.  See
+    ``kernels.operators._circulant_inverse_apply`` for the SPD argument;
+    prefer :func:`circulant_precond_for_operator`, which lets each
+    structure build its best variant (exact column on Toeplitz, grid-space
+    sandwich on SKI).
+    """
+    return operators._circulant_inverse_apply(t, noise2, floor)
+
+
+def circulant_precond_for_operator(op, theta, floor: float = 1e-12
+                                   ) -> Callable:
+    """Circulant preconditioner via the operator's own
+    ``circulant_precond(theta)`` hook (all registered structures)."""
+    return op.circulant_precond(theta, floor)
+
+
+PRECONDITIONERS = ("pivchol", "circulant")
+_DEFAULT_PIVCHOL_RANK = 32
+
+
+def make_preconditioner(op, theta, precond: Optional[str] = None,
+                        precond_rank: int = 0) -> Optional[Callable]:
+    """Pluggable preconditioner selection (``SolverOpts(precond=...)``).
+
+    * ``None`` + ``precond_rank > 0`` — legacy spelling of "pivchol";
+    * ``"pivchol"``   — greedy rank-r pivoted Cholesky + Woodbury apply
+      (rank = ``precond_rank`` or 32), best for smooth / low-rank kernels;
+    * ``"circulant"`` — the Strang-type FFT apply above, best for
+      (near-)grid data where K is (near-)Toeplitz;
+    * ``None`` otherwise — unpreconditioned CG.
+    """
+    if precond is None:
+        precond = "pivchol" if precond_rank > 0 else None
+    if precond is None:
+        return None
+    if precond == "pivchol":
+        rank = precond_rank if precond_rank > 0 else _DEFAULT_PIVCHOL_RANK
+        return pivoted_cholesky_precond_for_operator(op, theta, rank)
+    if precond == "circulant":
+        return circulant_precond_for_operator(op, theta)
+    raise ValueError(f"unknown preconditioner {precond!r}; choose from "
+                     f"{PRECONDITIONERS} or None")

@@ -47,10 +47,13 @@ def predict(cov: Covariance, theta, x, y, xstar, sigma_n: float,
     iteratively, and no k**/triangular solve densely.
 
     Training-matrix solves on the iterative backend go through the
-    structure-dispatched LinearOperator (DESIGN.md §9) — on regular-grid
-    training inputs the whole mean/variance path costs O(n log n) per CG
-    iteration via the Toeplitz/FFT matvec; ``SolverOpts(operator=...)``
-    overrides the dispatch.
+    structure-dispatched LinearOperator (DESIGN.md §9-§10) — regular-grid
+    training inputs cost O(n log n) per CG iteration via the Toeplitz/FFT
+    matvec, and NEAR-grid inputs (gappy/jittered records, the paper's
+    footnote-7 case) ride the SKI gather-FFT-scatter path;
+    ``SolverOpts(operator=...)`` overrides the dispatch and
+    ``SolverOpts(precond="circulant" | "pivchol")`` preconditions the CG
+    solves behind both mean and variance.
     """
     if backend == "iterative":
         return _predict_iterative(cov, theta, x, y, xstar, sigma_n,
@@ -79,7 +82,8 @@ def _predict_iterative(cov: Covariance, theta, x, y, xstar, sigma_n: float,
     """Matrix-free posterior (DESIGN.md §2.5).
 
     All solves go through the engine's IterativeSolver, so SolverOpts —
-    including ``precond_rank`` — apply here exactly as in training.
+    including ``precond``/``precond_rank`` — apply here exactly as in
+    training.
     """
     from ..kernels import ops as kops
 

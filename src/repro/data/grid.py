@@ -1,4 +1,5 @@
-"""Grid-structure probes for input coordinates (DESIGN.md §9).
+"""Grid-structure probes and inducing grids for input coordinates
+(DESIGN.md §9–§10).
 
 A regular 1-D sampling grid — the paper's own flagship data set, the Woods
 Hole tidal series on its two-hour cadence — makes the Gram matrix of every
@@ -11,11 +12,20 @@ Python bool, so the fast-path decision is made once at trace time and never
 appears inside the traced program; under a trace where ``x`` is abstract the
 probe conservatively answers False and the dispatch falls back to the
 general Pallas tile operator.
+
+:func:`classify_grid` is the three-way refinement behind the SKI dispatch
+(DESIGN.md §10): "exact" (Toeplitz), "near" (gaps or small jitter around an
+underlying regular grid — the paper's footnote-7 case; structured kernel
+interpolation recovers the FFT path), "irregular" (Pallas tiles).
+:func:`build_inducing_grid` and :func:`interp_weights` construct the SKI
+inducing grid and the sparse cubic/linear interpolation weights W with
+K ≈ W K_grid Wᵀ; both run host-side on concrete coordinates, so the
+resulting index/weight arrays enter traced programs as constants.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import numpy as np
 
@@ -23,6 +33,17 @@ import numpy as np
 # is exact to ~1e-12, while genuinely jittered samplings deviate at >=1e-3
 # relative; 1e-6 splits those regimes with orders of magnitude to spare.
 GRID_RTOL = 1e-6
+
+# Near-grid snap tolerance: max |x_i - k_i h| / h for points to count as
+# lying ON an underlying grid of spacing h.  5% of a cell keeps the cubic
+# interpolation error of the SKI surrogate far below solver tolerances
+# (gappy data snaps exactly, so only true jitter spends this budget).
+NEAR_GRID_RTOL = 0.05
+
+# Give up on the underlying-grid hypothesis when it needs more than this
+# many grid cells per data point (the SKI grid would dwarf the data and an
+# oversampled free grid is the better choice).
+NEAR_GRID_EXPAND = 8.0
 
 
 def _concrete(x) -> Optional[np.ndarray]:
@@ -58,3 +79,203 @@ def grid_spacing(x, rtol: float = GRID_RTOL) -> Optional[float]:
 def is_regular_grid(x, rtol: float = GRID_RTOL) -> bool:
     """True iff x is a concrete, strictly ascending, uniform 1-D grid."""
     return grid_spacing(x, rtol=rtol) is not None
+
+
+# ---------------------------------------------------------------------------
+# Three-way structure classification (exact / near / irregular)
+# ---------------------------------------------------------------------------
+
+class GridInfo(NamedTuple):
+    """Result of :func:`classify_grid`.
+
+    kind: "exact" | "near" | "irregular".
+    h:    underlying grid spacing for "exact"/"near", None otherwise.
+    """
+
+    kind: str
+    h: Optional[float]
+
+
+def classify_grid(x, rtol: float = GRID_RTOL,
+                  near_rtol: float = NEAR_GRID_RTOL,
+                  max_expand: float = NEAR_GRID_EXPAND) -> GridInfo:
+    """Classify concrete 1-D coordinates for the operator dispatch.
+
+    * "exact":  :func:`is_regular_grid` holds — spacing uniform to ``rtol``.
+    * "near":   every point sits within ``near_rtol`` of a cell of ONE
+      underlying regular grid (spacing recovered below), all points land on
+      DISTINCT cells, and the underlying grid needs at most ``max_expand``
+      cells per data point.  This is the footnote-7 regime: a regular
+      cadence with dropped samples (gaps snap exactly) and/or small timing
+      jitter.
+    * "irregular": everything else — including tracers, unsorted input,
+      and genuinely scattered samplings.
+
+    Spacing recovery: seed ``h`` with the median consecutive spacing
+    (robust to <50% gaps), round each consecutive step to its nearest
+    multiple of ``h``, then refit ``h`` by least squares on the CUMULATIVE
+    cell offsets (error ~ jitter / n^{3/2}, so residuals do not accumulate
+    across long records).
+    """
+    xc = _concrete(x)
+    if xc is None or xc.ndim != 1 or xc.shape[0] < 2:
+        return GridInfo("irregular", None)
+    if not np.all(np.isfinite(xc)):
+        return GridInfo("irregular", None)
+    xc = np.asarray(xc, np.float64)
+    h_exact = grid_spacing(xc, rtol=rtol)
+    if h_exact is not None:
+        return GridInfo("exact", h_exact)
+    d = np.diff(xc)
+    if np.any(d <= 0.0):
+        return GridInfo("irregular", None)
+    h0 = float(np.median(d))
+    if h0 <= 0.0:
+        return GridInfo("irregular", None)
+    q = np.rint(d / h0)
+    if np.any(q < 1.0):                    # two points inside one cell
+        return GridInfo("irregular", None)
+    k = np.concatenate([[0.0], np.cumsum(q)])      # cell offsets from x[0]
+    if k[-1] + 1.0 > max_expand * xc.shape[0]:
+        return GridInfo("irregular", None)
+    off = xc - xc[0]
+    h = float(np.dot(k, off) / np.dot(k, k))       # LS refit through origin
+    if h <= 0.0:
+        return GridInfo("irregular", None)
+    k = np.rint(off / h)                           # re-snap with refined h
+    if np.any(np.diff(k) < 1.0):
+        return GridInfo("irregular", None)
+    if float(np.max(np.abs(off - k * h))) > near_rtol * h:
+        return GridInfo("irregular", None)
+    return GridInfo("near", h)
+
+
+# ---------------------------------------------------------------------------
+# SKI inducing grids + sparse interpolation weights (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+# Pad cells added on each side of the data range so every cubic stencil
+# (j0-1 .. j0+2) stays inside the grid without clamping.
+GRID_MARGIN = 3
+
+# Free-grid (irregular input) density heuristic: cells per data point.
+GRID_OVERSAMPLE = 2.0
+
+
+def build_inducing_grid(x, spacing: Optional[float] = None,
+                        n_grid: Optional[int] = None,
+                        margin: int = GRID_MARGIN) -> np.ndarray:
+    """Regular inducing grid covering the range of concrete ``x``.
+
+    Spacing priority: explicit ``spacing`` > explicit ``n_grid`` (interior
+    cell count; margins come on top) > the :func:`classify_grid` underlying
+    spacing ("exact"/"near" inputs ride their OWN grid, where interpolation
+    is exact at the nodes) > the oversampled-mean heuristic
+    span / (GRID_OVERSAMPLE * (n - 1)) for scattered data (~2 inducing
+    points per datum, the standard SKI regime where cubic interpolation
+    error is negligible against solver tolerances).
+
+    Returns a float64 numpy array u with u[margin] <= x.min() and
+    u[-margin-1] >= x.max(); raises ValueError on tracers (SKI weight
+    construction is a host-side, trace-time operation).
+    """
+    xc = _concrete(x)
+    if xc is None or xc.ndim != 1 or xc.shape[0] < 1:
+        raise ValueError("build_inducing_grid needs concrete 1-D x "
+                         "(SKI grids are built host-side at trace time)")
+    xc = np.asarray(xc, np.float64)
+    lo, hi = float(np.min(xc)), float(np.max(xc))
+    span = hi - lo
+    n = xc.shape[0]
+    if spacing is None:
+        if n_grid is not None:
+            if n_grid < 2:
+                raise ValueError("n_grid must be >= 2")
+            spacing = (span if span > 0.0 else 1.0) / (n_grid - 1)
+        else:
+            info = classify_grid(xc)
+            if info.h is not None:
+                spacing = info.h
+            elif span > 0.0 and n > 1:
+                spacing = span / (GRID_OVERSAMPLE * (n - 1))
+            else:
+                spacing = 1.0                      # single point / zero span
+    spacing = float(spacing)
+    if spacing <= 0.0:
+        raise ValueError(f"inducing grid spacing must be > 0, got {spacing}")
+    n_interior = int(np.ceil(span / spacing - 1e-9)) + 1
+    m = n_interior + 2 * margin
+    u0 = lo - margin * spacing
+    return u0 + spacing * np.arange(m, dtype=np.float64)
+
+
+def _cubic_weights(s: np.ndarray) -> np.ndarray:
+    """Keys cubic-convolution weights (a = -1/2) for taps at offsets
+    (-1, 0, 1, 2) around the cell fraction s in [0, 1); rows sum to 1."""
+    w = np.empty(s.shape + (4,), np.float64)
+    d = s + 1.0                                    # tap -1: d in [1, 2]
+    w[..., 0] = ((-0.5 * d + 2.5) * d - 4.0) * d + 2.0
+    d = s                                          # tap 0:  d in [0, 1]
+    w[..., 1] = (1.5 * d - 2.5) * d * d + 1.0
+    d = 1.0 - s                                    # tap 1:  d in [0, 1]
+    w[..., 2] = (1.5 * d - 2.5) * d * d + 1.0
+    d = 2.0 - s                                    # tap 2:  d in [1, 2]
+    w[..., 3] = ((-0.5 * d + 2.5) * d - 4.0) * d + 2.0
+    return w
+
+
+def interp_weights(x, grid, order: str = "cubic"):
+    """Sparse interpolation weights W with  k(x) ≈ W k(grid)  row by row.
+
+    Returns ``(idx, w)`` — numpy int32 (n, s) grid indices and float64
+    (n, s) weights, s = 4 (cubic) or 2 (linear) — the CSR-style constant
+    operands of the trace-safe gather/scatter matvecs
+    ``W u = (w * u[idx]).sum(-1)`` and ``Wᵀ v = zeros(m).at[idx].add(w v)``
+    (`kernels.operators.SKIOperator`).  Rows sum to 1 exactly (both
+    schemes reproduce constants), and a point ON a grid node gets the
+    one-hot row, so gappy-grid data makes W a selection matrix and the SKI
+    surrogate exact.
+
+    ``grid`` must be regular with enough margin that every stencil fits
+    (``build_inducing_grid`` guarantees this); raises otherwise.
+    """
+    xc = _concrete(x)
+    gc = _concrete(grid)
+    if xc is None or gc is None:
+        raise ValueError("interp_weights needs concrete x and grid")
+    xc = np.asarray(xc, np.float64)
+    gc = np.asarray(gc, np.float64)
+    if gc.ndim != 1 or gc.shape[0] < 4:
+        raise ValueError("inducing grid must be 1-D with >= 4 points")
+    h = grid_spacing(gc)
+    if h is None:
+        raise ValueError("inducing grid must be a regular ascending grid")
+    t = (xc - gc[0]) / h
+    m = gc.shape[0]
+    # every cubic stencil needs j0-1 >= 0 and j0+2 <= m-1, i.e. t in
+    # [1, m-2]; outside that the Keys polynomial would silently
+    # extrapolate garbage, so reject BEFORE the float-edge clip below
+    if t.size and (float(np.min(t)) < 1.0 - 1e-9
+                   or float(np.max(t)) > m - 2.0 + 1e-9):
+        raise ValueError("interpolation stencil leaves the inducing grid; "
+                         "build the grid with build_inducing_grid margins")
+    j0 = np.floor(t).astype(np.int64)
+    j0 = np.clip(j0, 1, m - 3)                     # float-edge safety only
+    s = t - j0
+    if order == "cubic":
+        offs = np.arange(-1, 3, dtype=np.int64)
+        w = _cubic_weights(s)
+    elif order == "linear":
+        offs = np.arange(0, 2, dtype=np.int64)
+        w = np.stack([1.0 - s, s], axis=-1)
+    else:
+        raise ValueError(f"unknown interpolation order {order!r}; "
+                         "choose 'cubic' or 'linear'")
+    idx = j0[:, None] + offs[None, :]
+    # snap exact node hits to one-hot rows: kills O(eps) weight noise so
+    # gappy-grid W is EXACTLY a selection matrix
+    on_node = np.abs(s) < 1e-9
+    if np.any(on_node):
+        w = np.where(on_node[:, None],
+                     (offs[None, :] == 0).astype(np.float64), w)
+    return idx.astype(np.int32), w

@@ -50,6 +50,24 @@ def woods_hole_like(key, months: int = 6, noise: float = 0.01,
     return Dataset(x=t, y=y, sigma_n=noise)
 
 
+def drop_random_hours(ds: Dataset, frac: float, key) -> Dataset:
+    """Randomly drop a fraction of samples — the paper's footnote-7 regime.
+
+    Real tide-gauge records have outages; the result is NEAR-grid data
+    (surviving points still sit on the two-hour cadence) that knocks the
+    exact-Toeplitz path out and exercises the SKI dispatch instead
+    (DESIGN.md §10).  Keeps at least two points; ``frac`` is the expected
+    drop fraction.
+    """
+    n = int(ds.x.shape[0])
+    # np.array (not asarray): device arrays convert read-only
+    keep = np.array(jax.random.uniform(key, (n,)) >= frac)
+    if keep.sum() < 2:
+        keep[:2] = True
+    idx = np.where(keep)[0]
+    return Dataset(x=ds.x[idx], y=ds.y[idx], sigma_n=ds.sigma_n)
+
+
 def load_noaa_csv(path: str, dtype=jnp.float64) -> Dataset:
     """Load a NOAA tides-and-currents water-level CSV (Date Time, Water Level).
 

@@ -18,16 +18,32 @@ optimiser step; the geometry does not).  Three registered structures:
     instead of n^2 matrix entries, then ride the same FFT — so the whole
     train -> evidence -> predict pipeline is O(n log n) per iteration on the
     paper's own two-hour tidal cadence.
+  * :class:`SKIOperator` — the off-grid fast path (structured kernel
+    interpolation, arXiv:2101.11751): K ≈ W K_grid Wᵀ with K_grid the
+    Toeplitz covariance on a regular INDUCING grid and W sparse cubic (or
+    linear) interpolation weights built host-side (``data.grid``).  Gram
+    and stacked tangent matvecs run as gather → FFT → scatter in
+    O(n + m log m) with O(n + m) memory — the footnote-7 recovery: gappy
+    or slightly jittered samplings ride the FFT path anyway.
   * :class:`LowRankPlusDiagOperator` — the surrogate ``L L^T + noise2 I``
     with L the greedy rank-r pivoted Cholesky (DESIGN.md §2.6).  Its matvec
     is O(n r) and its ``solve`` is the exact Woodbury inverse of the
     surrogate; tangents fall back to the exact Pallas stacked tangents.
 
 Dispatch (:func:`select_operator`): an explicit ``operator=`` name always
-wins; otherwise the ``data.grid.is_regular_grid`` probe picks Toeplitz for
-concrete regular grids and the Pallas tiles for everything else.  The probe
-runs host-side on concrete coordinates, so the decision is made at trace
-time and the traced program contains only the chosen structure.
+wins; otherwise the ``data.grid.classify_grid`` probe picks Toeplitz for
+concrete exact grids, SKI for near-grid samplings (gaps/small jitter
+around one underlying grid — where the surrogate is exact or
+cubic-interpolation-accurate), and the Pallas tiles for everything else.
+The probe runs host-side on concrete coordinates, so the decision is made
+at trace time and the traced program contains only the chosen structure.
+
+Every operator additionally exposes the PRECONDITIONER access hooks
+consumed by ``core.iterative.make_preconditioner``: ``diag(theta)`` and
+``matcol(theta, i)`` (the column oracle of the pivoted-Cholesky builder,
+traced-index-safe) and ``circulant_precond(theta)`` (the structure's own
+best Strang-type FFT apply — exact first column on the Toeplitz path, a
+grid-space sandwich on the SKI path, a mean-spacing stand-in on tiles).
 """
 
 from __future__ import annotations
@@ -37,7 +53,8 @@ from typing import Optional, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
-from ..data.grid import GRID_RTOL, is_regular_grid
+from ..data.grid import (GRID_RTOL, build_inducing_grid, classify_grid,
+                         interp_weights, is_regular_grid)
 from . import kernel_matvec
 from . import ops as kops
 
@@ -71,7 +88,36 @@ class LinearOperator(Protocol):
 # General path: Pallas tiles
 # ---------------------------------------------------------------------------
 
-class PallasTileOperator:
+def _tile_column(kind: str, theta, dt):
+    """k(dt) for a separation vector dt — one closed-form tile evaluation."""
+    p = kops.natural_params(kind, theta).astype(dt.dtype)
+    return kernel_matvec.TILE_FNS[kind](dt, p)
+
+
+def _mean_spacing_column(kind: str, theta, x, n: int):
+    """Stand-in Toeplitz first column k(h̄ · arange(n)) at the mean data
+    spacing h̄ — the circulant preconditioner's model of near-uniform
+    sampling (exact on grids, an approximation off them)."""
+    x = jnp.asarray(x)
+    hbar = (x[-1] - x[0]) / jnp.maximum(n - 1, 1)
+    return _tile_column(kind, theta, hbar * jnp.arange(n, dtype=x.dtype))
+
+
+class _StationaryColumnAccess:
+    """Shared diag/column oracle for operators whose EXACT matrix is the
+    stationary kernel on their own ``self.x`` (Pallas tiles, Toeplitz) —
+    one closed-form tile evaluation per call, i may be traced."""
+
+    def diag(self, theta):
+        """Noise-free diagonal k(x, x) (unit-scale kernels: all ones)."""
+        return _tile_column(self.kind, theta, jnp.zeros_like(self.x))
+
+    def matcol(self, theta, i):
+        """Column k(x, x_i) — O(n) closed form."""
+        return _tile_column(self.kind, theta, self.x - self.x[i])
+
+
+class PallasTileOperator(_StationaryColumnAccess):
     """Tile-generated matrix-free matvec (DESIGN.md §3) — works for any x."""
 
     name = "pallas"
@@ -86,6 +132,7 @@ class PallasTileOperator:
         self.n = self.x.shape[0]
         self.sigma_n = float(sigma_n)
         self.jitter = float(jitter)
+        self.noise2 = float(sigma_n) ** 2 + float(jitter)
 
     def matvec(self, theta, v):
         return kops.matvec(self.kind, theta, self.x, self.x, v)
@@ -96,6 +143,14 @@ class PallasTileOperator:
 
     def tangent_matvecs(self, theta, V):
         return kops.matvec_tangents(self.kind, theta, self.x, self.x, V)
+
+    def circulant_precond(self, theta, floor: float = 1e-12):
+        """Circulant apply from the mean-spacing stand-in column — a model
+        of NEAR-uniform sampling; expect little from it on genuinely
+        scattered x (prefer pivchol there)."""
+        return _circulant_inverse_apply(
+            _mean_spacing_column(self.kind, theta, self.x, self.n),
+            self.noise2, floor)
 
 
 # ---------------------------------------------------------------------------
@@ -125,6 +180,38 @@ def _toeplitz_matvec(t, v):
     return w[:n].astype(v.dtype)
 
 
+def _circulant_inverse_apply(t, noise2: float, floor: float = 1e-12):
+    """r -> Eᵀ (C_+ + noise2 I)^{-1} E r from the 2n-2 embedding of t.
+
+    The Strang-type circulant-preconditioner apply shared by every
+    operator's ``circulant_precond``: embed the (stand-in) first column t,
+    take the REAL embedding spectrum, clip it positive at ``floor``·max|λ|
+    (the embedding is exact for matvecs whatever the spectrum sign —
+    DESIGN.md §9 — but a PRECONDITIONER must be SPD; E full-rank and
+    C_+ ≻ 0 make Eᵀ C_+^{-1} E so), add the noise, and solve in Fourier
+    space: pad to 2n-2, one rfft, divide, irfft, truncate.  O(n log n) per
+    apply — asymptotically free next to the CG matvec it accelerates.
+    """
+    t = jnp.asarray(t)
+    n = t.shape[0]
+    if n < 2:
+        return lambda r: r / (t[0] + noise2)
+    L = 2 * n - 2
+    lam = jnp.fft.rfft(_embed(t)).real           # real: symmetric generator
+    lam = jnp.clip(lam, floor * jnp.max(jnp.abs(lam))) + noise2
+
+    def apply(r):
+        squeeze = r.ndim == 1
+        if squeeze:
+            r = r[:, None]
+        rp = jnp.zeros((L, r.shape[1]), r.dtype).at[:n].set(r)
+        u = jnp.fft.irfft(jnp.fft.rfft(rp, axis=0) / lam[:, None],
+                          n=L, axis=0)[:n].astype(r.dtype)
+        return u[:, 0] if squeeze else u
+
+    return apply
+
+
 def _toeplitz_matvec_stacked(T, v):
     """m first columns at once: T (m, n), v (n, b) -> (m, n, b).
 
@@ -140,7 +227,7 @@ def _toeplitz_matvec_stacked(T, v):
     return w[:, :n].astype(v.dtype)
 
 
-class ToeplitzOperator:
+class ToeplitzOperator(_StationaryColumnAccess):
     """O(n log n) gram/tangent matvecs for stationary kernels on a grid.
 
     Requires strictly ascending uniformly spaced 1-D inputs (checked at
@@ -208,6 +295,148 @@ class ToeplitzOperator:
         out = _toeplitz_matvec_stacked(rows.T, V)       # (m, n, b)
         return out[:, :, 0] if squeeze else out
 
+    def circulant_precond(self, theta, floor: float = 1e-12):
+        """Circulant apply from the EXACT first column — the ideal case:
+        the preconditioner's spectrum is the operator's own embedding
+        spectrum (observed: 40-100x fewer CG iterations on the tidal
+        grids, tests/test_ski.py)."""
+        return _circulant_inverse_apply(self.first_column(theta),
+                                        self.noise2, floor)
+
+
+# ---------------------------------------------------------------------------
+# Off-grid fast path: structured kernel interpolation (SKI)
+# ---------------------------------------------------------------------------
+
+class SKIOperator:
+    """K ≈ W K_grid Wᵀ: the Toeplitz/FFT fast path for OFF-grid inputs.
+
+    Structured kernel interpolation (arXiv:2101.11751): a regular inducing
+    grid u spans the input range (``data.grid.build_inducing_grid``), and
+    each data point interpolates from its s = 4 (cubic) or 2 (linear)
+    nearest grid nodes with weights built host-side at construction
+    (``data.grid.interp_weights``) — W is (n, m_grid) with s entries per
+    row, stored CSR-style as (n, s) index/weight arrays.  Matvecs run
+
+        v  →  Wᵀ v  →  K_grid (Wᵀ v)  →  W (…)
+
+    gather → circulant-embedding FFT → scatter-add: O(n s + m log m) work,
+    O(n + m) memory, and the stacked dK/dθ tangent matvecs ride the inner
+    :class:`ToeplitzOperator` tangents between the same W applications.
+
+    Exactness: a point ON a grid node gets a one-hot W row, so gappy-grid
+    data (the paper's footnote-7 tidal records with dropped hours) makes W
+    a selection matrix and the surrogate EXACT; genuinely off-grid points
+    incur the cubic interpolation error O((h/ℓ)^3) per kernel evaluation —
+    driven below solver tolerances by the grid-density heuristic
+    (DESIGN.md §10).
+
+    The surrogate is symmetric PSD by construction (congruence of the PSD
+    K_grid), so CG/SLQ apply unchanged.
+    """
+
+    name = "ski"
+
+    def __init__(self, kind: str, x, sigma_n: float = 0.0,
+                 jitter: float = 0.0, grid=None,
+                 spacing: Optional[float] = None,
+                 n_grid: Optional[int] = None, order: str = "cubic"):
+        if grid is None:
+            grid = build_inducing_grid(x, spacing=spacing, n_grid=n_grid)
+        idx, w = interp_weights(x, grid, order=order)
+        self.kind = kind
+        self.x = jnp.asarray(x)
+        self.n = self.x.shape[0]
+        self.order = order
+        self.sigma_n = float(sigma_n)
+        self.jitter = float(jitter)
+        self.noise2 = float(sigma_n) ** 2 + float(jitter)
+        # probe + geometry on the float64 host grid (a float32 round-trip
+        # could push a legitimate grid past the regularity tolerance);
+        # per-call dtypes follow v via first_column(theta, dtype)
+        self._toep = ToeplitzOperator(kind, grid)
+        self.grid = self._toep.x
+        self.m_grid = int(self.grid.shape[0])
+        self.idx = jnp.asarray(idx)                    # (n, s) int32
+        self.w = jnp.asarray(w, self.x.dtype)          # (n, s)
+
+    # -- the sparse interpolation applications (trace-safe: idx/w constants)
+
+    def _W(self, u):
+        """(m_grid, b) -> (n, b): gather s nodes per row, weight, sum."""
+        w = self.w.astype(u.dtype)
+        return jnp.sum(w[:, :, None] * u[self.idx], axis=1)
+
+    def _Wt(self, v):
+        """(n, b) -> (m_grid, b): scatter-add each point into its s nodes."""
+        w = self.w.astype(v.dtype)
+        return jnp.zeros((self.m_grid, v.shape[1]), v.dtype).at[
+            self.idx].add(w[:, :, None] * v[:, None, :])
+
+    def matvec(self, theta, v):
+        squeeze = v.ndim == 1
+        if squeeze:
+            v = v[:, None]
+        out = self._W(self._toep.matvec(theta, self._Wt(v)))
+        return out[:, 0] if squeeze else out
+
+    def gram_matvec(self, theta, v):
+        return self.matvec(theta, v) + jnp.asarray(self.noise2, v.dtype) * v
+
+    def tangent_matvecs(self, theta, V):
+        """dK/dθ_i @ V = W (dK_grid/dθ_i) Wᵀ V — W is θ-independent, so the
+        stacked Toeplitz tangents slot straight between the applications."""
+        squeeze = V.ndim == 1
+        if squeeze:
+            V = V[:, None]
+        T = self._toep.tangent_matvecs(theta, self._Wt(V))   # (m, m_grid, b)
+        out = jax.vmap(self._W)(T)                           # (m, n, b)
+        return out[:, :, 0] if squeeze else out
+
+    # -- preconditioner access hooks
+
+    def diag(self, theta):
+        """Surrogate diagonal  w_iᵀ K_grid[idx_i, idx_i] w_i  — O(n s²)
+        via the first column (grid stationarity: entries are t[|Δidx|])."""
+        t = self._toep.first_column(theta, self.x.dtype)
+        G = t[jnp.abs(self.idx[:, :, None] - self.idx[:, None, :])]
+        return jnp.einsum("ns,nst,nt->n", self.w, G, self.w)
+
+    def matcol(self, theta, i):
+        """Surrogate column  W K_grid (Wᵀ e_i)  in O(m_grid s) — the s
+        relevant K_grid columns come straight from the first column."""
+        t = self._toep.first_column(theta, self.x.dtype)
+        cols = t[jnp.abs(jnp.arange(self.m_grid)[:, None]
+                         - self.idx[i][None, :])]            # (m_grid, s)
+        cu = cols @ self.w[i].astype(t.dtype)
+        return self._W(cu[:, None])[:, 0]
+
+    def circulant_precond(self, theta, floor: float = 1e-12):
+        """GRID-space circulant sandwich  M^{-1} = W Eᵀ(C_+ + noise2)^{-1}E Wᵀ.
+
+        The data-space system is a W-congruence of the grid Toeplitz
+        matrix, so the preconditioner inverts IN GRID SPACE — scatter,
+        Fourier divide by the exact K_grid embedding spectrum, gather —
+        preserving the kernel's true (e.g. quasi-periodic) structure that
+        any contiguous data-space stand-in column scrambles on gappy
+        records.  SPD whenever W has full row rank (always for distinct
+        points; gappy data gives a selection matrix).  Measured on
+        10%-dropped tidal records: 7-14x fewer CG iterations across all
+        registered kernels (tests/test_ski.py).
+        """
+        Q = _circulant_inverse_apply(
+            self._toep.first_column(theta, self.x.dtype), self.noise2,
+            floor)
+
+        def apply(r):
+            squeeze = r.ndim == 1
+            if squeeze:
+                r = r[:, None]
+            out = self._W(Q(self._Wt(r)))
+            return out[:, 0] if squeeze else out
+
+        return apply
+
 
 # ---------------------------------------------------------------------------
 # Low-rank surrogate: pivoted Cholesky + noise diagonal (Woodbury-solvable)
@@ -267,6 +496,17 @@ class LowRankPlusDiagOperator:
     def tangent_matvecs(self, theta, V):
         return self._pallas.tangent_matvecs(theta, V)
 
+    # preconditioner hooks delegate to the EXACT kernel (the surrogate's
+    # own best preconditioner is its solve(); these serve generic callers)
+    def diag(self, theta):
+        return self._pallas.diag(theta)
+
+    def matcol(self, theta, i):
+        return self._pallas.matcol(theta, i)
+
+    def circulant_precond(self, theta, floor: float = 1e-12):
+        return self._pallas.circulant_precond(theta, floor)
+
 
 # ---------------------------------------------------------------------------
 # Registry + structure dispatch
@@ -275,6 +515,7 @@ class LowRankPlusDiagOperator:
 OPERATORS = {
     PallasTileOperator.name: PallasTileOperator,
     ToeplitzOperator.name: ToeplitzOperator,
+    SKIOperator.name: SKIOperator,
     LowRankPlusDiagOperator.name: LowRankPlusDiagOperator,
 }
 
@@ -293,15 +534,29 @@ def make_operator(name: str, kind: str, x, sigma_n: float = 0.0,
 def select_operator(kind: str, x, sigma_n: float = 0.0, jitter: float = 0.0,
                     operator: Optional[str] = None,
                     rtol: float = GRID_RTOL) -> LinearOperator:
-    """Structure-aware dispatch (DESIGN.md §9).
+    """Structure-aware dispatch (DESIGN.md §9–§10).
 
     An explicit ``operator`` name always wins (``SolverOpts(operator=...)``
-    reaches here).  Otherwise: Toeplitz/FFT iff x is a concrete regular
-    ascending grid and the covariance has a registered tile; the general
-    Pallas tile operator for everything else (irregular x, traced x).
+    reaches here).  Otherwise ``data.grid.classify_grid`` decides, for
+    covariances with a registered tile:
+
+      * "exact"     -> :class:`ToeplitzOperator` (O(n log n), exact);
+      * "near"      -> :class:`SKIOperator` on the recovered underlying
+        grid (gappy points snap exactly — selection-matrix W — and small
+        jitter rides cubic interpolation);
+      * "irregular" -> :class:`PallasTileOperator` (O(n^2), exact).  SKI
+        remains one ``operator="ski"`` away for scattered data where the
+        interpolation approximation is acceptable.
+
+    The probe inspects concrete coordinates host-side; traced x always
+    classifies "irregular".
     """
     if operator is not None:
         return make_operator(operator, kind, x, sigma_n, jitter)
-    if kind in kernel_matvec.TILE_FNS and is_regular_grid(x, rtol=rtol):
-        return ToeplitzOperator(kind, x, sigma_n, jitter, rtol=rtol)
+    if kind in kernel_matvec.TILE_FNS:
+        info = classify_grid(x, rtol=rtol)
+        if info.kind == "exact":
+            return ToeplitzOperator(kind, x, sigma_n, jitter, rtol=rtol)
+        if info.kind == "near":
+            return SKIOperator(kind, x, sigma_n, jitter, spacing=info.h)
     return PallasTileOperator(kind, x, sigma_n, jitter)
