@@ -201,8 +201,8 @@ def run_ski_tidal_training(drop=0.1, verbose=True):
     and preconditioner — the workload the SKI path exists for.  Short
     NCG budget: what changes between rows is the linear operator behind
     every CG/SLQ/tangent access and the CG preconditioner."""
+    from repro import gp
     from repro.core import engine as E
-    from repro.core import train as T
     from repro.data.tidal import drop_random_hours, woods_hole_like
 
     rows = []
@@ -216,10 +216,12 @@ def run_ski_tidal_training(drop=0.1, verbose=True):
             opts = E.SolverOpts(n_probes=2, lanczos_k=8, cg_tol=1e-4,
                                 cg_max_iter=25, operator=name,
                                 precond=precond)
+            spec = gp.GPSpec(kernel="k1", noise=gp.NoiseModel(0.1),
+                             solver=gp.SolverPolicy(
+                                 backend="iterative", opts=opts,
+                                 n_starts=1, max_iters=1, scan_points=0))
             t0 = time.time()
-            tr = T.train(C.K1, ds.x, ds.y, 0.1, jax.random.key(3),
-                         n_starts=1, max_iters=1, backend="iterative",
-                         solver_opts=opts)
+            tr = gp.GP.bind(spec, ds.x, ds.y).fit(jax.random.key(3)).result
             dt = time.time() - t0
             rows.append({"months": months, "n": n, "drop": drop,
                          "operator": name, "precond": precond,
@@ -240,8 +242,8 @@ def run_tidal_training(verbose=True):
     SLQ / tangent access — the paper's own gridded workload is the fast
     case.
     """
+    from repro import gp
     from repro.core import engine as E
-    from repro.core import train as T
     from repro.data.tidal import woods_hole_like
 
     rows = []
@@ -251,10 +253,12 @@ def run_tidal_training(verbose=True):
         for name in ("toeplitz", "pallas"):
             opts = E.SolverOpts(n_probes=2, lanczos_k=8, cg_tol=1e-4,
                                 cg_max_iter=25, operator=name)
+            spec = gp.GPSpec(kernel="k1", noise=gp.NoiseModel(0.1),
+                             solver=gp.SolverPolicy(
+                                 backend="iterative", opts=opts,
+                                 n_starts=1, max_iters=1, scan_points=0))
             t0 = time.time()
-            tr = T.train(C.K1, ds.x, ds.y, 0.1, jax.random.key(3),
-                         n_starts=1, max_iters=1, backend="iterative",
-                         solver_opts=opts)
+            tr = gp.GP.bind(spec, ds.x, ds.y).fit(jax.random.key(3)).result
             dt = time.time() - t0
             rows.append({"months": months, "n": n, "operator": name,
                          "t_train_s": dt, "n_evals": int(tr.n_evals),
@@ -265,13 +269,69 @@ def run_tidal_training(verbose=True):
     return rows
 
 
-def main(json_path="BENCH_operators.json", ski_json_path="BENCH_ski.json"):
+def run_compare_batched(n=4096, kernels=("k1", "se", "matern32",
+                                         "matern52"),
+                        n_starts=2, max_iters=2, verbose=True):
+    """Batched vs sequential K-kernel model comparison (DESIGN.md §11).
+
+    The paper's central experiment — train K candidate covariances and
+    compare their Laplace evidences — run twice through the gp front door
+    on an n-point grid: once as K sequential sessions, once as ONE batched
+    bank program (padded theta banks, one shared Toeplitz-FFT matvec
+    launch per CG iteration for all models x restarts).  One-shot
+    wall-clock INCLUDING jit compilation: the batched program compiles
+    once where the sequential path compiles (and dispatches) per model —
+    on TPU the shared-launch effect compounds with per-launch overheads.
+    Short NCG budget: this certifies the path and its cost shape, not the
+    science.
+    """
+    from repro import gp
+    from repro.core import enable_x64
+    from repro.core import engine as E
+
+    enable_x64()    # GP linear algebra wants f64 (safe: Pallas benches
+    # above pin float32 explicitly, and this runs last in main())
+    x = jnp.arange(n, dtype=jnp.float64) * 2.0
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(np.sin(2 * np.pi * np.asarray(x) / 12.4)
+                    + 0.5 * np.sin(2 * np.pi * np.asarray(x) / 24.0)
+                    + 0.1 * rng.normal(size=n))
+    opts = E.SolverOpts(n_probes=2, lanczos_k=8, cg_tol=1e-4,
+                        cg_max_iter=25)
+    pol = gp.SolverPolicy(backend="iterative", opts=opts,
+                          n_starts=n_starts, max_iters=max_iters,
+                          multimodal=False)
+    specs = gp.spec_bank(kernels, noise=gp.NoiseModel(0.1), solver=pol)
+
+    t0 = time.time()
+    rb = gp.compare(specs, x, y, key=jax.random.key(1), batch="on")
+    t_batched = time.time() - t0
+    t0 = time.time()
+    rs = gp.compare(specs, x, y, key=jax.random.key(1), batch="off")
+    t_seq = time.time() - t0
+    zb = [r.log_z_laplace for r in rb]
+    zs = [r.log_z_laplace for r in rs]
+    row = {"n": n, "k_models": len(kernels), "kernels": list(kernels),
+           "n_starts": n_starts, "max_iters": max_iters,
+           "t_batched_s": t_batched, "t_sequential_s": t_seq,
+           "speedup": t_seq / t_batched,
+           "log_z_batched": zb, "log_z_sequential": zs}
+    if verbose:
+        print(f"compare_batched n={n} K={len(kernels)}: "
+              f"batched={t_batched:.1f}s sequential={t_seq:.1f}s "
+              f"speedup x{row['speedup']:.2f}", flush=True)
+    return row
+
+
+def main(json_path="BENCH_operators.json", ski_json_path="BENCH_ski.json",
+         api_json_path="BENCH_api.json"):
     rows = run()
     tang = run_stacked_tangent()
     op_rows = run_operators()
     tidal_rows = run_tidal_training()
     ski_rows = run_ski()
     ski_tidal_rows = run_ski_tidal_training()
+    api_row = run_compare_batched()
     print("name,us_per_call,derived")
     for r in rows:
         print(f"kernel_matvec_n{r['n']},{r['t_s']*1e6:.0f},"
@@ -307,7 +367,21 @@ def main(json_path="BENCH_operators.json", ski_json_path="BENCH_ski.json"):
         with open(ski_json_path, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {ski_json_path}")
-    return rows + [tang] + op_rows + tidal_rows + ski_rows + ski_tidal_rows
+    if api_json_path:
+        payload = {"compare_batched": api_row,
+                   "note": "gp.compare batched bank vs sequential "
+                           "sessions, one-shot wall-clock INCLUDING jit "
+                           "compilation (the batched program compiles "
+                           "once vs once per model).  CPU container: the "
+                           "FFT bank shares ONE launch per CG iteration "
+                           "across all models x restarts — the "
+                           "launch-count saving is what compounds on "
+                           "TPU."}
+        with open(api_json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {api_json_path}")
+    return rows + [tang] + op_rows + tidal_rows + ski_rows \
+        + ski_tidal_rows + [api_row]
 
 
 if __name__ == "__main__":
@@ -317,5 +391,8 @@ if __name__ == "__main__":
                     help="output path for the benchmark record")
     ap.add_argument("--ski-json", default="BENCH_ski.json",
                     help="output path for the SKI benchmark record")
+    ap.add_argument("--api-json", default="BENCH_api.json",
+                    help="output path for the batched-compare record")
     args = ap.parse_args()
-    main(json_path=args.json, ski_json_path=args.ski_json)
+    main(json_path=args.json, ski_json_path=args.ski_json,
+         api_json_path=args.api_json)

@@ -20,21 +20,22 @@ import numpy as np
 
 from repro.core import covariances as C
 from repro.core import hyperlik as H
-from repro.core import laplace, train
-from repro.core.reparam import flat_box
 from repro.data.tidal import woods_hole_like
+from repro.gp import GP, GPSpec, NoiseModel, SolverPolicy
 
 
 def analyse(ds, n_starts=12, scan_points=2048, verbose=True):
     out = {}
     for cov, s in [(C.K1, 1), (C.K2, 2)]:
-        box = flat_box(cov, ds.x)
+        spec = GPSpec(kernel=cov, noise=NoiseModel(sigma_n=ds.sigma_n),
+                      solver=SolverPolicy(backend="dense",
+                                          n_starts=n_starts, max_iters=100,
+                                          scan_points=scan_points,
+                                          multimodal=False))
         t0 = time.time()
-        tr = train.train(cov, ds.x, ds.y, ds.sigma_n, jax.random.key(s),
-                         n_starts=n_starts, max_iters=100,
-                         scan_points=scan_points, box=box)
-        lap = laplace.evidence_profiled(cov, tr.theta_hat, ds.x, ds.y,
-                                        ds.sigma_n, box)
+        gp = GP.bind(spec, ds.x, ds.y).fit(jax.random.key(s))
+        tr = gp.result
+        lap = gp.log_evidence()
         t_train = time.time() - t0
         th = np.asarray(tr.theta_hat)
         err = np.asarray(lap.errors)

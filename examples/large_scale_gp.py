@@ -1,11 +1,12 @@
 """Beyond-paper: matrix-free + distributed GP training at large n.
 
-The paper caps at n ~ 2000 (dense Cholesky).  This example trains the same
-k2 hyperparameters at n = 20,000 on this container via the iterative path
-(CG + SLQ over the Pallas matrix-free matvec: K is never materialised —
-n^2 would be 3.2 GB, the matvec footprint is ~3 MB), then shows the
-row-sharded distributed variant on a local mesh (the production-mesh
-version is lowered by the dry-run).
+The paper caps at n ~ 2000 (dense Cholesky).  This example binds the SAME
+front-door session at n = 20,000: ``GP.bind`` resolves backend="auto" to
+the iterative engine (CG + SLQ over the Pallas matrix-free matvec — K is
+never materialised; n^2 would be 3.2 GB, the matvec footprint is ~3 MB)
+and a short ``fit`` drives real NCG steps through it.  The row-sharded
+distributed variant runs on a local mesh (the production-mesh version is
+lowered by the dry-run).
 
     PYTHONPATH=src python examples/large_scale_gp.py [--n 20000]
 """
@@ -22,7 +23,10 @@ enable_x64()
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core import distributed, iterative  # noqa: E402
+from repro import gp  # noqa: E402
+from repro.core import distributed  # noqa: E402
+from repro.core.engine import SolverOpts  # noqa: E402
+from repro.core.reparam import from_box  # noqa: E402
 from repro.data.synthetic import synthetic  # noqa: E402
 from repro.launch.mesh import make_local_mesh  # noqa: E402
 
@@ -39,23 +43,28 @@ def main():
           f"{args.n**2*8/1e9:.1f} GB; matrix-free matvec uses "
           f"{args.n*20*8/1e6:.1f} MB")
 
-    t0 = time.time()
-    res = iterative.profiled_loglik_iterative(
-        "k2", theta, ds.x, ds.y, ds.sigma_n, jax.random.key(1),
-        n_probes=8, lanczos_k=48, cg_tol=1e-6, cg_max_iter=400)
-    print(f"iterative ln P_max = {float(res.log_p_max):.1f} "
-          f"(cg iters {int(res.cg_iters)}, {time.time()-t0:.0f}s)")
-    print(f"grad = {np.asarray(res.grad).round(1)}")
+    spec = gp.GPSpec(
+        kernel="k2", noise=gp.NoiseModel(sigma_n=ds.sigma_n),
+        solver=gp.SolverPolicy(
+            backend="auto",            # n > 2048 -> iterative engine
+            opts=SolverOpts(n_probes=8, lanczos_k=48, cg_tol=1e-6,
+                            cg_max_iter=400)))
+    sess = gp.GP.bind(spec, ds.x, ds.y)
+    print(f"bound: {sess!r}")
 
-    # a few steepest-ascent steps, matrix-free end to end
-    th = theta
-    for i in range(args.steps):
-        r = iterative.profiled_loglik_iterative(
-            "k2", th, ds.x, ds.y, ds.sigma_n, jax.random.key(2 + i),
-            n_probes=8, lanczos_k=48, cg_tol=1e-6, cg_max_iter=400)
-        g = r.grad / (jnp.linalg.norm(r.grad) + 1e-12)
-        th = th + 0.02 * g
-        print(f"  ascent step {i}: ln P_max = {float(r.log_p_max):.1f}")
+    t0 = time.time()
+    lp = sess.log_likelihood(theta, key=jax.random.key(1))
+    print(f"iterative ln P_max = {float(lp):.1f} ({time.time()-t0:.0f}s)")
+
+    # a short real NCG run, matrix-free end to end, seeded at theta
+    t0 = time.time()
+    fitted = sess.fit(jax.random.key(2), n_starts=1,
+                      max_iters=args.steps,
+                      z0s=from_box(theta, sess.box)[None, :])
+    print(f"NCG x{args.steps} from theta0: ln P_max = "
+          f"{float(fitted.result.log_p_max):.1f} "
+          f"({int(fitted.result.n_evals)} evals, {time.time()-t0:.0f}s)")
+    print(f"theta_hat = {np.asarray(fitted.theta_hat).round(2)}")
 
     mesh = make_local_mesh()
     t0 = time.time()

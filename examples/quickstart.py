@@ -1,8 +1,13 @@
-"""Quickstart: the paper's workflow in ~40 lines.
+"""Quickstart: the paper's workflow through the one front door.
 
-Draw data from the k2 GP (paper Fig. 1), train k1 and k2 by multi-start
-NCG on the profiled hyperlikelihood (eqs. 2.16/2.17), compare models by
-Laplace hyperevidence (eq. 2.13 + 2.19), and predict (eq. 2.1).
+Draw data from the k2 GP (paper Fig. 1), declare the candidate models as
+GPSpecs, compare them by Laplace hyperevidence (eq. 2.13 + 2.19) with
+``repro.gp.compare``, and predict (eq. 2.1) from a fitted session.  The
+core flow is three lines:
+
+    gp = GP.bind(spec, x, y).fit(key)     # multi-start NCG (eqs. 2.16/2.17)
+    lnz = gp.log_evidence().log_z         # Laplace hyperevidence (eq. 2.13)
+    post = gp.predict(xstar)              # GPR posterior (eq. 2.1)
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,8 +21,7 @@ enable_x64()
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core import covariances as C  # noqa: E402
-from repro.core import model_compare, predict  # noqa: E402
+from repro import gp  # noqa: E402
 from repro.data.synthetic import synthetic  # noqa: E402
 
 
@@ -25,9 +29,9 @@ def main():
     ds = synthetic(jax.random.key(42), 100, "k2")
     print(f"data: n={ds.x.shape[0]}, sigma_n={ds.sigma_n}")
 
-    reports = model_compare.compare(
-        jax.random.key(0), [C.K1, C.K2], ds.x, ds.y, ds.sigma_n,
-        n_starts=10, max_iters=80)
+    specs = gp.spec_bank(["k1", "k2"],
+                         noise=gp.NoiseModel(sigma_n=ds.sigma_n))
+    reports = gp.compare(specs, ds.x, ds.y, key=jax.random.key(0))
     for r in reports:
         print(f"\n{r.name}: ln P_max = {r.log_p_max:.2f}   "
               f"ln Z_laplace = {r.log_z_laplace:.2f}   "
@@ -39,10 +43,13 @@ def main():
     print(f"\nln B (k2 vs k1) = {lnb:.2f}  "
           f"({'k2' if lnb > 0 else 'k1'} favoured)")
 
+    # fit -> evidence -> predict through one bound session
     best = max(reports, key=lambda r: r.log_z_laplace)
-    cov = C.REGISTRY[best.name]
+    sess = gp.GP.bind(gp.as_spec(best.name,
+                                 noise=gp.NoiseModel(ds.sigma_n)),
+                      ds.x, ds.y).fit(jax.random.key(1))
     xs = jnp.linspace(float(ds.x[0]), float(ds.x[-1]), 7)
-    post = predict.predict(cov, best.theta_hat, ds.x, ds.y, xs, ds.sigma_n)
+    post = sess.predict(xs)
     print(f"\ninterpolant ({best.name}) at {np.asarray(xs).round(1)}:")
     print(f"  mean = {np.asarray(post.mean).round(3)}")
     print(f"  std  = {np.sqrt(np.asarray(post.var)).round(3)}")

@@ -70,18 +70,25 @@ def main():
         print(f"  inducing grid: m={op.m_grid} nodes, {op.order} "
               f"interpolation; circulant preconditioner available "
               f"(SolverOpts(precond='circulant'))")
-        # show the SKI pipeline end to end: matrix-free posterior mean on
-        # the gappy record through CG + the grid-space circulant precond
-        from repro.core import covariances as C
+        # show the SKI pipeline end to end through the front door:
+        # matrix-free posterior on the gappy record, CG behind the
+        # grid-space circulant preconditioner, and the TEST points
+        # interpolated onto the SAME inducing grid (so the cross
+        # covariance is another sparse W application — DESIGN.md §11)
+        from repro import gp
         from repro.core import engine as E
-        from repro.core import predict
+        sess = gp.GP.bind(
+            gp.GPSpec(kernel="k1",
+                      noise=gp.NoiseModel(sigma_n=ds.sigma_n),
+                      solver=gp.SolverPolicy(
+                          backend="iterative",
+                          opts=E.SolverOpts(precond="circulant"))),
+            ds.x, ds.y)
         theta0 = jnp.asarray([5.0, jnp.log(12.4), 0.05])
         xs = jnp.linspace(float(ds.x[0]), float(ds.x[-1]), 96)
-        post = predict.predict(C.K1, theta0, ds.x, ds.y, xs, ds.sigma_n,
-                               backend="iterative",
-                               solver_opts=E.SolverOpts(
-                                   precond="circulant"))
-        print(f"  SKI posterior mean over {xs.shape[0]} test points: "
+        post = sess.predict(xs, theta=theta0)
+        print(f"  SKI posterior mean over {xs.shape[0]} test points "
+              f"(cross-covariance via W*, no (n, n*) block): "
               f"range [{float(jnp.min(post.mean)):+.3f}, "
               f"{float(jnp.max(post.mean)):+.3f}], "
               f"sigma_f_hat={float(post.sigma_f_hat):.3f}")

@@ -1,6 +1,13 @@
 """Core library: the paper's contribution (fast GP training & comparison).
 
-Public API:
+NOTE: the PUBLIC front door is :mod:`repro.gp` (GPSpec / GP sessions /
+batched compare; DESIGN.md §11).  The module-level entry points below
+(``train.train``, ``laplace.evidence_profiled``, ``model_compare.compare``,
+``nested.evidence_nested``, ``predict.predict``) remain as deprecation
+shims forwarding through it; the numerical implementations they share
+live here.
+
+Layers:
   covariances — covariance-function algebra (paper eqs. 3.1-3.3)
   hyperlik    — hyperlikelihood + analytic gradient/Hessian (eqs. 2.5-2.19)
   reparam     — flat-prior coordinates & Occam volumes (eqs. 3.4-3.5)

@@ -156,7 +156,8 @@ class IterativeSolver:
     backend = "iterative"
 
     def __init__(self, kind: str, theta, x, y, sigma_n: float, key,
-                 jitter: float = 1e-8, opts: SolverOpts = SolverOpts()):
+                 jitter: float = 1e-8, opts: SolverOpts = SolverOpts(),
+                 op=None):
         from . import iterative as it
 
         self.kind = kind
@@ -169,8 +170,11 @@ class IterativeSolver:
         self.opts = opts
         self.n = self.y.shape[0]
         self._it = it
-        self.op = kopers.select_operator(kind, self.x, sigma_n, jitter,
-                                         operator=opts.operator)
+        # a pre-bound LinearOperator (gp.GP.bind does the structure probe
+        # and W construction exactly once per session) skips the per-solver
+        # re-dispatch; otherwise select by structure as before
+        self.op = op if op is not None else kopers.select_operator(
+            kind, self.x, sigma_n, jitter, operator=opts.operator)
         self._mv = self.op.gram_matvec
 
         # pluggable preconditioner, built against the DISPATCHED operator's
@@ -253,22 +257,32 @@ class IterativeSolver:
 # ---------------------------------------------------------------------------
 
 def resolve_kind(cov: Covariance) -> str:
-    """Pallas tile-registry key for a covariance; KeyError if unsupported."""
+    """Covariance-tile registry key for the iterative backend.
+
+    Raises a clear ``ValueError`` listing the registered kinds for unknown
+    covariances instead of a bare lookup failure (or, worse, a silent
+    fallback deeper in the stack).
+    """
     name = cov.name if isinstance(cov, Covariance) else str(cov)
     if name not in kops._FLAT_TO_NATURAL:
-        raise KeyError(
-            f"covariance {name!r} has no Pallas tile; iterative backend "
-            f"supports {sorted(kops._FLAT_TO_NATURAL)}")
+        raise ValueError(
+            f"covariance {name!r} has no registered tile, so the iterative "
+            f"backend cannot evaluate it matrix-free; registered kinds: "
+            f"{sorted(kops._FLAT_TO_NATURAL)}.  Use backend='dense' for "
+            f"unregistered covariances.")
     return name
 
 
 def make_solver(backend: str, cov: Covariance, theta, x, y, sigma_n: float,
                 key=None, jitter: Optional[float] = None,
-                opts: SolverOpts = SolverOpts()) -> GPSolver:
+                opts: SolverOpts = SolverOpts(), op=None) -> GPSolver:
     """Construct the solver for one evaluation point.
 
     ``jitter`` defaults per backend: 1e-10 dense (exact Cholesky tolerates
-    tiny jitter), 1e-8 iterative (CG conditioning).
+    tiny jitter), 1e-8 iterative (CG conditioning).  ``op`` injects a
+    pre-bound LinearOperator (the ``gp`` front door binds structure once
+    per session); unknown covariance kinds and backends raise ``ValueError``
+    naming the registered choices.
     """
     if backend == "dense":
         return DenseCholeskySolver(cov, theta, x, y, sigma_n,
@@ -277,7 +291,8 @@ def make_solver(backend: str, cov: Covariance, theta, x, y, sigma_n: float,
         if key is None:
             key = jax.random.key(0)
         return IterativeSolver(resolve_kind(cov), theta, x, y, sigma_n, key,
-                               1e-8 if jitter is None else jitter, opts)
+                               1e-8 if jitter is None else jitter, opts,
+                               op=op)
     raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
 
 
@@ -296,7 +311,7 @@ def profiled_grad(solver: GPSolver) -> jax.Array:
 
 def value_and_grad_fn(backend: str, cov: Covariance, x, y, sigma_n: float,
                       key=None, jitter: Optional[float] = None,
-                      opts: SolverOpts = SolverOpts()) -> Callable:
+                      opts: SolverOpts = SolverOpts(), op=None) -> Callable:
     """theta -> (ln P_max, d ln P_max / d theta) through the chosen backend.
 
     The iterative backend re-uses ONE probe key for every evaluation, so the
@@ -308,7 +323,7 @@ def value_and_grad_fn(backend: str, cov: Covariance, x, y, sigma_n: float,
 
     def vag(theta):
         s = make_solver(backend, cov, theta, x, y, sigma_n, key=key,
-                        jitter=jitter, opts=opts)
+                        jitter=jitter, opts=opts, op=op)
         # gradient first: on the iterative backend grad_terms() triggers
         # the single batched [y | probes] CG that the value then re-uses
         g = profiled_grad(s)
@@ -319,14 +334,14 @@ def value_and_grad_fn(backend: str, cov: Covariance, x, y, sigma_n: float,
 
 def grad_fn(backend: str, cov: Covariance, x, y, sigma_n: float,
             key=None, jitter: Optional[float] = None,
-            opts: SolverOpts = SolverOpts()) -> Callable:
+            opts: SolverOpts = SolverOpts(), op=None) -> Callable:
     """theta -> d ln P_max / d theta only — skips the log-det (no SLQ),
     so an iterative gradient costs one batched CG + one stacked tangent
     launch.  Used by the finite-difference Hessian of the Laplace path."""
 
     def grad(theta):
         s = make_solver(backend, cov, theta, x, y, sigma_n, key=key,
-                        jitter=jitter, opts=opts)
+                        jitter=jitter, opts=opts, op=op)
         return profiled_grad(s)
 
     return grad
@@ -334,12 +349,12 @@ def grad_fn(backend: str, cov: Covariance, x, y, sigma_n: float,
 
 def value_fn(backend: str, cov: Covariance, x, y, sigma_n: float,
              key=None, jitter: Optional[float] = None,
-             opts: SolverOpts = SolverOpts()) -> Callable:
+             opts: SolverOpts = SolverOpts(), op=None) -> Callable:
     """theta -> ln P_max (value-only: line-search probes, nested sampling)."""
 
     def val(theta):
         s = make_solver(backend, cov, theta, x, y, sigma_n, key=key,
-                        jitter=jitter, opts=opts)
+                        jitter=jitter, opts=opts, op=op)
         return profiled_loglik(s)
 
     return val

@@ -61,6 +61,34 @@ def evidence_profiled(cov: Covariance, theta_hat, x, y, sigma_n: float,
                       key=None,
                       solver_opts: eng.SolverOpts = eng.SolverOpts()
                       ) -> LaplaceResult:
+    """Deprecated front: use ``repro.gp.GP.bind(...).log_evidence()``.
+
+    One-warning forwarding shim over the session API (which binds the
+    operator/backend once and evaluates the identical eq.-2.13 estimate).
+    """
+    import warnings
+
+    warnings.warn(
+        "repro.core.laplace.evidence_profiled is deprecated; use "
+        "repro.gp.GP.bind(GPSpec(...), x, y).log_evidence(theta=...) "
+        "instead", DeprecationWarning, stacklevel=2)
+    from ..gp import GP, GPSpec, NoiseModel, SolverPolicy
+
+    spec = GPSpec(kernel=cov, noise=NoiseModel(sigma_n=sigma_n,
+                                               jitter=jitter),
+                  box=box, solver=SolverPolicy(backend=backend,
+                                               opts=solver_opts,
+                                               multimodal=False))
+    return GP.bind(spec, x, y).log_evidence(
+        theta=theta_hat, key=key, jeffreys_norm=jeffreys_norm)
+
+
+def _evidence_profiled_impl(cov: Covariance, theta_hat, x, y, sigma_n: float,
+                            box: FlatBox, jeffreys_norm: float = 1.0,
+                            jitter: float = 1e-10, backend: str = "dense",
+                            key=None,
+                            solver_opts: eng.SolverOpts = eng.SolverOpts(),
+                            op=None) -> LaplaceResult:
     """Laplace evidence with sigma_f marginalised analytically (fast path).
 
     ln P_marg(theta) = marginal_const(n) + ln P_max(theta)  (eq. 2.18), and
@@ -82,10 +110,11 @@ def evidence_profiled(cov: Covariance, theta_hat, x, y, sigma_n: float,
         sf_hat = hl.sigma_f_hat(cache)
     else:
         solver = eng.make_solver(backend, cov, theta_hat, x, y, sigma_n,
-                                 key=key, jitter=jitter, opts=solver_opts)
+                                 key=key, jitter=jitter, opts=solver_opts,
+                                 op=op)
         lp_max = eng.profiled_loglik(solver)
         grad_fn = eng.grad_fn(backend, cov, x, y, sigma_n, key=key,
-                              jitter=jitter, opts=solver_opts)
+                              jitter=jitter, opts=solver_opts, op=op)
         ddlp = eng.fd_hessian(grad_fn, theta_hat, step=solver_opts.fd_step)
         sf_hat = jnp.sqrt(solver.sigma2_hat())
     lp_marg = lp_max + hl.marginal_const(n, jeffreys_norm)
@@ -113,6 +142,63 @@ def evidence_multimodal(cov: Covariance, theta_all, log_p_all, x, y,
                         backend: str = "dense", key=None,
                         solver_opts: eng.SolverOpts = eng.SolverOpts()
                         ) -> MultimodalResult:
+    """Deprecated front: use ``repro.gp.GP.fit(...).log_evidence()``.
+
+    One-warning forwarding shim over the mode-summed session path.
+    """
+    import warnings
+
+    warnings.warn(
+        "repro.core.laplace.evidence_multimodal is deprecated; use "
+        "repro.gp.GP.bind(...).fit(key).log_evidence() instead",
+        DeprecationWarning, stacklevel=2)
+    return _evidence_multimodal_impl(
+        cov, theta_all, log_p_all, x, y, sigma_n, box,
+        jeffreys_norm=jeffreys_norm, jitter=jitter, dedupe_tol=dedupe_tol,
+        lp_window=lp_window, backend=backend, key=key,
+        solver_opts=solver_opts)
+
+
+def dedupe_modes(theta_all, log_p_all, dedupe_tol: float = 0.05,
+                 lp_window: float = 15.0) -> list[np.ndarray]:
+    """Distinct restart peaks: best-first, L_inf-deduplicated, windowed.
+
+    Host-side helper shared by the sequential multimodal evidence below and
+    the batched ``gp.compare`` path (which Hessians ALL models' modes in
+    one padded bank).
+    """
+    thetas = np.asarray(theta_all)
+    lps = np.asarray(log_p_all)
+    best_lp = np.nanmax(lps)
+    order = np.argsort(-np.where(np.isnan(lps), -np.inf, lps))
+    modes: list[np.ndarray] = []
+    for i in order:
+        if not np.isfinite(lps[i]) or lps[i] < best_lp - lp_window:
+            continue
+        if any(np.max(np.abs(thetas[i] - m)) < dedupe_tol for m in modes):
+            continue
+        modes.append(thetas[i])
+    return modes
+
+
+def logsumexp_modes(log_zs: np.ndarray) -> float:
+    """ln sum_k Z_k over finite per-mode evidences (nan if none finite)."""
+    finite = np.isfinite(log_zs)
+    if not finite.any():
+        return float("nan")
+    zmax = log_zs[finite].max()
+    return float(zmax + np.log(np.sum(np.exp(log_zs[finite] - zmax))))
+
+
+def _evidence_multimodal_impl(cov: Covariance, theta_all, log_p_all, x, y,
+                              sigma_n: float, box: FlatBox,
+                              jeffreys_norm: float = 1.0,
+                              jitter: float = 1e-10,
+                              dedupe_tol: float = 0.05,
+                              lp_window: float = 15.0,
+                              backend: str = "dense", key=None,
+                              solver_opts: eng.SolverOpts = eng.SolverOpts(),
+                              op=None) -> MultimodalResult:
     """Multi-modal Laplace evidence: ln Z ~= ln sum_k Z_k over restart peaks.
 
     The periodic covariances' hyperlikelihood surface is comb-multimodal —
@@ -128,25 +214,16 @@ def evidence_multimodal(cov: Covariance, theta_all, log_p_all, x, y,
     unconverged restarts) contribute nothing rather than nan-poisoning the
     sum.
     """
-    thetas = np.asarray(theta_all)
-    lps = np.asarray(log_p_all)
-    best_lp = np.nanmax(lps)
-    order = np.argsort(-np.where(np.isnan(lps), -np.inf, lps))
-    modes = []
-    for i in order:
-        if not np.isfinite(lps[i]) or lps[i] < best_lp - lp_window:
-            continue
-        if any(np.max(np.abs(thetas[i] - m)) < dedupe_tol for m in modes):
-            continue
-        modes.append(thetas[i])
-    results = [evidence_profiled(cov, m, x, y, sigma_n, box, jeffreys_norm,
-                                 jitter, backend=backend, key=key,
-                                 solver_opts=solver_opts) for m in modes]
+    modes = dedupe_modes(theta_all, log_p_all, dedupe_tol, lp_window)
+    results = [_evidence_profiled_impl(cov, m, x, y, sigma_n, box,
+                                       jeffreys_norm, jitter,
+                                       backend=backend, key=key,
+                                       solver_opts=solver_opts, op=op)
+               for m in modes]
     log_zs = np.asarray([float(r.log_z) for r in results])
     finite = np.isfinite(log_zs)
     if finite.any():
-        zmax = log_zs[finite].max()
-        log_z = zmax + np.log(np.sum(np.exp(log_zs[finite] - zmax)))
+        log_z = logsumexp_modes(log_zs)
         best = results[int(np.flatnonzero(finite)[
             np.argmax(log_zs[finite])])]
     else:                       # every mode degenerate: surface the nan

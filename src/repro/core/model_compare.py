@@ -24,9 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from . import engine as eng
-from . import laplace, nested, train
 from .covariances import Covariance
-from .reparam import flat_box
 
 
 @dataclasses.dataclass
@@ -60,69 +58,33 @@ def compare(key, covs: Sequence[Covariance], x, y, sigma_n: float,
             solver_opts: eng.SolverOpts = eng.SolverOpts(),
             scan_points: Optional[int] = None,
             multimodal: bool = True) -> list[ModelReport]:
-    """Compare candidate covariances by Laplace hyperevidence.
+    """Deprecated front: use ``repro.gp.compare(specs, x, y, key=...)``.
 
-    scan_points: NCG restart seeding budget per model (None -> 256 per
-      hyperparameter on the dense path; 0 on the iterative path, where a
-      dense scan would defeat the matrix-free point — pass an explicit
-      budget to scan iteratively).  Scan evaluations are counted in
-      ``n_evals_train``.
-    multimodal: sum the Laplace evidence over distinct restart peaks
-      (alias modes) instead of using the best peak only.  Set False to
-      reproduce the single-mode estimate (or to save the per-mode Hessians
-      on the iterative path, where each costs 2m gradient evaluations).
+    One-warning forwarding shim over the sequential front-door path (the
+    same per-model train -> Laplace -> odds pipeline with identical key
+    threading; the new API additionally offers the BATCHED bank training
+    on gridded data — see repro.gp.compare(batch=...)).
     """
-    if jitter is None:
-        jitter = 1e-10 if backend == "dense" else 1e-8
-    reports = []
-    for cov in covs:
-        key, kt, kl, kn = jax.random.split(key, 4)
-        box = flat_box(cov, x)
-        sp = scan_points
-        if sp is None:
-            sp = 256 * cov.n_params if backend == "dense" else 0
-        tr = train.train(cov, x, y, sigma_n, kt, n_starts=n_starts,
-                         max_iters=max_iters, jitter=jitter, box=box,
-                         scan_points=sp, backend=backend,
-                         solver_opts=solver_opts)
-        n_evals = int(tr.n_evals)
-        if multimodal:
-            mm = laplace.evidence_multimodal(
-                cov, tr.theta_all, tr.log_p_all, x, y, sigma_n, box,
-                jitter=jitter, backend=backend, key=kl,
-                solver_opts=solver_opts)
-            log_z = float(mm.log_z)
-            lap = mm.best
-            n_modes = mm.n_modes
-            n_evals += n_modes            # one Hessian evaluation per mode
-        else:
-            lap = laplace.evidence_profiled(
-                cov, tr.theta_hat, x, y, sigma_n, box, jitter=jitter,
-                backend=backend, key=kl, solver_opts=solver_opts)
-            log_z = float(lap.log_z)
-            n_modes = 1
-            n_evals += 1
-        rep = ModelReport(
-            name=cov.name,
-            theta_hat=tr.theta_hat,
-            sigma_f_hat=float(tr.sigma_f_hat),
-            log_p_max=float(tr.log_p_max),
-            log_z_laplace=log_z,
-            errors=lap.errors if lap is not None else jnp.asarray([]),
-            n_evals_train=n_evals,
-            n_modes=n_modes,
-        )
-        if run_nested:
-            ns = nested.evidence_nested(kn, cov, x, y, sigma_n, box,
-                                        n_live=n_live,
-                                        max_iter=nested_max_iter,
-                                        jitter=jitter, backend=backend,
-                                        solver_opts=solver_opts)
-            rep.log_z_nested = float(ns.log_z)
-            rep.log_z_nested_err = float(ns.log_z_err)
-            rep.n_evals_nested = int(ns.n_evals)
-        reports.append(rep)
-    return reports
+    import warnings
+
+    warnings.warn(
+        "repro.core.model_compare.compare is deprecated; use "
+        "repro.gp.compare(gp.spec_bank(...), x, y, key=key) instead",
+        DeprecationWarning, stacklevel=2)
+    from ..gp import GPSpec, NoiseModel, SolverPolicy
+    from ..gp import compare as gp_compare
+
+    specs = [GPSpec(kernel=cov,
+                    noise=NoiseModel(sigma_n=sigma_n, jitter=jitter),
+                    solver=SolverPolicy(backend=backend, opts=solver_opts,
+                                        n_starts=n_starts,
+                                        max_iters=max_iters,
+                                        scan_points=scan_points,
+                                        multimodal=multimodal))
+             for cov in covs]
+    return gp_compare(specs, x, y, key=key, run_nested=run_nested,
+                      n_live=n_live, nested_max_iter=nested_max_iter,
+                      batch="off")
 
 
 def log_bayes_factors(reports: Sequence[ModelReport]):

@@ -175,7 +175,7 @@ def nested_sample(key,
 def make_gp_marg_loglik(cov: Covariance, x, y, sigma_n: float,
                         jeffreys_norm: float = 1.0, jitter: float = 1e-10,
                         backend: str = "dense", key=None,
-                        solver_opts=None):
+                        solver_opts=None, op=None):
     """theta -> ln P_marg(y|x,theta) (eq. 2.18): the integrand whose
     prior-weighted integral nested sampling evaluates, matching the
     quantity approximated by the profiled Laplace evidence (eq. 2.13).
@@ -198,7 +198,7 @@ def make_gp_marg_loglik(cov: Covariance, x, y, sigma_n: float,
     from . import engine as eng
     opts = solver_opts or eng.SolverOpts()
     val_fn = eng.value_fn(backend, cov, x, y, sigma_n, key=key,
-                          jitter=jitter, opts=opts)
+                          jitter=jitter, opts=opts, op=op)
 
     def log_l(theta):
         val = val_fn(theta)
@@ -213,11 +213,35 @@ def evidence_nested(key, cov: Covariance, x, y, sigma_n: float,
                     jeffreys_norm: float = 1.0,
                     jitter: float = 1e-10, backend: str = "dense",
                     solver_opts=None) -> NestedResult:
+    """Deprecated front: use ``GP.bind(...).log_evidence(method="nested")``.
+
+    One-warning forwarding shim over the session API.
+    """
+    import warnings
+
+    warnings.warn(
+        "repro.core.nested.evidence_nested is deprecated; use "
+        "repro.gp.GP.bind(GPSpec(...), x, y)"
+        ".log_evidence(method='nested', key=key) instead",
+        DeprecationWarning, stacklevel=2)
+    return _evidence_nested_impl(key, cov, x, y, sigma_n, box,
+                                 n_live=n_live, n_chains=n_chains,
+                                 n_steps=n_steps, max_iter=max_iter,
+                                 jeffreys_norm=jeffreys_norm, jitter=jitter,
+                                 backend=backend, solver_opts=solver_opts)
+
+
+def _evidence_nested_impl(key, cov: Covariance, x, y, sigma_n: float,
+                          box: FlatBox, n_live: int = 400, n_chains: int = 8,
+                          n_steps: int = 16, max_iter: int = 30000,
+                          jeffreys_norm: float = 1.0,
+                          jitter: float = 1e-10, backend: str = "dense",
+                          solver_opts=None, op=None) -> NestedResult:
     """Numerical hyperevidence ln Z_num for a GP model (paper Table 1)."""
     key, kp = jax.random.split(key)
     log_l = make_gp_marg_loglik(cov, x, y, sigma_n, jeffreys_norm, jitter,
                                 backend=backend, key=kp,
-                                solver_opts=solver_opts)
+                                solver_opts=solver_opts, op=op)
     fn = jax.jit(partial(nested_sample, log_l=log_l, cov=cov, box=box,
                          n_live=n_live, n_chains=n_chains, n_steps=n_steps,
                          max_iter=max_iter))

@@ -16,7 +16,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.scipy.linalg import cho_solve, solve_triangular
+from jax.scipy.linalg import solve_triangular
 
 from .covariances import Covariance, build_K
 from . import engine as eng
@@ -34,6 +34,37 @@ def predict(cov: Covariance, theta, x, y, xstar, sigma_n: float,
             backend: str = "dense", key=None,
             solver_opts: eng.SolverOpts = eng.SolverOpts(),
             compute_var: bool = True) -> Posterior:
+    """Deprecated front: use ``repro.gp.GP.bind(...).predict(xstar)``.
+
+    One-warning forwarding shim over the session API (identical posterior;
+    the session additionally rides the SKI cross-covariance fast path on
+    near-grid data).
+    """
+    import warnings
+
+    warnings.warn(
+        "repro.core.predict.predict is deprecated; use "
+        "repro.gp.GP.bind(GPSpec(...), x, y).predict(xstar, theta=...) "
+        "instead", DeprecationWarning, stacklevel=2)
+    from ..gp import GP, GPSpec, NoiseModel, SolverPolicy
+
+    spec = GPSpec(kernel=cov, noise=NoiseModel(sigma_n=sigma_n,
+                                               jitter=jitter),
+                  solver=SolverPolicy(backend=backend, opts=solver_opts))
+    # cross="exact" pins the legacy semantics: the SKI W*-interpolated
+    # cross covariance (session default) trades a cubic-interpolation
+    # error for never materialising the (n, n*) block
+    return GP.bind(spec, x, y).predict(
+        xstar, theta=theta, include_noise=include_noise,
+        compute_var=compute_var, key=key, cross="exact")
+
+
+def _predict_impl(cov: Covariance, theta, x, y, xstar, sigma_n: float,
+                  include_noise: bool = False, jitter: float = 1e-10,
+                  backend: str = "dense", key=None,
+                  solver_opts: eng.SolverOpts = eng.SolverOpts(),
+                  compute_var: bool = True, op=None,
+                  var_chunk: int = 256, cross: str = "exact") -> Posterior:
     """Posterior mean/variance at xstar (eq. 2.1), sigma_f profiled.
 
     ``backend="iterative"`` computes the posterior MEAN fully matrix-free:
@@ -55,10 +86,14 @@ def predict(cov: Covariance, theta, x, y, xstar, sigma_n: float,
     ``SolverOpts(precond="circulant" | "pivchol")`` preconditions the CG
     solves behind both mean and variance.
     """
+    if cross not in ("exact", "interp"):    # validated for BOTH backends
+        raise ValueError(f"unknown cross mode {cross!r}; choose "
+                         f"'exact' or 'interp'")
     if backend == "iterative":
         return _predict_iterative(cov, theta, x, y, xstar, sigma_n,
                                   include_noise, jitter, solver_opts,
-                                  compute_var, key=key)
+                                  compute_var, key=key, op=op,
+                                  var_chunk=var_chunk, cross=cross)
     K = build_K(cov, theta, x, sigma_n, jitter)
     cache = hl.factorize(K, y)
     ks = cov(theta, x, xstar)                    # (n, n*)
@@ -78,14 +113,24 @@ def predict(cov: Covariance, theta, x, y, xstar, sigma_n: float,
 def _predict_iterative(cov: Covariance, theta, x, y, xstar, sigma_n: float,
                        include_noise: bool, jitter: float,
                        opts: eng.SolverOpts, compute_var: bool,
-                       key=None) -> Posterior:
-    """Matrix-free posterior (DESIGN.md §2.5).
+                       key=None, op=None, var_chunk: int = 256,
+                       cross: str = "exact") -> Posterior:
+    """Matrix-free posterior (DESIGN.md §2.5, §11).
 
     All solves go through the engine's IterativeSolver, so SolverOpts —
     including ``precond``/``precond_rank`` — apply here exactly as in
-    training.
+    training.  With ``cross="interp"`` and an SKI operator (near-grid
+    inputs), the test points are interpolated onto the SAME inducing
+    grid, so k*ᵀ(·) is another sparse W application around the grid FFT:
+    the mean costs O((n + n*) s + m log m) and the variance path builds
+    its CG right-hand sides chunk-by-chunk through the W sandwich — the
+    (n, n*) cross block is never materialised (neither as kernel
+    evaluations nor as one resident buffer), at the price of the cubic
+    interpolation error of W*.  ``cross="exact"`` (the legacy-shim
+    default) keeps the exact Pallas cross applications.
     """
     from ..kernels import ops as kops
+    from ..kernels.operators import SKIOperator
 
     kind = eng.resolve_kind(cov)
     x = jnp.asarray(x)
@@ -93,17 +138,39 @@ def _predict_iterative(cov: Covariance, theta, x, y, xstar, sigma_n: float,
     xstar = jnp.asarray(xstar)
     theta = jnp.asarray(theta)
     solver = eng.make_solver("iterative", cov, theta, x, y, sigma_n,
-                             key=key, jitter=jitter, opts=opts)
+                             key=key, jitter=jitter, opts=opts, op=op)
     s2 = solver.sigma2_hat()               # triggers the K^{-1} y solve
     alpha = solver.alpha
-    # k*^T alpha without materialising k*: one (n*, n) Pallas matvec.
-    mean = kops.matvec(kind, theta, xstar, x, alpha)
+
+    star = None
+    if cross == "interp" and isinstance(solver.op, SKIOperator):
+        star = solver.op.cross_interp(xstar)   # None: traced / off-grid x*
+    if star is not None:
+        mean = solver.op.cross_matvec(theta, star, alpha)
+    else:
+        # k*^T alpha without materialising k*: one (n*, n) Pallas matvec.
+        mean = kops.matvec(kind, theta, xstar, x, alpha)
     if not compute_var:
         return Posterior(mean=mean, var=None, sigma_f_hat=jnp.sqrt(s2))
-    ks = kops.matrix(kind, theta, x, xstar)          # (n, n*) cross block
-    w = solver.solve(ks)                             # K^{-1} k*, batched CG
+
+    n_star = int(xstar.shape[0])
+    if star is not None and n_star > 0:
+        # chunked SKI variance: per chunk, RHS = W K_grid W*ᵀ via
+        # scatter→FFT→gather, then one batched CG; working set O(n · chunk)
+        idx_s, w_s = star
+        chunks = []
+        for lo in range(0, n_star, max(int(var_chunk), 1)):
+            sl = slice(lo, min(lo + max(int(var_chunk), 1), n_star))
+            ks_c = solver.op.cross_columns(theta, (idx_s[sl], w_s[sl]))
+            w_c = solver.solve(ks_c)                 # K^{-1} k*, batched CG
+            chunks.append(jnp.sum(ks_c * w_c, axis=0))
+        quad = jnp.concatenate(chunks)
+    else:
+        ks = kops.matrix(kind, theta, x, xstar)      # (n, n*) cross block
+        w = solver.solve(ks)                         # K^{-1} k*, batched CG
+        quad = jnp.sum(ks * w, axis=0)
     # unit-scale stationary kernels: k(x*, x*) diagonal is exactly 1
-    var_unit = 1.0 - jnp.sum(ks * w, axis=0)
+    var_unit = 1.0 - quad
     if include_noise:
         var_unit = var_unit + sigma_n**2
     return Posterior(mean=mean, var=s2 * jnp.clip(var_unit, 0.0),

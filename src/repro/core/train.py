@@ -55,7 +55,8 @@ class TrainResult(NamedTuple):
 
 def make_objective(cov: Covariance, x, y, sigma_n: float, box: FlatBox,
                    jitter: float = 1e-10, backend: str = "dense",
-                   key=None, solver_opts: eng.SolverOpts = eng.SolverOpts()):
+                   key=None, solver_opts: eng.SolverOpts = eng.SolverOpts(),
+                   op=None):
     """(value, grad) and value-only callables of z, both counting one
     likelihood evaluation (one Cholesky / one CG+SLQ pass) each.
 
@@ -85,9 +86,9 @@ def make_objective(cov: Covariance, x, y, sigma_n: float, box: FlatBox,
         return value_and_grad, value
 
     vag_t = eng.value_and_grad_fn(backend, cov, x, y, sigma_n, key=key,
-                                  jitter=jitter, opts=solver_opts)
+                                  jitter=jitter, opts=solver_opts, op=op)
     val_t = eng.value_fn(backend, cov, x, y, sigma_n, key=key,
-                         jitter=jitter, opts=solver_opts)
+                         jitter=jitter, opts=solver_opts, op=op)
 
     def value_and_grad(z):
         theta = to_box(z, box)
@@ -190,6 +191,37 @@ def train(cov: Covariance, x, y, sigma_n: float, key,
           jitter: float = 1e-10, box: FlatBox | None = None,
           z0s=None, scan_points: int = 0, backend: str = "dense",
           solver_opts: eng.SolverOpts = eng.SolverOpts()) -> TrainResult:
+    """Deprecated front: use ``repro.gp.GP.bind(spec, x, y).fit(key)``.
+
+    Kept as a one-warning forwarding shim so existing call sites keep
+    working unchanged; the session API performs the same computation after
+    binding structure probes and operator selection exactly once.
+    """
+    import warnings
+
+    warnings.warn(
+        "repro.core.train.train is deprecated; use "
+        "repro.gp.GP.bind(GPSpec(...), x, y).fit(key) instead",
+        DeprecationWarning, stacklevel=2)
+    from ..gp import GP, GPSpec, NoiseModel, SolverPolicy
+
+    spec = GPSpec(kernel=cov, noise=NoiseModel(sigma_n=sigma_n,
+                                               jitter=jitter),
+                  solver=SolverPolicy(backend=backend, opts=solver_opts,
+                                      n_starts=n_starts, max_iters=max_iters,
+                                      grad_tol=grad_tol,
+                                      scan_points=scan_points))
+    gp = GP.bind(spec, x, y)
+    return gp.fit(key, box=box, z0s=z0s).result
+
+
+def _train_impl(cov: Covariance, x, y, sigma_n: float, key,
+                n_starts: int = 10, max_iters: int = 80,
+                grad_tol: float = 1e-5, jitter: float = 1e-10,
+                box: FlatBox | None = None, z0s=None, scan_points: int = 0,
+                backend: str = "dense",
+                solver_opts: eng.SolverOpts = eng.SolverOpts(),
+                op=None) -> TrainResult:
     """Paper Sec. 3a training procedure: multi-start NCG on ln P_max.
 
     ``scan_points > 0`` enables scan-seeded restarts: a vmapped uniform scan
@@ -223,7 +255,7 @@ def train(cov: Covariance, x, y, sigma_n: float, key,
                 # would defeat the O(n * probes) memory point)
                 val_t = eng.value_fn(backend, cov, x, y, sigma_n,
                                      key=jax.random.fold_in(key, 0x5eed),
-                                     jitter=jitter, opts=solver_opts)
+                                     jitter=jitter, opts=solver_opts, op=op)
                 vals = jax.jit(lambda c: jax.lax.map(val_t, c))(cand)
             top = jnp.argsort(jnp.where(jnp.isnan(vals), -jnp.inf, vals))
             top = top[-n_starts:]
@@ -243,7 +275,7 @@ def train(cov: Covariance, x, y, sigma_n: float, key,
         probe_key = jax.random.fold_in(key, 0x5eed)
         vag, val = make_objective(cov, x, y, sigma_n, box, jitter,
                                   backend=backend, key=probe_key,
-                                  solver_opts=solver_opts)
+                                  solver_opts=solver_opts, op=op)
         run = partial(_ncg_minimize, vag, val, max_iters=max_iters,
                       grad_tol=grad_tol)
         zs, fs, evals, iters = jax.jit(
@@ -258,7 +290,7 @@ def train(cov: Covariance, x, y, sigma_n: float, key,
     else:
         solver = eng.make_solver(backend, cov, theta_hat, x, y, sigma_n,
                                  key=jax.random.fold_in(key, 0x5eed),
-                                 jitter=jitter, opts=solver_opts)
+                                 jitter=jitter, opts=solver_opts, op=op)
         lp = eng.profiled_loglik(solver)
         sf_hat = jnp.sqrt(solver.sigma2_hat())
     return TrainResult(theta_hat=theta_hat, log_p_max=lp,

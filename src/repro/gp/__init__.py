@@ -1,0 +1,27 @@
+"""One front door for the paper's workflow (DESIGN.md §11).
+
+    from repro import gp
+
+    g = gp.GP.bind(gp.GPSpec(kernel="k2", noise=0.06), x, y).fit(key)
+    lnz = g.log_evidence().log_z
+    post = g.predict(xstar)
+
+    reports = gp.compare(gp.spec_bank(["k1", "k2", "se", "matern32"],
+                                      noise=gp.NoiseModel(0.06)), x, y,
+                         key=key)
+
+``GPSpec`` declares a model (kernel, noise model, hyperprior box, solver
+policy) as a frozen pytree; ``GP.bind`` performs every host-side decision
+exactly once; ``compare`` trains whole candidate banks as one batched
+program on (near-)grid data.  The legacy ``repro.core`` entry points
+remain as deprecation shims forwarding here.
+"""
+
+from .compare import compare, log_bayes_factors  # noqa: F401
+from .session import GP  # noqa: F401
+from .spec import (GPSpec, NoiseModel, SolverPolicy, as_spec,  # noqa: F401
+                   spec_bank)
+from ..core.model_compare import ModelReport  # noqa: F401
+
+__all__ = ["GP", "GPSpec", "NoiseModel", "SolverPolicy", "ModelReport",
+           "as_spec", "spec_bank", "compare", "log_bayes_factors"]

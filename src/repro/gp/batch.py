@@ -1,0 +1,623 @@
+"""Batched multi-kernel training: the whole candidate bank as ONE program.
+
+The paper's central experiment is Bayesian model comparison between
+covariance functions.  Sequentially that costs K independent trainings —
+K NCG loops, each driving its own CG/SLQ solves.  On (near-)grid data every
+candidate's Gram matrix is (a W-sandwich of) a Toeplitz matrix, fully
+described by its FIRST COLUMN, so K models differ only in the B = K spectra
+multiplying a shared FFT.  This module exploits that:
+
+  * :class:`BankOperator` — B independent training matrices
+    K_b + noise² I on ONE shared geometry (the exact grid, or the shared
+    SKI inducing grid + sparse W of near-grid inputs).  ``bind_matvec``
+    precomputes the B embedding spectra once per hyperparameter bank; each
+    subsequent matvec is ONE rfft/irfft pair over the stacked (n, B, c)
+    block — one shared launch per CG iteration, whatever K is.  Different
+    covariance FAMILIES coexist in one bank because only their first
+    columns (B length-m kernel evaluations, built outside the solve loops)
+    differ.
+  * :func:`bank_cg` — batched CG over (n, B, c) right-hand sides with
+    per-column convergence masks: converged systems freeze (alpha = 0,
+    state held) while the shared loop drives the stragglers.
+  * :func:`bank_slq_logdet` — stochastic Lanczos quadrature for all B
+    log-determinants through the same shared matvec.
+  * :func:`make_bank_objective` — padded-theta-bank profiled
+    hyperlikelihood: values (B,), gradients (B, m_max) (padded directions
+    are exact zeros, so they never move).
+  * :func:`_ncg_minimize_bank` — the multi-start NCG of
+    ``core.train`` re-written over a member axis with per-member Armijo
+    line-search masks.
+  * :func:`train_bank` — the driver: (models x restarts) flattened into
+    one bank, trained by one batched NCG program.
+
+DESIGN.md §11 records the masking rules and the launch-count contract
+(certified by a jaxpr walk in tests/test_api.py).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core import engine as eng
+from ..core import iterative as it
+from ..core.covariances import Covariance
+from ..core.engine import LOG2PI, SolverOpts
+from ..core.reparam import FlatBox, apply_ordering, flat_box, to_box
+from ..data.grid import build_inducing_grid, classify_grid, interp_weights
+from ..kernels import kernel_matvec
+from ..kernels import ops as kops
+from ..kernels.operators import _embed, interp_gather, interp_scatter
+from .spec import pad_boxes
+
+
+class BankOperator:
+    """B training matrices K_b + noise² I sharing one FFT-ready geometry.
+
+    Requires the inputs to classify "exact" (Toeplitz on the data grid) or
+    "near" (SKI on the recovered underlying grid: shared inducing grid and
+    sparse W for every member, since all members see the SAME x).  Raises
+    ``ValueError`` otherwise — the batched compare falls back to
+    sequential sessions for irregular data.
+    """
+
+    def __init__(self, kinds: Sequence[str], x, sigma_n: float = 0.0,
+                 jitter: float = 0.0, like: "BankOperator" = None):
+        for k in kinds:
+            if k not in kernel_matvec.TILE_FNS:
+                raise ValueError(
+                    f"no covariance tile registered for kind {k!r}; "
+                    f"registered: {sorted(kernel_matvec.TILE_FNS)}")
+        self.kinds = tuple(kinds)
+        self.B = len(self.kinds)
+        self.x = jnp.asarray(x)
+        self.n = int(self.x.shape[0])
+        if like is not None:
+            # reuse an existing bank's geometry (same x): skips the host
+            # probe and the inducing-grid/W construction — the one-time-
+            # bind contract for the derived stats/modes banks
+            self.idx, self.w = like.idx, like.w
+            self.structure = like.structure
+            grid = like.grid
+        else:
+            info = classify_grid(x)
+            if info.kind == "exact":
+                grid = self.x
+                self.idx = None
+                self.w = None
+            elif info.kind == "near":
+                g = build_inducing_grid(x, spacing=info.h)
+                idx, w = interp_weights(x, g)
+                grid = jnp.asarray(g, self.x.dtype)
+                self.idx = jnp.asarray(idx)
+                self.w = jnp.asarray(w, self.x.dtype)
+            else:
+                raise ValueError(
+                    "BankOperator needs 'exact' or 'near' grid structure "
+                    "(data.grid.classify_grid); irregular inputs have no "
+                    "shared FFT geometry — use sequential sessions")
+            self.structure = info.kind
+        self.grid = grid
+        self.m_grid = int(grid.shape[0])
+        self.L = 2 * self.m_grid - 2
+        self._dt0 = grid - grid[0]
+        self.sigma_n = float(sigma_n)
+        self.jitter = float(jitter)
+        self.noise2 = float(sigma_n) ** 2 + float(jitter)
+
+    # -- per-member first columns (the ONLY per-family computation) ------
+
+    def first_columns(self, thetas, dtype):
+        """k_b(grid - grid[0]) for every member: (B, m_grid).
+
+        A trace-time Python loop over members — B length-m closed-form
+        kernel evaluations, built once per theta bank, OUTSIDE the solve
+        loops.  theta rows are padded to m_max; each tile function reads
+        only its own leading m_b entries.
+        """
+        dt = self._dt0.astype(dtype)
+        cols = []
+        for i, k in enumerate(self.kinds):
+            p = kops.natural_params(k, thetas[i]).astype(dtype)
+            cols.append(kernel_matvec.TILE_FNS[k](dt, p))
+        return jnp.stack(cols)
+
+    def tangent_columns(self, thetas, dtype):
+        """d first_column_b / d theta_b for every member: (B, m_max, m_grid).
+
+        jacfwd of m scalars per member (the Toeplitz mirror of the stacked
+        Pallas tangent tile); padded directions are exact zeros.
+        """
+        dt = self._dt0.astype(dtype)
+        rows = []
+        for i, k in enumerate(self.kinds):
+            def col(th, k=k):
+                return kernel_matvec.TILE_FNS[k](
+                    dt, kops.natural_params(k, th).astype(dtype))
+
+            rows.append(jax.jacfwd(col)(thetas[i].astype(dtype)).T)
+        return jnp.stack(rows)
+
+    # -- shared sparse interpolation (identity on exact grids) -----------
+
+    def _W(self, U):
+        """(m_grid, ...) -> (n, ...): gather s nodes per point, weight."""
+        if self.idx is None:
+            return U
+        return interp_gather(self.idx, self.w, U)
+
+    def _Wt(self, V):
+        """(n, ...) -> (m_grid, ...): scatter-add into s nodes per point."""
+        if self.idx is None:
+            return V
+        return interp_scatter(self.idx, self.w, self.m_grid, V)
+
+    # -- bound applies: spectra once, one FFT pair per call --------------
+
+    def bind_matvec(self, thetas, dtype) -> Callable:
+        """(n, B, c) -> (n, B, c) bank gram matvec.
+
+        The B embedding spectra are computed HERE, once per theta bank;
+        every call then costs one shared rfft + one shared irfft over the
+        whole stacked block (plus the gather/scatter sandwich on SKI) —
+        the per-CG-iteration launch count is independent of B.
+        """
+        T = self.first_columns(thetas, dtype)
+        lam = jnp.fft.rfft(_embed(T), axis=-1)              # (B, Lf)
+        noise2 = jnp.asarray(self.noise2, dtype)
+        L, m = self.L, self.m_grid
+
+        def mv(V):
+            U = self._Wt(V)                                 # (m, B, c)
+            up = jnp.zeros((L,) + U.shape[1:], U.dtype).at[:m].set(U)
+            uhat = jnp.fft.rfft(up, axis=0)                 # (Lf, B, c)
+            KU = jnp.fft.irfft(uhat * lam.T[:, :, None], n=L,
+                               axis=0)[:m].astype(V.dtype)
+            return self._W(KU) + noise2 * V
+
+        return mv
+
+    def bind_tangent_matvecs(self, thetas, dtype) -> Callable:
+        """(n, B, c) -> (n, B, m_max, c): dK_b/dtheta_i @ V_b, all members
+        and all directions through ONE widened rfft/irfft pair."""
+        R = self.tangent_columns(thetas, dtype)             # (B, mm, m)
+        lam = jnp.fft.rfft(_embed(R), axis=-1)              # (B, mm, Lf)
+        lamT = jnp.moveaxis(lam, -1, 0)                     # (Lf, B, mm)
+        L, m = self.L, self.m_grid
+
+        def tmv(V):
+            U = self._Wt(V)                                 # (m, B, c)
+            up = jnp.zeros((L,) + U.shape[1:], U.dtype).at[:m].set(U)
+            uhat = jnp.fft.rfft(up, axis=0)                 # (Lf, B, c)
+            KU = jnp.fft.irfft(uhat[:, :, None, :] * lamT[:, :, :, None],
+                               n=L, axis=0)[:m].astype(V.dtype)
+            return self._W(KU)                              # (n, B, mm, c)
+
+        return tmv
+
+    def bind_precond(self, thetas, dtype) -> Callable:
+        """Bank circulant preconditioner: the grid-space Strang apply of
+        every member from its OWN clipped embedding spectrum (+ noise),
+        sandwiched through the shared W on SKI (DESIGN.md §10)."""
+        T = self.first_columns(thetas, dtype)
+        lam = jnp.fft.rfft(_embed(T), axis=-1).real         # (B, Lf)
+        floor = 1e-12
+        lam = jnp.clip(lam, floor * jnp.max(jnp.abs(lam), axis=-1,
+                                            keepdims=True))
+        lam = lam + jnp.asarray(self.noise2, lam.dtype)
+        L, m = self.L, self.m_grid
+
+        def apply(r):
+            U = self._Wt(r)
+            up = jnp.zeros((L,) + U.shape[1:], U.dtype).at[:m].set(U)
+            uhat = jnp.fft.rfft(up, axis=0)
+            out = jnp.fft.irfft(uhat / lam.T[:, :, None], n=L,
+                                axis=0)[:m].astype(r.dtype)
+            return self._W(out)
+
+        return apply
+
+
+# ---------------------------------------------------------------------------
+# Batched CG + SLQ over the bank
+# ---------------------------------------------------------------------------
+
+class BankCGResult(NamedTuple):
+    x: jax.Array          # (n, B, c)
+    iters: jax.Array
+    resnorm: jax.Array    # (B, c)
+
+
+def bank_cg(matvec: Callable, b, tol: float = 1e-8, max_iter: int = 800,
+            precond: Optional[Callable] = None) -> BankCGResult:
+    """Batched CG over B independent SPD systems, b (n, B, c).
+
+    Per-column convergence masks: a column whose residual has met the
+    tolerance freezes (alpha = 0, direction held) while the shared loop —
+    one bank matvec per iteration — drives the remaining systems.
+    """
+    M = precond or (lambda r: r)
+    x0 = jnp.zeros_like(b)
+    r0 = b
+    z0 = M(r0)
+    p0 = z0
+    rz0 = jnp.sum(r0 * z0, axis=0)                      # (B, c)
+    bnorm = jnp.linalg.norm(b, axis=0)
+
+    def active(r):
+        return (jnp.linalg.norm(r, axis=0)
+                > tol * jnp.maximum(bnorm, 1e-30))
+
+    def cond(s):
+        x, r, p, rz, i = s
+        return (i < max_iter) & jnp.any(active(r))
+
+    def body(s):
+        x, r, p, rz, i = s
+        act = active(r)
+        Ap = matvec(p)
+        alpha = jnp.where(act, rz / jnp.maximum(
+            jnp.sum(p * Ap, axis=0), 1e-300), 0.0)
+        x = x + alpha[None] * p
+        r = r - alpha[None] * Ap
+        z = M(r)
+        rz_new = jnp.where(act, jnp.sum(r * z, axis=0), rz)
+        beta = jnp.where(act, rz_new / jnp.maximum(rz, 1e-300), 0.0)
+        p = jnp.where(act[None], z + beta[None] * p, p)
+        return (x, r, p, rz_new, i + 1)
+
+    x, r, _, _, iters = jax.lax.while_loop(
+        cond, body, (x0, r0, p0, rz0, jnp.asarray(0, jnp.int32)))
+    res = jnp.linalg.norm(r, axis=0) / jnp.maximum(bnorm, 1e-30)
+    return BankCGResult(x=x, iters=iters, resnorm=res)
+
+
+def bank_slq_logdet(matvec: Callable, n: int, B: int, key,
+                    n_probes: int = 16, k: int = 64,
+                    dtype=jnp.float64) -> jax.Array:
+    """(B,) SLQ log-determinants through the shared bank matvec.
+
+    All B x n_probes Rademacher probes advance in lock-step through one
+    Lanczos recursion (each step = one bank matvec); per-probe Gauss
+    quadrature then averages within each member.
+    """
+    z = jax.random.rademacher(key, (n, B * n_probes)).astype(dtype)
+
+    def mv2(v):
+        return matvec(v.reshape(n, B, n_probes)).reshape(n, B * n_probes)
+
+    alphas, betas = it.lanczos(mv2, z, k)
+
+    def one(al, be):
+        T = jnp.diag(al) + jnp.diag(be, 1) + jnp.diag(be, -1)
+        lam, U = jnp.linalg.eigh(T)
+        lam = jnp.clip(lam, 1e-30)
+        return jnp.sum(U[0] ** 2 * jnp.log(lam))
+
+    vals = jax.vmap(one, in_axes=(1, 1))(alphas, betas)     # (B*p,)
+    return n * jnp.mean(vals.reshape(B, n_probes), axis=1)
+
+
+# ---------------------------------------------------------------------------
+# The padded-bank profiled hyperlikelihood objective
+# ---------------------------------------------------------------------------
+
+class BankObjective(NamedTuple):
+    """Callables over the padded theta/z banks (all batched over members).
+
+    value_and_grad_z / value_z drive the NCG (z coordinates, negated);
+    value_and_grad_theta serves the finite-difference Laplace Hessians;
+    stats_theta returns (lp, sigma2_hat); sigma2_theta is the light
+    variant (one 1-RHS CG, no SLQ) for final bookkeeping.
+    """
+
+    value_and_grad_z: Callable
+    value_z: Callable
+    value_and_grad_theta: Callable
+    stats_theta: Callable
+    sigma2_theta: Callable
+
+
+def make_bank_objective(bank: BankOperator, box: FlatBox, y, key,
+                        opts: SolverOpts = SolverOpts()) -> BankObjective:
+    """Profiled hyperlikelihood of every bank member, one shared program.
+
+    box is the PADDED (B, m_max) box; probes are FIXED per objective (the
+    engine's fixed-sample trick), shared across members so the CG
+    right-hand sides broadcast.  Gradients of padded directions are exact
+    zeros (each kernel reads only its leading m_b entries), so padded
+    coordinates never move and need no masking.
+    """
+    y = jnp.asarray(y)
+    n = y.shape[0]
+    B = bank.B
+    dtype = y.dtype
+    p = opts.n_probes
+    lo, hi = box.lo, box.hi
+    widths = hi - lo
+    zp = jax.random.rademacher(jax.random.fold_in(key, 0x5eed),
+                               (n, p)).astype(dtype)
+    slq_key = jax.random.fold_in(key, 1)
+    use_circ = opts.precond == "circulant"
+
+    def _solve(thetas, rhs):
+        mv = bank.bind_matvec(thetas, dtype)
+        M = bank.bind_precond(thetas, dtype) if use_circ else None
+        sol = bank_cg(mv, rhs, tol=opts.cg_tol, max_iter=opts.cg_max_iter,
+                      precond=M)
+        return mv, sol
+
+    def _sigma2_hat(alpha):
+        return jnp.einsum("n,nb->b", y, alpha) / n          # (B,)
+
+    def sigma2_theta(thetas):
+        rhs = jnp.broadcast_to(y[:, None, None], (n, B, 1))
+        _, sol = _solve(thetas, rhs)
+        return _sigma2_hat(sol.x[:, :, 0])
+
+    def stats_theta(thetas):
+        rhs = jnp.broadcast_to(y[:, None, None], (n, B, 1))
+        mv, sol = _solve(thetas, rhs)
+        s2 = _sigma2_hat(sol.x[:, :, 0])
+        logdet = bank_slq_logdet(mv, n, B, slq_key, n_probes=p,
+                                 k=opts.lanczos_k, dtype=dtype)
+        lp = -0.5 * n * (LOG2PI + 1.0 + jnp.log(s2)) - 0.5 * logdet
+        return lp, s2
+
+    def value_and_grad_theta(thetas):
+        rhs = jnp.concatenate([y[:, None], zp], axis=1)     # (n, 1+p)
+        rhs = jnp.broadcast_to(rhs[:, None, :], (n, B, 1 + p))
+        mv, sol = _solve(thetas, rhs)
+        alpha = sol.x[:, :, 0]                              # (n, B)
+        Kinv_z = sol.x[:, :, 1:]                            # (n, B, p)
+        s2 = _sigma2_hat(alpha)
+        logdet = bank_slq_logdet(mv, n, B, slq_key, n_probes=p,
+                                 k=opts.lanczos_k, dtype=dtype)
+        lp = -0.5 * n * (LOG2PI + 1.0 + jnp.log(s2)) - 0.5 * logdet
+        tmv = bank.bind_tangent_matvecs(thetas, dtype)
+        V = jnp.concatenate(
+            [alpha[:, :, None],
+             jnp.broadcast_to(zp[:, None, :], (n, B, p))], axis=-1)
+        dkv = tmv(V)                                        # (n, B, mm, 1+p)
+        quad = jnp.einsum("nb,nbm->bm", alpha, dkv[..., 0])
+        tr = jnp.mean(jnp.einsum("nbp,nbmp->bmp", Kinv_z, dkv[..., 1:]),
+                      axis=-1)
+        g = 0.5 * quad / s2[:, None] - 0.5 * tr             # (B, m_max)
+        return lp, g
+
+    def value_and_grad_z(Z):
+        theta = lo + widths * jax.nn.sigmoid(Z)
+        lp, g_theta = value_and_grad_theta(theta)
+        dtheta_dz = (theta - lo) * (hi - theta) / widths
+        return -lp, -(g_theta * dtheta_dz)
+
+    def value_z(Z):
+        theta = lo + widths * jax.nn.sigmoid(Z)
+        lp, _ = stats_theta(theta)
+        return -lp
+
+    return BankObjective(value_and_grad_z, value_z, value_and_grad_theta,
+                         stats_theta, sigma2_theta)
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-start NCG with per-member line-search masks
+# ---------------------------------------------------------------------------
+
+class BankNCGState(NamedTuple):
+    Z: jax.Array          # (B, m_max)
+    f: jax.Array          # (B,)
+    g: jax.Array          # (B, m_max)
+    d: jax.Array
+    step: jax.Array       # (B,)
+    n_evals: jax.Array    # scalar: batched objective calls (per member)
+    iters: jax.Array      # (B,) iterations while that member was active
+    k: jax.Array
+
+
+def _ncg_minimize_bank(value_and_grad: Callable, value: Callable, Z0,
+                       max_iters: int = 80, grad_tol: float = 1e-5,
+                       c1: float = 1e-4, shrink: float = 0.5,
+                       max_backtracks: int = 25):
+    """Polak-Ribiere+ NCG over a member axis (core.train's loop, batched).
+
+    Every objective call evaluates ALL members in lock-step (one bank
+    program); per-member masks handle the divergent control flow — each
+    member has its own Armijo backtracking state, acceptance decision,
+    restart-to-steepest-descent test and convergence freeze.
+    """
+    f0, g0 = value_and_grad(Z0)
+    f0 = jnp.where(jnp.isfinite(f0), f0, jnp.inf)
+    B = Z0.shape[0]
+    init = BankNCGState(
+        Z=Z0, f=f0, g=g0, d=-g0,
+        step=jnp.ones((B,), f0.dtype),
+        n_evals=jnp.asarray(1, jnp.int32),
+        iters=jnp.zeros((B,), jnp.int32),
+        k=jnp.asarray(0, jnp.int32))
+
+    def member_active(s: BankNCGState):
+        return (jnp.max(jnp.abs(s.g), axis=-1) > grad_tol) \
+            & jnp.isfinite(s.f)
+
+    def cond(s: BankNCGState):
+        return (s.k < max_iters) & jnp.any(member_active(s))
+
+    def body(s: BankNCGState):
+        act = member_active(s)                              # (B,)
+        gd = jnp.sum(s.g * s.d, axis=-1)
+        bad = gd >= 0.0
+        d = jnp.where(bad[:, None], -s.g, s.d)
+        gd = jnp.where(bad, -jnp.sum(s.g * s.g, axis=-1), gd)
+
+        def armijo(alpha, f_new):
+            return f_new <= s.f + c1 * alpha * gd
+
+        a0 = s.step
+        f_try = value(s.Z + a0[:, None] * d)
+        f_try = jnp.where(jnp.isnan(f_try), jnp.inf, f_try)
+
+        def ls_cond(c):
+            alpha, f_new, n_bt, j, _ = c
+            searching = (~armijo(alpha, f_new)) & act
+            return jnp.any(searching) & (j < max_backtracks)
+
+        def ls_body(c):
+            alpha, f_new, n_bt, j, ev = c
+            searching = (~armijo(alpha, f_new)) & act
+            alpha = jnp.where(searching, alpha * shrink, alpha)
+            f_eval = value(s.Z + alpha[:, None] * d)
+            f_eval = jnp.where(jnp.isnan(f_eval), jnp.inf, f_eval)
+            f_new = jnp.where(searching, f_eval, f_new)
+            n_bt = n_bt + searching.astype(jnp.int32)
+            return alpha, f_new, n_bt, j + 1, ev + 1
+
+        alpha, f_new, n_bt, _, ev = jax.lax.while_loop(
+            ls_cond, ls_body,
+            (a0, f_try, jnp.zeros((B,), jnp.int32),
+             jnp.asarray(0, jnp.int32), jnp.asarray(1, jnp.int32)))
+
+        accepted = armijo(alpha, f_new) & act
+        Z_new = jnp.where(accepted[:, None], s.Z + alpha[:, None] * d, s.Z)
+        f2, g_new = value_and_grad(Z_new)
+        yk = g_new - s.g
+        beta = jnp.maximum(jnp.sum(g_new * yk, axis=-1)
+                           / jnp.maximum(jnp.sum(s.g * s.g, axis=-1),
+                                         1e-300), 0.0)
+        d_new = -g_new + beta[:, None] * d
+        step_new = jnp.where(n_bt == 0, alpha * 2.0, alpha)
+        step_new = jnp.clip(step_new, 1e-12, 1e3)
+        return BankNCGState(
+            Z=Z_new,
+            f=jnp.where(accepted, f2, s.f),
+            g=jnp.where(act[:, None], g_new, s.g),
+            d=jnp.where(act[:, None], d_new, s.d),
+            step=jnp.where(act, step_new, s.step),
+            n_evals=s.n_evals + ev + 1,
+            iters=s.iters + act.astype(jnp.int32),
+            k=s.k + 1)
+
+    out = jax.lax.while_loop(cond, body, init)
+    return out.Z, out.f, out.n_evals, out.iters
+
+
+# ---------------------------------------------------------------------------
+# The driver: (models x restarts) -> one batched NCG program
+# ---------------------------------------------------------------------------
+
+class BankTrainResult(NamedTuple):
+    names: tuple                   # model names, length K
+    theta_hat: jax.Array           # (K, m_max) best peak per model (padded)
+    log_p_max: jax.Array           # (K,)
+    sigma_f_hat: jax.Array         # (K,)
+    n_evals: jax.Array             # (K,) likelihood evaluations per model
+    theta_all: jax.Array           # (R, K, m_max) per-restart peaks
+    log_p_all: jax.Array           # (R, K)
+    iters_all: jax.Array           # (R, K)
+    m_params: tuple                # per-model hyperparameter counts
+    bank: "BankOperator"           # the training bank (geometry reusable
+    # via BankOperator(..., like=result.bank) — no re-probe downstream)
+
+
+def train_bank(covs: Sequence[Covariance], x, y, sigma_n: float, key,
+               boxes: Optional[Sequence[FlatBox]] = None,
+               n_starts: int = 10, max_iters: int = 80,
+               grad_tol: float = 1e-5, jitter: float = 1e-8,
+               opts: SolverOpts = SolverOpts()) -> BankTrainResult:
+    """Train the whole candidate bank as ONE batched program.
+
+    The bank has B = n_starts * K members (restart r of model k at flat
+    index r * K + k); every NCG step drives one shared FFT matvec launch
+    per CG iteration across all of them.  Restart seeds mirror
+    ``core.train``'s central-box uniform scheme, drawn per model from
+    ``fold_in(key, k)``.
+    """
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    covs = list(covs)
+    K = len(covs)
+    kinds = [eng.resolve_kind(c) for c in covs]
+    ms = tuple(c.n_params for c in covs)
+    m_max = max(ms)
+    if boxes is None:
+        boxes = [flat_box(c, x) for c in covs]
+    pbox = pad_boxes(boxes, m_max)                       # (K, m_max)
+    R = n_starts
+
+    # flat bank: member b = r * K + k
+    kinds_full = tuple(kinds) * R
+    lo_full = jnp.tile(pbox.lo, (R, 1)).astype(x.dtype)
+    hi_full = jnp.tile(pbox.hi, (R, 1)).astype(x.dtype)
+    box_full = FlatBox(lo_full, hi_full)
+
+    z0s = []
+    for k_i, c in enumerate(covs):
+        u = jax.random.uniform(jax.random.fold_in(key, k_i),
+                               (R, c.n_params), minval=0.05, maxval=0.95,
+                               dtype=x.dtype)
+        z = jnp.log(u) - jnp.log1p(-u)
+        z0s.append(jnp.pad(z, ((0, 0), (0, m_max - c.n_params))))
+    Z0 = jnp.stack(z0s, axis=1).reshape(R * K, m_max)    # (B, m_max)
+
+    bank = BankOperator(kinds_full, x, sigma_n, jitter)
+    obj = make_bank_objective(bank, box_full, y,
+                              jax.random.fold_in(key, 0x5eed), opts)
+    run = jax.jit(partial(_ncg_minimize_bank, obj.value_and_grad_z,
+                          obj.value_z, max_iters=max_iters,
+                          grad_tol=grad_tol))
+    Z, f, n_eval_calls, iters = run(Z0)
+
+    thetas = to_box(Z, box_full)                         # (B, m_max)
+    thetas = jnp.stack([apply_ordering(covs[b % K], thetas[b])
+                        for b in range(R * K)])
+    theta_all = thetas.reshape(R, K, m_max)
+    log_p_all = -f.reshape(R, K)
+    iters_all = iters.reshape(R, K)
+
+    fK = f.reshape(R, K)
+    best = jnp.nanargmin(jnp.where(jnp.isnan(fK), jnp.inf, fK),
+                         axis=0)                         # (K,)
+    theta_hat = theta_all[best, jnp.arange(K)]           # (K, m_max)
+    # ln P_max at the peak: the NCG's own final values (apply_ordering
+    # leaves the likelihood invariant), no re-evaluation needed
+    lp_hat = log_p_all[best, jnp.arange(K)]
+
+    # sigma_f_hat still needs K^{-1}y at the peaks: ONE light batched CG
+    # (no SLQ) on a K-member bank sharing the training bank's geometry
+    bank_k = BankOperator(tuple(kinds), x, sigma_n, jitter, like=bank)
+    obj_k = make_bank_objective(bank_k, FlatBox(pbox.lo.astype(x.dtype),
+                                                pbox.hi.astype(x.dtype)),
+                                y, jax.random.fold_in(key, 0x5eed), opts)
+    s2_hat = jax.jit(obj_k.sigma2_theta)(theta_hat)
+
+    n_evals = jnp.full((K,), int(n_eval_calls) * R + 1, jnp.int32)
+    return BankTrainResult(
+        names=tuple(c.name for c in covs), theta_hat=theta_hat,
+        log_p_max=lp_hat, sigma_f_hat=jnp.sqrt(s2_hat), n_evals=n_evals,
+        theta_all=theta_all, log_p_all=log_p_all, iters_all=iters_all,
+        m_params=ms, bank=bank)
+
+
+def bank_fd_hessians(value_and_grad_theta: Callable, thetas,
+                     step: float = 1e-4) -> jax.Array:
+    """(M, m_max, m_max) central-difference Hessians for a whole bank.
+
+    2 * m_max batched gradient evaluations cover EVERY member's Hessian
+    (the sequential path costs 2 m per mode per model); fixed probes make
+    the differences smooth exactly as in ``engine.fd_hessian``.  Callers
+    slice the leading (m_k, m_k) block per member — padded rows/columns
+    are identically zero.
+    """
+    thetas = jnp.asarray(thetas)
+    m_max = thetas.shape[1]
+    eye = jnp.eye(m_max, dtype=thetas.dtype)
+    cols = []
+    for i in range(m_max):
+        _, gp_ = value_and_grad_theta(thetas + step * eye[i][None])
+        _, gm_ = value_and_grad_theta(thetas - step * eye[i][None])
+        cols.append((gp_ - gm_) / (2.0 * step))          # (M, m_max)
+    H = jnp.stack(cols, axis=1)                          # (M, m_max, m_max)
+    return 0.5 * (H + jnp.swapaxes(H, 1, 2))

@@ -1,0 +1,255 @@
+"""Model comparison through the front door (paper Secs. 2-3, DESIGN.md §11).
+
+``compare(specs, x, y, key=...)`` evaluates a bank of candidate kernels on
+one data set and returns the familiar :class:`ModelReport` list.  Two
+execution strategies:
+
+  * **batched** (``batch="auto"``/``"on"``): the whole candidate bank —
+    every model x restart — trains as ONE program (:mod:`repro.gp.batch`):
+    padded theta banks, per-member convergence masks, and one shared
+    Toeplitz/SKI FFT matvec launch per CG iteration instead of K
+    sequential trainings.  The Laplace stage batches too: ALL models'
+    alias modes are Hessianed together in 2 * m_max bank-gradient
+    evaluations.  Eligible when the inputs classify "exact"/"near"
+    (shared FFT geometry), every kernel has a registered tile, and the
+    specs share noise + solver policy.
+  * **sequential** (``batch="off"`` or ineligible): one bound session per
+    spec — the paper-faithful reference path (and the only one for
+    irregular inputs, dense-only covariances or ``run_nested``-style
+    baselines, which are never batched).
+
+``batch="auto"`` batches when eligible and every spec resolves to the
+iterative backend; ``"on"`` forces (raising if ineligible); ``"off"``
+forces sequential.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import engine as eng
+from ..core import laplace as _laplace
+from ..core import hyperlik as hl
+from ..core.model_compare import ModelReport, log_bayes_factors
+from ..core.reparam import flat_box, log_prior_volume
+from ..data.grid import classify_grid
+from ..kernels import kernel_matvec
+from . import batch as _batch
+from .session import GP
+from .spec import GPSpec, as_spec
+
+__all__ = ["compare", "log_bayes_factors", "batchable"]
+
+# log_bayes_factors is re-exported from core.model_compare (one impl).
+
+
+def batchable(specs: Sequence[GPSpec], x) -> bool:
+    """True when the candidate bank can train as one batched program."""
+    if len(specs) < 2:
+        return False
+    if classify_grid(x).kind not in ("exact", "near"):
+        return False
+    first = specs[0]
+    for s in specs:
+        if s.name not in kernel_matvec.TILE_FNS:
+            return False
+        if s.noise != first.noise or s.solver != first.solver:
+            return False
+        # explicit operator overrides pin a structure the bank may not have
+        if s.solver.opts.operator is not None:
+            return False
+        # the bank preconditions with its own circulant spectra only;
+        # honouring an explicit pivchol request needs the sequential path
+        if s.solver.opts.precond not in (None, "circulant"):
+            return False
+    return True
+
+
+def compare(specs: Sequence[Union[GPSpec, str]], x, y, key=None,
+            run_nested: bool = False, n_live: int = 400,
+            nested_max_iter: int = 20000,
+            batch: str = "auto") -> list[ModelReport]:
+    """Compare candidate covariances by Laplace hyperevidence.
+
+    specs: GPSpec bank (``spec_bank``) or kernel names/Covariances (each
+    coerced via default noise/solver — pass real specs to control those).
+    The per-model noise/solver policy lives IN the specs; ``run_nested``
+    adds the nested-sampling baseline (always sequential).
+    """
+    if key is None:
+        key = jax.random.key(0)
+    specs = [as_spec(s) for s in specs]
+    if batch not in ("auto", "on", "off"):
+        raise ValueError(f"unknown batch mode {batch!r}; choose "
+                         f"'auto', 'on' or 'off'")
+    n = int(jnp.asarray(y).shape[0])
+    backend_ok = all(s.solver.resolve_backend(n) == "iterative"
+                     for s in specs)
+    eligible = batchable(specs, x) and backend_ok
+    if batch == "on" and run_nested:
+        raise ValueError(
+            "batch='on' is incompatible with run_nested=True: the "
+            "nested-sampling baseline is never batched — use batch='auto' "
+            "or 'off' when requesting it")
+    if batch == "on" and not eligible:
+        raise ValueError(
+            "batch='on' but the candidate bank cannot run batched: needs "
+            ">= 2 specs sharing noise + solver policy, every spec "
+            "resolving to the iterative backend, registered kernel tiles, "
+            "no explicit operator override, precond None|'circulant' and "
+            "inputs classifying 'exact'/'near' (data.grid.classify_grid)")
+    if batch != "off" and eligible and not run_nested:
+        return _compare_batched(specs, x, y, key)
+    return _compare_sequential(specs, x, y, key, run_nested=run_nested,
+                               n_live=n_live,
+                               nested_max_iter=nested_max_iter)
+
+
+# ---------------------------------------------------------------------------
+# Sequential reference path (one session per spec)
+# ---------------------------------------------------------------------------
+
+def _compare_sequential(specs, x, y, key, run_nested=False, n_live=400,
+                        nested_max_iter=20000) -> list[ModelReport]:
+    reports = []
+    for spec in specs:
+        key, kt, kl, kn = jax.random.split(key, 4)
+        gp = GP.bind(spec, x, y).fit(kt)
+        tr = gp.result
+        n_evals = int(tr.n_evals)
+        if spec.solver.multimodal:
+            mm = gp.log_evidence(key=kl, multimodal=True)
+            log_z = float(mm.log_z)
+            lap = mm.best
+            n_modes = mm.n_modes
+            n_evals += n_modes            # one Hessian evaluation per mode
+        else:
+            lap = gp.log_evidence(key=kl, multimodal=False)
+            log_z = float(lap.log_z)
+            n_modes = 1
+            n_evals += 1
+        rep = ModelReport(
+            name=spec.name,
+            theta_hat=tr.theta_hat,
+            sigma_f_hat=float(tr.sigma_f_hat),
+            log_p_max=float(tr.log_p_max),
+            log_z_laplace=log_z,
+            errors=lap.errors if lap is not None else jnp.asarray([]),
+            n_evals_train=n_evals,
+            n_modes=n_modes,
+        )
+        if run_nested:
+            ns = gp.log_evidence(method="nested", key=kn, n_live=n_live,
+                                 max_iter=nested_max_iter)
+            rep.log_z_nested = float(ns.log_z)
+            rep.log_z_nested_err = float(ns.log_z_err)
+            rep.n_evals_nested = int(ns.n_evals)
+        reports.append(rep)
+    return reports
+
+
+# ---------------------------------------------------------------------------
+# Batched path (the paper's central experiment as ONE program)
+# ---------------------------------------------------------------------------
+
+def _compare_batched(specs, x, y, key) -> list[ModelReport]:
+    """Train + Laplace the whole bank with batched programs.
+
+    Training: :func:`repro.gp.batch.train_bank` (one NCG over all
+    model x restart members).  Evidence: alias modes of ALL models are
+    deduplicated host-side, stacked into one modes bank, and Hessianed by
+    2 * m_max batched central-difference gradient evaluations; per-mode
+    evidences then logsumexp within each model (DESIGN.md §2.7 semantics,
+    batched).
+    """
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    n = int(y.shape[0])
+    pol = specs[0].solver
+    noise = specs[0].noise
+    jitter = noise.jitter_for("iterative")
+    covs = [s.cov for s in specs]
+    K = len(covs)
+    boxes = [s.box if s.box is not None else flat_box(s.cov, x)
+             for s in specs]
+    key, kt, kl = jax.random.split(key, 3)
+
+    tr = _batch.train_bank(covs, x, y, noise.sigma_n, kt, boxes=boxes,
+                           n_starts=pol.n_starts, max_iters=pol.max_iters,
+                           grad_tol=pol.grad_tol, jitter=jitter,
+                           opts=pol.opts)
+    m_max = tr.theta_hat.shape[1]
+
+    # -- collect modes per model (host-side dedupe, as in laplace §2.7)
+    modes_per_model: list[list[np.ndarray]] = []
+    for k_i in range(K):
+        if pol.multimodal:
+            modes = _laplace.dedupe_modes(tr.theta_all[:, k_i],
+                                          tr.log_p_all[:, k_i])
+        else:
+            modes = [np.asarray(tr.theta_hat[k_i])]
+        if not modes:                     # all restarts degenerate
+            modes = [np.asarray(tr.theta_hat[k_i])]
+        modes_per_model.append(modes)
+
+    owners = [k_i for k_i, ms in enumerate(modes_per_model) for _ in ms]
+    mode_thetas = jnp.asarray(np.stack(
+        [m for ms in modes_per_model for m in ms]))          # (M, m_max)
+    mode_kinds = tuple(eng.resolve_kind(covs[k_i]) for k_i in owners)
+
+    # -- one modes bank: values + 2*m_max batched fd-Hessian evaluations
+    # (geometry reused from the training bank — no re-probe, no W rebuild)
+    mbank = _batch.BankOperator(mode_kinds, x, noise.sigma_n, jitter,
+                                like=tr.bank)
+    mbox = _batch.pad_boxes([boxes[k_i] for k_i in owners], m_max)
+    mobj = _batch.make_bank_objective(
+        mbank, mbox, y, jax.random.fold_in(kl, 0x5eed), pol.opts)
+    lp_modes, _ = jax.jit(mobj.stats_theta)(mode_thetas)     # (M,)
+    H = _batch.bank_fd_hessians(jax.jit(mobj.value_and_grad_theta),
+                                mode_thetas, step=pol.opts.fd_step)
+
+    mconst = hl.marginal_const(n)
+    log_vs = [log_prior_volume(covs[k_i], boxes[k_i]) for k_i in range(K)]
+    mode_log_z = []
+    mode_errors = []
+    for j, k_i in enumerate(owners):
+        m_k = tr.m_params[k_i]
+        Hj = -H[j][:m_k, :m_k]
+        lz, _ = _laplace._laplace_log_z(lp_modes[j] + mconst,
+                                        log_vs[k_i], Hj)
+        mode_log_z.append(float(lz))
+        lam = jnp.linalg.eigvalsh(Hj)
+        if bool(jnp.all(lam > 0)):
+            errors = jnp.sqrt(jnp.clip(
+                jnp.diagonal(jnp.linalg.inv(Hj)), 0.0))
+        else:
+            errors = jnp.full((m_k,), jnp.nan)
+        mode_errors.append(errors)
+
+    reports = []
+    pos = 0
+    for k_i, spec in enumerate(specs):
+        n_modes = len(modes_per_model[k_i])
+        lz_modes = np.asarray(mode_log_z[pos:pos + n_modes])
+        errs = mode_errors[pos:pos + n_modes]
+        pos += n_modes
+        log_z = _laplace.logsumexp_modes(lz_modes)
+        best_j = (int(np.nanargmax(np.where(np.isfinite(lz_modes),
+                                            lz_modes, -np.inf)))
+                  if np.isfinite(lz_modes).any() else 0)
+        m_k = tr.m_params[k_i]
+        reports.append(ModelReport(
+            name=spec.name,
+            theta_hat=tr.theta_hat[k_i][:m_k],
+            sigma_f_hat=float(tr.sigma_f_hat[k_i]),
+            log_p_max=float(tr.log_p_max[k_i]),
+            log_z_laplace=log_z,
+            errors=errs[best_j],
+            n_evals_train=int(tr.n_evals[k_i]) + n_modes,
+            n_modes=n_modes,
+        ))
+    return reports

@@ -1,0 +1,243 @@
+"""The GP session object: one front door for the paper's whole workflow.
+
+``GP.bind(spec, x, y)`` performs the host-side work exactly once — grid
+classification, linear-operator selection, backend resolution, hyperprior
+box derivation — and returns a session whose methods (``fit``,
+``log_evidence``, ``predict``, ``sample``, ``log_likelihood``) are thin,
+consistently-parameterised fronts over the numerical impls in
+:mod:`repro.core`.  Sessions are immutable: ``fit`` returns a NEW session
+carrying the :class:`~repro.core.train.TrainResult`, so a bound session
+can be fitted under several keys without interference.
+
+    spec = GPSpec(kernel="k2", noise=NoiseModel(sigma_n=0.06))
+    gp = GP.bind(spec, x, y).fit(jax.random.key(0))
+    lnz = gp.log_evidence().log_z
+    post = gp.predict(xstar)
+
+See DESIGN.md §11 for the API contract and the one-time-bind lifecycle.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import engine as eng
+from ..core import laplace as _laplace
+from ..core import nested as _nested
+from ..core import predict as _predict
+from ..core import train as _train
+from ..core.covariances import Covariance
+from ..core.reparam import FlatBox, flat_box
+from ..kernels import operators as kopers
+from .spec import GPSpec
+
+
+class GP:
+    """A GPSpec bound to one data set (construct via :meth:`bind`)."""
+
+    def __init__(self, spec: GPSpec, x, y, box: FlatBox, backend: str,
+                 jitter: float, kind: Optional[str], op, result=None):
+        self.spec = spec
+        self.x = x
+        self.y = y
+        self.box = box
+        self.backend = backend
+        self.jitter = jitter
+        self.kind = kind
+        self.op = op
+        self.result = result          # TrainResult after fit()
+
+    # ------------------------------------------------------------------
+    # binding
+    # ------------------------------------------------------------------
+    @classmethod
+    def bind(cls, spec: GPSpec, x, y) -> "GP":
+        """Bind a spec to data; all host-side decisions happen HERE, once.
+
+        * backend resolution ("auto" -> dense/iterative by data size);
+        * hyperprior box derivation (paper eqs. 3.4-3.5) if the spec does
+          not pin one;
+        * structure probe + linear-operator selection (Toeplitz / SKI /
+          Pallas; DESIGN.md §9-§10) for the iterative backend — including
+          the SKI inducing grid and sparse W construction;
+        * spec validation (unknown kernels/backends/preconditioners have
+          already raised at spec construction).
+
+        The traced program of any later method contains only the chosen
+        structure; no method re-probes.  ``bind`` is jit-compatible when
+        ``x``/``y`` are closed-over concrete arrays (a traced ``x``
+        conservatively classifies "irregular").
+        """
+        x = jnp.asarray(x)
+        y = jnp.asarray(y)
+        cov = spec.cov
+        n = int(y.shape[0])
+        backend = spec.solver.resolve_backend(n)
+        jitter = spec.noise.jitter_for(backend)
+        box = spec.box if spec.box is not None else flat_box(cov, x)
+        kind = None
+        op = None
+        if backend == "iterative":
+            kind = eng.resolve_kind(cov)
+            op = kopers.select_operator(kind, x, float(spec.noise.sigma_n),
+                                        float(jitter),
+                                        operator=spec.solver.opts.operator)
+        return cls(spec, x, y, box, backend, jitter, kind, op)
+
+    # ------------------------------------------------------------------
+    # properties
+    # ------------------------------------------------------------------
+    @property
+    def cov(self) -> Covariance:
+        return self.spec.cov
+
+    @property
+    def n(self) -> int:
+        return int(self.y.shape[0])
+
+    @property
+    def operator_name(self) -> str:
+        """The bound structure: "dense" or the LinearOperator name."""
+        return self.op.name if self.op is not None else "dense"
+
+    @property
+    def theta_hat(self):
+        if self.result is None:
+            raise ValueError("session is not fitted; call fit(key) first "
+                             "or pass theta= explicitly")
+        return self.result.theta_hat
+
+    def __repr__(self):
+        fitted = "fitted" if self.result is not None else "unfitted"
+        return (f"GP({self.spec.name!r}, n={self.n}, "
+                f"backend={self.backend!r}, "
+                f"operator={self.operator_name!r}, {fitted})")
+
+    # ------------------------------------------------------------------
+    # the workflow
+    # ------------------------------------------------------------------
+    def fit(self, key, n_starts: Optional[int] = None,
+            max_iters: Optional[int] = None,
+            grad_tol: Optional[float] = None,
+            scan_points: Optional[int] = None,
+            box: Optional[FlatBox] = None, z0s=None) -> "GP":
+        """Multi-start NCG on the profiled hyperlikelihood (paper Sec. 3a).
+
+        Budget arguments default to the spec's :class:`SolverPolicy`;
+        ``scan_points=None`` there means the auto rule (256 scan
+        evaluations per hyperparameter on the dense path, none on the
+        iterative path).  Returns a NEW fitted session.
+        """
+        pol = self.spec.solver
+        sp = scan_points if scan_points is not None else pol.scan_points
+        if sp is None:
+            sp = (256 * self.cov.n_params if self.backend == "dense" else 0)
+        fit_box = box if box is not None else self.box
+        res = _train._train_impl(
+            self.cov, self.x, self.y, self.spec.noise.sigma_n, key,
+            n_starts=n_starts if n_starts is not None else pol.n_starts,
+            max_iters=max_iters if max_iters is not None else pol.max_iters,
+            grad_tol=grad_tol if grad_tol is not None else pol.grad_tol,
+            jitter=self.jitter, box=fit_box,
+            z0s=z0s, scan_points=sp, backend=self.backend,
+            solver_opts=pol.opts, op=self.op)
+        # the fitted session carries the box it was actually trained in —
+        # log_evidence's Occam volume must match the peaks' prior support
+        return GP(self.spec, self.x, self.y, fit_box, self.backend,
+                  self.jitter, self.kind, self.op, result=res)
+
+    def log_likelihood(self, theta, key=None):
+        """ln P_max(theta) (eq. 2.16) through the bound backend."""
+        solver = eng.make_solver(
+            self.backend, self.cov, jnp.asarray(theta), self.x, self.y,
+            self.spec.noise.sigma_n,
+            key=key if key is not None else jax.random.key(0),
+            jitter=self.jitter, opts=self.spec.solver.opts, op=self.op)
+        return eng.profiled_loglik(solver)
+
+    def log_evidence(self, method: str = "laplace", key=None, theta=None,
+                     multimodal: Optional[bool] = None,
+                     jeffreys_norm: float = 1.0, **nested_kw):
+        """Hyperevidence ln Z (eq. 2.13 Laplace, or the nested baseline).
+
+        method="laplace": at an explicit ``theta`` the single-mode
+        profiled estimate; otherwise the session must be fitted, and
+        ``multimodal`` (default: the spec policy) selects the alias-mode
+        sum over the restart peaks (DESIGN.md §2.7).
+        method="nested": the MultiNest-family numerical baseline;
+        ``nested_kw`` forwards n_live / n_chains / n_steps / max_iter.
+        """
+        pol = self.spec.solver
+        sigma_n = self.spec.noise.sigma_n
+        if method == "laplace":
+            if theta is not None:
+                return _laplace._evidence_profiled_impl(
+                    self.cov, theta, self.x, self.y, sigma_n, self.box,
+                    jeffreys_norm=jeffreys_norm, jitter=self.jitter,
+                    backend=self.backend, key=key, solver_opts=pol.opts,
+                    op=self.op)
+            mm = pol.multimodal if multimodal is None else multimodal
+            res = self.result
+            if res is None:
+                raise ValueError("log_evidence() needs a fitted session or "
+                                 "an explicit theta=")
+            if mm:
+                return _laplace._evidence_multimodal_impl(
+                    self.cov, res.theta_all, res.log_p_all, self.x, self.y,
+                    sigma_n, self.box, jeffreys_norm=jeffreys_norm,
+                    jitter=self.jitter, backend=self.backend, key=key,
+                    solver_opts=pol.opts, op=self.op)
+            return _laplace._evidence_profiled_impl(
+                self.cov, res.theta_hat, self.x, self.y, sigma_n, self.box,
+                jeffreys_norm=jeffreys_norm, jitter=self.jitter,
+                backend=self.backend, key=key, solver_opts=pol.opts,
+                op=self.op)
+        if method == "nested":
+            if key is None:
+                raise ValueError("log_evidence(method='nested') needs key=")
+            return _nested._evidence_nested_impl(
+                key, self.cov, self.x, self.y, sigma_n, self.box,
+                jeffreys_norm=jeffreys_norm, jitter=self.jitter,
+                backend=self.backend, solver_opts=pol.opts, op=self.op,
+                **nested_kw)
+        raise ValueError(f"unknown evidence method {method!r}; choose "
+                         f"'laplace' or 'nested'")
+
+    def predict(self, xstar, theta=None, compute_var: bool = True,
+                include_noise: Optional[bool] = None, key=None,
+                var_chunk: int = 256, cross: str = "interp"):
+        """Posterior mean/variance at xstar (eq. 2.1), sigma_f profiled.
+
+        Uses the fitted peak unless ``theta`` overrides.  On the iterative
+        backend all solves ride the bound operator; near-grid sessions
+        (SKI) additionally interpolate the TEST points onto the same
+        inducing grid (``cross="interp"``, the default), so the
+        cross-covariance is a sparse W application and no (n, n*) block
+        is materialised (DESIGN.md §11) — accurate to the cubic
+        interpolation error of W*.  ``cross="exact"`` keeps the exact
+        Pallas cross applications (the legacy shims' behaviour).
+        """
+        th = theta if theta is not None else self.theta_hat
+        inc = (self.spec.noise.include_noise if include_noise is None
+               else include_noise)
+        return _predict._predict_impl(
+            self.cov, th, self.x, self.y, xstar, self.spec.noise.sigma_n,
+            include_noise=inc, jitter=self.jitter, backend=self.backend,
+            key=key, solver_opts=self.spec.solver.opts,
+            compute_var=compute_var, op=self.op, var_chunk=var_chunk,
+            cross=cross)
+
+    def sample(self, key, xstar, n_draws: int = 1, theta=None):
+        """Joint posterior draws at xstar (paper Fig. 1 usage).
+
+        Dense path regardless of backend (a joint draw needs the full
+        (n*, n*) predictive covariance factorised) — intended for
+        visualisation-sized xstar.
+        """
+        th = theta if theta is not None else self.theta_hat
+        return _predict.draw_posterior(key, self.cov, th, self.x, self.y,
+                                       xstar, self.spec.noise.sigma_n,
+                                       n_draws=n_draws)

@@ -1,0 +1,183 @@
+"""Declarative GP model specification (DESIGN.md §11).
+
+A :class:`GPSpec` is the single, frozen description of a GP model: WHICH
+covariance family, WHAT noise model, WHERE the flat hyperprior box sits,
+and HOW to solve (backend, operator, preconditioner, optimisation budget).
+It is registered as a JAX pytree — the hyperprior box arrays are leaves,
+everything else is static aux data — so specs can cross ``jit``/``vmap``
+boundaries, and a BANK of specs is just a stacked pytree (the enabler for
+the vmap-batched multi-kernel comparison in :mod:`repro.gp.batch`).
+
+Binding a spec to data (:meth:`repro.gp.GP.bind`) performs every host-side
+decision exactly once: grid classification, operator selection, backend
+resolution, preconditioner policy validation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..core import covariances as C
+from ..core.covariances import Covariance
+from ..core.engine import BACKENDS, SolverOpts
+from ..core.iterative import PRECONDITIONERS
+from ..core.reparam import FlatBox
+
+
+class NoiseModel(NamedTuple):
+    """Fixed observation-noise model (the paper's fractional sigma_n).
+
+    sigma_n sits inside the profiled sigma_f^2 envelope (paper eq. 3.1);
+    ``jitter`` is the numerical diagonal (None -> per-backend default:
+    1e-10 dense, 1e-8 iterative); ``include_noise`` sets the default for
+    predictive variances.
+    """
+
+    sigma_n: float = 0.1
+    jitter: Optional[float] = None
+    include_noise: bool = False
+
+    def jitter_for(self, backend: str) -> float:
+        if self.jitter is not None:
+            return float(self.jitter)
+        return 1e-10 if backend == "dense" else 1e-8
+
+
+class SolverPolicy(NamedTuple):
+    """How a bound session solves: backend + engine knobs + NCG budget.
+
+    backend: "auto" picks dense below ``dense_cutoff`` data points and the
+    matrix-free iterative engine above it.  ``scan_points=None`` means the
+    compare-style default (256 scan evaluations per hyperparameter on the
+    dense path, none on the iterative path); pass an int to pin it.
+    """
+
+    backend: str = "auto"
+    opts: SolverOpts = SolverOpts()
+    n_starts: int = 10
+    max_iters: int = 80
+    grad_tol: float = 1e-5
+    scan_points: Optional[int] = None
+    multimodal: bool = True
+    dense_cutoff: int = 2048
+
+    def resolve_backend(self, n: int) -> str:
+        if self.backend == "auto":
+            return "dense" if n <= self.dense_cutoff else "iterative"
+        return self.backend
+
+
+def _registered_kinds():
+    return sorted(C.REGISTRY)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class GPSpec:
+    """Frozen, pytree-registered description of one GP model.
+
+    kernel: a registered covariance name (``repro.core.covariances.
+      REGISTRY``) or a :class:`Covariance` object (for custom kernels —
+      dense backend only unless a matching tile is registered).
+    box: flat-hyperprior box; None derives the paper's data-dependent box
+      at bind time (eqs. 3.4-3.5).
+    noise: :class:`NoiseModel` (a bare float is promoted to one).
+    solver: :class:`SolverPolicy`.
+
+    Pytree layout: ``box`` arrays are leaves; kernel/noise/solver are
+    static aux data, so two specs differing only in box values share one
+    compiled program.
+    """
+
+    kernel: Union[str, Covariance]
+    box: Optional[FlatBox] = None
+    noise: NoiseModel = NoiseModel()
+    solver: SolverPolicy = SolverPolicy()
+
+    def __post_init__(self):
+        if isinstance(self.noise, (int, float)):
+            object.__setattr__(self, "noise",
+                               NoiseModel(sigma_n=float(self.noise)))
+        if isinstance(self.kernel, str) and self.kernel not in C.REGISTRY:
+            raise ValueError(
+                f"unknown covariance kind {self.kernel!r}; registered "
+                f"kinds: {_registered_kinds()} (or pass a Covariance "
+                f"object)")
+        if self.solver.backend not in ("auto",) + BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.solver.backend!r}; choose from "
+                f"{('auto',) + BACKENDS}")
+        pc = self.solver.opts.precond
+        if pc is not None and pc not in PRECONDITIONERS:
+            raise ValueError(
+                f"unknown preconditioner {pc!r}; choose from "
+                f"{PRECONDITIONERS} or None")
+        if self.box is not None and not isinstance(self.box, FlatBox):
+            object.__setattr__(self, "box", FlatBox(*self.box))
+
+    # -- covariance resolution ------------------------------------------
+    @property
+    def cov(self) -> Covariance:
+        return (C.REGISTRY[self.kernel] if isinstance(self.kernel, str)
+                else self.kernel)
+
+    @property
+    def name(self) -> str:
+        return self.kernel if isinstance(self.kernel, str) \
+            else self.kernel.name
+
+    def with_box(self, box: FlatBox) -> "GPSpec":
+        return dataclasses.replace(self, box=box)
+
+    # -- pytree protocol ------------------------------------------------
+    def tree_flatten(self):
+        return (self.box,), (self.kernel, self.noise, self.solver)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kernel, noise, solver = aux
+        return cls(kernel=kernel, box=children[0], noise=noise,
+                   solver=solver)
+
+
+def as_spec(model, noise: Optional[NoiseModel] = None,
+            solver: Optional[SolverPolicy] = None) -> GPSpec:
+    """Coerce a kernel name / Covariance / GPSpec into a GPSpec.
+
+    Existing specs pass through untouched (their own noise/solver win);
+    names and Covariance objects pick up the supplied defaults.
+    """
+    if isinstance(model, GPSpec):
+        return model
+    return GPSpec(kernel=model,
+                  noise=noise if noise is not None else NoiseModel(),
+                  solver=solver if solver is not None else SolverPolicy())
+
+
+def spec_bank(kernels: Sequence[Union[str, Covariance, GPSpec]],
+              noise: Optional[NoiseModel] = None,
+              solver: Optional[SolverPolicy] = None) -> Tuple[GPSpec, ...]:
+    """A candidate bank for :func:`repro.gp.compare`: one spec per kernel,
+    sharing a noise model and solver policy."""
+    return tuple(as_spec(k, noise=noise, solver=solver) for k in kernels)
+
+
+def pad_boxes(boxes: Sequence[FlatBox], m_max: int) -> FlatBox:
+    """Stack per-model boxes into one (K, m_max) padded box.
+
+    Padded dimensions get the (0, 1) unit interval: their widths stay
+    finite (no division hazards in the box-sigmoid chain rule) and the
+    kernels never read them, so their gradients are exactly zero and the
+    padded coordinates simply never move.
+    """
+    los, his = [], []
+    for b in boxes:
+        m = b.lo.shape[0]
+        los.append(jnp.concatenate([b.lo, jnp.zeros(m_max - m,
+                                                    b.lo.dtype)]))
+        his.append(jnp.concatenate([b.hi, jnp.ones(m_max - m, b.hi.dtype)]))
+    return FlatBox(jnp.stack(los), jnp.stack(his))

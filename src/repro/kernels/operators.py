@@ -308,6 +308,24 @@ class ToeplitzOperator(_StationaryColumnAccess):
 # Off-grid fast path: structured kernel interpolation (SKI)
 # ---------------------------------------------------------------------------
 
+def interp_gather(idx, w, U):
+    """W u — (m_grid, ...) -> (n, ...): gather s nodes per row, weight, sum.
+
+    The CSR-style sparse interpolation apply shared by SKIOperator and the
+    batched BankOperator (gp/batch.py); idx/w are the (n, s) trace-time
+    constants of ``data.grid.interp_weights``, and any number of trailing
+    batch dims rides along.
+    """
+    w = w.astype(U.dtype).reshape(w.shape + (1,) * (U.ndim - 1))
+    return jnp.sum(w * U[idx], axis=1)
+
+
+def interp_scatter(idx, w, m_grid: int, V):
+    """Wᵀ v — (n, ...) -> (m_grid, ...): scatter-add each point's s nodes."""
+    w = w.astype(V.dtype).reshape(w.shape + (1,) * (V.ndim - 1))
+    return jnp.zeros((m_grid,) + V.shape[1:], V.dtype).at[idx].add(
+        w * V[:, None])
+
 class SKIOperator:
     """K ≈ W K_grid Wᵀ: the Toeplitz/FFT fast path for OFF-grid inputs.
 
@@ -364,14 +382,11 @@ class SKIOperator:
 
     def _W(self, u):
         """(m_grid, b) -> (n, b): gather s nodes per row, weight, sum."""
-        w = self.w.astype(u.dtype)
-        return jnp.sum(w[:, :, None] * u[self.idx], axis=1)
+        return interp_gather(self.idx, self.w, u)
 
     def _Wt(self, v):
         """(n, b) -> (m_grid, b): scatter-add each point into its s nodes."""
-        w = self.w.astype(v.dtype)
-        return jnp.zeros((self.m_grid, v.shape[1]), v.dtype).at[
-            self.idx].add(w[:, :, None] * v[:, None, :])
+        return interp_scatter(self.idx, self.w, self.m_grid, v)
 
     def matvec(self, theta, v):
         squeeze = v.ndim == 1
@@ -392,6 +407,47 @@ class SKIOperator:
         T = self._toep.tangent_matvecs(theta, self._Wt(V))   # (m, m_grid, b)
         out = jax.vmap(self._W)(T)                           # (m, n, b)
         return out[:, :, 0] if squeeze else out
+
+    # -- cross-covariance on the SAME inducing grid (prediction fast path)
+
+    def cross_interp(self, xstar):
+        """Host-side interpolation of TEST points onto the SAME inducing
+        grid: returns ``(idx*, w*)`` — the sparse rows of W* with
+        k(x*, x) ≈ W* K_grid Wᵀ — or None when ``xstar`` is traced or its
+        stencil leaves the grid (callers fall back to the exact cross
+        matvec).  Like W itself this runs host-side once; the arrays enter
+        traced programs as constants.
+        """
+        try:
+            idx, w = interp_weights(xstar, self.grid, order=self.order)
+        except ValueError:
+            return None
+        return jnp.asarray(idx), jnp.asarray(w, self.x.dtype)
+
+    def cross_matvec(self, theta, xstar_interp, v):
+        """k(x*, x) @ v ≈ W* K_grid (Wᵀ v): two sparse applications around
+        ONE grid-space Toeplitz FFT — O((n + n*) s + m log m), the
+        prediction-mean path (no (n*, n) cross block, no O(n n*) kernel
+        evaluations)."""
+        idx_s, w_s = xstar_interp
+        squeeze = v.ndim == 1
+        if squeeze:
+            v = v[:, None]
+        u = self._toep.matvec(theta, self._Wt(v))            # (m_grid, b)
+        out = interp_gather(idx_s, w_s, u)
+        return out[:, 0] if squeeze else out
+
+    def cross_columns(self, theta, xstar_interp):
+        """Cross block k(x, x*) ≈ W K_grid W*ᵀ for a CHUNK of test points,
+        (n, c), built by scatter → stacked grid FFT → gather in
+        O(c (s + m log m)) — no pairwise kernel evaluations.  Serves as the
+        right-hand sides of the predictive-variance CG solves; callers
+        chunk over x* so no (n, n*) block ever exists at once."""
+        idx_s, w_s = xstar_interp                            # (c, s)
+        c = idx_s.shape[0]
+        wst = jnp.zeros((self.m_grid, c), self.x.dtype).at[
+            idx_s, jnp.arange(c)[:, None]].add(w_s)          # W*ᵀ, sparse
+        return self._W(self._toep.matvec(theta, wst))        # (n, c)
 
     # -- preconditioner access hooks
 
@@ -549,14 +605,19 @@ def select_operator(kind: str, x, sigma_n: float = 0.0, jitter: float = 0.0,
         interpolation approximation is acceptable.
 
     The probe inspects concrete coordinates host-side; traced x always
-    classifies "irregular".
+    classifies "irregular".  Unknown covariance kinds raise a clear
+    ``ValueError`` naming the registered kinds (previously they fell
+    through to the Pallas constructor's bare KeyError).
     """
+    if kind not in kernel_matvec.TILE_FNS:
+        raise ValueError(
+            f"no covariance tile registered for kind {kind!r}; the "
+            f"matrix-free operators support {sorted(kernel_matvec.TILE_FNS)}")
     if operator is not None:
         return make_operator(operator, kind, x, sigma_n, jitter)
-    if kind in kernel_matvec.TILE_FNS:
-        info = classify_grid(x, rtol=rtol)
-        if info.kind == "exact":
-            return ToeplitzOperator(kind, x, sigma_n, jitter, rtol=rtol)
-        if info.kind == "near":
-            return SKIOperator(kind, x, sigma_n, jitter, spacing=info.h)
+    info = classify_grid(x, rtol=rtol)
+    if info.kind == "exact":
+        return ToeplitzOperator(kind, x, sigma_n, jitter, rtol=rtol)
+    if info.kind == "near":
+        return SKIOperator(kind, x, sigma_n, jitter, spacing=info.h)
     return PallasTileOperator(kind, x, sigma_n, jitter)

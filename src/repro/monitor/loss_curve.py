@@ -22,11 +22,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import covariances as C
-from ..core import laplace, predict, train
 from ..core.reparam import FlatBox, flat_box
+from ..gp import GP, GPSpec, NoiseModel, SolverPolicy
 
 COV = C.MATERN32
 SIGMA_N = 0.2
+
+_POLICY = SolverPolicy(backend="dense", n_starts=4, max_iters=30,
+                       scan_points=0, multimodal=False)
 
 
 class Smoothed(NamedTuple):
@@ -35,23 +38,22 @@ class Smoothed(NamedTuple):
     theta: np.ndarray
 
 
-def _fit(x, yn, key):
-    box = flat_box(COV, x)
-    res = train.train(COV, x, yn, SIGMA_N, key, n_starts=4, max_iters=30,
-                      jitter=1e-8, box=box)
-    return res, box
+def _fit(x, yn, key, box: FlatBox | None = None):
+    spec = GPSpec(kernel=COV, box=box if box is not None else flat_box(COV, x),
+                  noise=NoiseModel(sigma_n=SIGMA_N, jitter=1e-8),
+                  solver=_POLICY)
+    return GP.bind(spec, x, yn).fit(key)
 
 
 def smooth(losses: Sequence[float], key=None) -> Smoothed:
     y = jnp.asarray(np.asarray(losses, np.float64))
     x = jnp.arange(y.shape[0], dtype=jnp.float64)
     mu, sd = jnp.mean(y), jnp.std(y) + 1e-12
-    res, _ = _fit(x, (y - mu) / sd, key or jax.random.key(0))
-    post = predict.predict(COV, res.theta_hat, x, (y - mu) / sd, x, SIGMA_N,
-                           include_noise=False, jitter=1e-8)
+    sess = _fit(x, (y - mu) / sd, key or jax.random.key(0))
+    post = sess.predict(x, include_noise=False)
     return Smoothed(mean=np.asarray(post.mean * sd + mu),
                     std=np.asarray(jnp.sqrt(post.var) * sd),
-                    theta=np.asarray(res.theta_hat))
+                    theta=np.asarray(sess.theta_hat))
 
 
 def divergence(losses: Sequence[float], k_sigma: float = 4.0,
@@ -65,11 +67,10 @@ def divergence(losses: Sequence[float], k_sigma: float = 4.0,
     x = jnp.arange(hist.shape[0], dtype=jnp.float64)
     mu, sd = jnp.mean(hist), jnp.std(hist) + 1e-12
     yn = (hist - mu) / sd
-    res, _ = _fit(x, yn, key or jax.random.key(0))
+    sess = _fit(x, yn, key or jax.random.key(0))
     xq = jnp.arange(hist.shape[0], hist.shape[0] + recent,
                     dtype=jnp.float64)
-    post = predict.predict(COV, res.theta_hat, x, yn, xq, SIGMA_N,
-                           include_noise=True, jitter=1e-8)
+    post = sess.predict(xq, include_noise=True)
     z = ((y[-recent:] - float(mu)) / float(sd) - np.asarray(post.mean)) \
         / np.sqrt(np.asarray(post.var) + 1e-12)
     return bool(np.mean(z) > k_sigma)
@@ -93,11 +94,8 @@ def compare_runs(losses_a: Sequence[float], losses_b: Sequence[float],
         mu, sd = jnp.mean(y), jnp.std(y) + 1e-12
         yn = (y - mu) / sd
         box = flat_box(COV, x + 1e-3 * jnp.arange(x.shape[0]))
-        res = train.train(COV, x, yn, SIGMA_N, k, n_starts=4, max_iters=30,
-                          jitter=1e-8, box=box)
-        lap = laplace.evidence_profiled(COV, res.theta_hat, x, yn, SIGMA_N,
-                                        box, jitter=1e-8)
-        return float(lap.log_z)
+        sess = _fit(x, yn, k, box=box)
+        return float(sess.log_evidence().log_z)
 
     k1, k2, k3 = jax.random.split(key, 3)
     z_pool = evidence(pooled_x[order], pooled_y[order], k1)

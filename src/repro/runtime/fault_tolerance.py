@@ -35,7 +35,8 @@ import numpy as np
 from jax.sharding import Mesh
 
 from ..core import covariances as cov_lib
-from ..core import hyperlik, train as gp_train
+from ..core import hyperlik
+from ..gp import GP, GPSpec, NoiseModel, SolverPolicy
 from ..core.reparam import flat_box
 
 
@@ -96,25 +97,24 @@ class GPStragglerDetector:
         mu = jnp.mean(y)
         sd = jnp.std(y) + 1e-12
         yn = (y - mu) / sd
-        cov = cov_lib.MATERN32
-        res = gp_train.train(cov, x, yn, sigma_n=0.3, key=jax.random.key(0),
-                             n_starts=4, max_iters=30, jitter=1e-8)
-        return {"cov": cov, "theta": res.theta_hat, "x": x, "yn": yn,
-                "mu": mu, "sd": sd, "sigma_f": res.sigma_f_hat}
+        spec = GPSpec(kernel=cov_lib.MATERN32,
+                      noise=NoiseModel(sigma_n=0.3, jitter=1e-8),
+                      solver=SolverPolicy(backend="dense", n_starts=4,
+                                          max_iters=30, scan_points=0))
+        sess = GP.bind(spec, x, yn).fit(jax.random.key(0))
+        return {"sess": sess, "mu": mu, "sd": sd,
+                "sigma_f": sess.result.sigma_f_hat}
 
     def stragglers(self, step_times: Dict[int, List[float]]) -> List[int]:
         fit = self.fit_fleet(step_times)
         if fit is None:
             return []
-        from ..core import predict as gp_predict
         out = []
         for h, ts in step_times.items():
             if len(ts) < self.recent:
                 continue
             t = np.arange(len(ts) - self.recent, len(ts), dtype=np.float64)
-            post = gp_predict.predict(fit["cov"], fit["theta"], fit["x"],
-                                      fit["yn"], jnp.asarray(t), 0.3,
-                                      include_noise=True)
+            post = fit["sess"].predict(jnp.asarray(t), include_noise=True)
             resid = ((np.asarray(ts[-self.recent:]) - float(fit["mu"]))
                      / float(fit["sd"]) - np.asarray(post.mean))
             z = resid / np.sqrt(np.asarray(post.var) + 1e-12)

@@ -27,8 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import covariances as C
-from ..core import laplace, predict, train
 from ..core.reparam import FlatBox
+from ..gp import GP, GPSpec, NoiseModel, SolverPolicy
 
 ZOO = (C.SE, C.MATERN32, C.MATERN52)
 
@@ -67,19 +67,23 @@ class GPTuner:
         mu, sd = jnp.mean(y), jnp.std(y) + 1e-12
         return x, (y - mu) / sd, float(mu), float(sd)
 
-    # ---- the paper: fit + model comparison ----
+    def _spec(self, cov) -> GPSpec:
+        box = self._box if cov.n_params == 1 else self._box2
+        return GPSpec(kernel=cov, box=box,
+                      noise=NoiseModel(sigma_n=self.sigma_n, jitter=1e-8),
+                      solver=SolverPolicy(backend="dense", n_starts=6,
+                                          max_iters=40, scan_points=0,
+                                          multimodal=False))
+
+    # ---- the paper: fit + model comparison (via the gp front door) ----
     def refit(self, key) -> TunerState:
         x, yn, mu, sd = self._xy()
         best = None
         for cov in ZOO:
-            box = self._box if cov.n_params == 1 else self._box2
-            res = train.train(cov, x, yn, self.sigma_n, key, n_starts=6,
-                              max_iters=40, jitter=1e-8, box=box)
-            lap = laplace.evidence_profiled(cov, res.theta_hat, x, yn,
-                                            self.sigma_n, box, jitter=1e-8)
-            lz = float(lap.log_z)
+            g = GP.bind(self._spec(cov), x, yn).fit(key)
+            lz = float(g.log_evidence().log_z)
             if np.isfinite(lz) and (best is None or lz > best[0]):
-                best = (lz, cov, np.asarray(res.theta_hat))
+                best = (lz, cov, np.asarray(g.theta_hat))
         if best is None:   # degenerate data: keep previous fit
             return self.state
         self.state.log_z, covb, self.state.theta = best
@@ -95,9 +99,8 @@ class GPTuner:
         x, yn, mu, sd = self._xy()
         cov = C.REGISTRY[self.state.cov_name]
         cand = jax.random.uniform(kc, (self.n_candidates, self.n_dims))
-        post = predict.predict(cov, jnp.asarray(self.state.theta), x, yn,
-                               cand, self.sigma_n, include_noise=False,
-                               jitter=1e-8)
+        post = GP.bind(self._spec(cov), x, yn).predict(
+            cand, theta=jnp.asarray(self.state.theta), include_noise=False)
         best_y = jnp.min(yn)
         s = jnp.sqrt(post.var + 1e-12)
         z = (best_y - post.mean - self.explore) / s

@@ -1,0 +1,498 @@
+"""Tests for the gp front door (GPSpec / GP / compare; DESIGN.md §11).
+
+Covers: the spec pytree contract (flatten round-trip, jit through
+GP.bind), dense-vs-iterative parity through the front door, batched vs
+sequential `compare` agreement, the batched bank's one-shared-launch
+jaxpr contract, the SKI cross-covariance prediction path and its memory
+contract, deprecation shims (one warning, identical outputs), the
+unknown-kind ValueError surfaces, preconditioner plumbing through
+predict, and the public-API snapshot.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import gp
+from repro.core import covariances as C
+from repro.core import engine as E
+from repro.core import hyperlik as hl
+from repro.core.reparam import flat_box
+from repro.gp import batch as B
+from repro.gp.spec import pad_boxes
+from repro.kernels import operators as OPS
+
+
+def _grid_data(n=64, h=0.5, period=6.0, noise=0.1, seed=3):
+    x = jnp.arange(n, dtype=jnp.float64) * h
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(np.sin(2 * np.pi * np.asarray(x) / period)
+                    + noise * rng.normal(size=n))
+    return x, y
+
+
+def _gappy_data(n_full=300, h=2.0, drop=0.2, period=24.0, noise=0.2,
+                seed=0):
+    rng = np.random.default_rng(seed)
+    grid = np.arange(n_full, dtype=np.float64) * h
+    x = jnp.asarray(grid[rng.uniform(size=n_full) > drop])
+    y = jnp.asarray(np.sin(2 * np.pi * np.asarray(x) / period)
+                    + noise * rng.normal(size=x.shape[0]))
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# GPSpec pytree contract
+# ---------------------------------------------------------------------------
+
+def test_spec_pytree_roundtrip():
+    spec = gp.GPSpec(kernel="k1", noise=gp.NoiseModel(0.1))
+    leaves, treedef = jax.tree_util.tree_flatten(spec)
+    assert leaves == []                      # no box -> no array leaves
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert back.kernel == "k1" and back.noise == spec.noise
+
+    x, _ = _grid_data()
+    spec2 = spec.with_box(flat_box(C.K1, x))
+    leaves2, td2 = jax.tree_util.tree_flatten(spec2)
+    assert [a.shape for a in leaves2] == [(3,), (3,)]
+    back2 = jax.tree_util.tree_unflatten(td2, leaves2)
+    assert back2.kernel == spec2.kernel
+    np.testing.assert_array_equal(np.asarray(back2.box.lo),
+                                  np.asarray(spec2.box.lo))
+    # static aux: same kernel/noise/solver -> same treedef (one compile)
+    assert td2 == jax.tree_util.tree_flatten(
+        spec.with_box(flat_box(C.K1, x * 2.0)))[1]
+
+
+def test_spec_jit_through_bind():
+    x, y = _grid_data()
+    theta = jnp.asarray([4.0, 2.5, 0.05])
+    spec = gp.GPSpec(kernel="k1",
+                     noise=gp.NoiseModel(0.1)).with_box(flat_box(C.K1, x))
+
+    @jax.jit
+    def f(s, th):
+        return gp.GP.bind(s, x, y).log_likelihood(th)
+
+    want = gp.GP.bind(spec, x, y).log_likelihood(theta)
+    np.testing.assert_allclose(float(f(spec, theta)), float(want),
+                               rtol=1e-12)
+
+
+def test_spec_validation_errors():
+    with pytest.raises(ValueError, match="registered kinds"):
+        gp.GPSpec(kernel="not_a_kernel")
+    with pytest.raises(ValueError, match="backend"):
+        gp.GPSpec(kernel="k1", solver=gp.SolverPolicy(backend="quantum"))
+    with pytest.raises(ValueError, match="preconditioner"):
+        gp.GPSpec(kernel="k1", solver=gp.SolverPolicy(
+            opts=E.SolverOpts(precond="nope")))
+
+
+def test_unknown_kind_value_errors():
+    """resolve_kind / select_operator raise ValueError naming the
+    registered kinds instead of silently falling through (small fix)."""
+    with pytest.raises(ValueError, match="registered kinds"):
+        E.resolve_kind(C.RQ)                 # no tile for rq
+    with pytest.raises(ValueError, match="registered"):
+        OPS.select_operator("rq", jnp.arange(8.0))
+    with pytest.raises(ValueError, match="registered"):
+        E.make_solver("iterative", C.RQ, jnp.zeros(2), jnp.arange(8.0),
+                      jnp.zeros(8), 0.1)
+
+
+# ---------------------------------------------------------------------------
+# Front-door parity and the three-line workflow
+# ---------------------------------------------------------------------------
+
+def test_dense_vs_iterative_parity_through_front_door():
+    x, y = _grid_data(n=96)
+    theta = jnp.asarray([4.0, 2.5, 0.05])
+    opts = E.SolverOpts(n_probes=24, lanczos_k=80, cg_tol=1e-11,
+                        cg_max_iter=400)
+    gd = gp.GP.bind(gp.GPSpec(kernel="k1", noise=gp.NoiseModel(0.1)), x, y)
+    gi = gp.GP.bind(gp.GPSpec(kernel="k1", noise=gp.NoiseModel(0.1),
+                              solver=gp.SolverPolicy(backend="iterative",
+                                                     opts=opts)), x, y)
+    assert gd.backend == "dense" and gi.backend == "iterative"
+    assert gi.operator_name == "toeplitz"    # bound once at bind time
+    lp_d = float(gd.log_likelihood(theta))
+    lp_i = float(gi.log_likelihood(theta, key=jax.random.key(7)))
+    assert abs(lp_d - lp_i) / max(abs(lp_d), 1.0) < 0.05
+    xs = jnp.linspace(float(x[4]), float(x[-4]), 9)
+    pd_ = gd.predict(xs, theta=theta)
+    pi_ = gi.predict(xs, theta=theta)
+    np.testing.assert_allclose(np.asarray(pi_.mean), np.asarray(pd_.mean),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(pi_.var), np.asarray(pd_.var),
+                               rtol=1e-4, atol=1e-8)
+
+
+def test_fit_evidence_predict_three_liner():
+    x, y = _grid_data(n=72)
+    sess = gp.GP.bind(gp.GPSpec(kernel="se", noise=gp.NoiseModel(0.1)),
+                      x, y).fit(jax.random.key(0), n_starts=3,
+                                max_iters=30, scan_points=0)
+    lz = sess.log_evidence()
+    post = sess.predict(jnp.linspace(1.0, 30.0, 5))
+    assert np.isfinite(float(sess.result.log_p_max))
+    assert np.isfinite(float(lz.log_z))
+    assert np.all(np.isfinite(np.asarray(post.mean)))
+    assert np.all(np.asarray(post.var) >= 0.0)
+    draws = sess.sample(jax.random.key(1), jnp.linspace(1.0, 30.0, 4),
+                        n_draws=3)
+    assert draws.shape == (3, 4)
+
+
+# ---------------------------------------------------------------------------
+# Batched compare: agreement + the one-shared-launch contract
+# ---------------------------------------------------------------------------
+
+KERNEL_BANK = ("se", "matern12", "matern32", "matern52")
+
+
+def test_compare_batch_mode_contracts():
+    """batch='on' raises (not silently degrades) when the bank cannot run
+    batched: with run_nested, with a pivchol precond, or off-grid."""
+    x, y = _grid_data(n=32)
+    pol = gp.SolverPolicy(backend="iterative")
+    specs = gp.spec_bank(["se", "matern32"], noise=gp.NoiseModel(0.1),
+                         solver=pol)
+    with pytest.raises(ValueError, match="run_nested"):
+        gp.compare(specs, x, y, batch="on", run_nested=True)
+    pv = gp.SolverPolicy(backend="iterative",
+                         opts=E.SolverOpts(precond="pivchol"))
+    with pytest.raises(ValueError, match="cannot run batched"):
+        gp.compare(gp.spec_bank(["se", "matern32"],
+                                noise=gp.NoiseModel(0.1), solver=pv),
+                   x, y, batch="on")
+    rng = np.random.default_rng(0)
+    xr = jnp.asarray(np.sort(rng.uniform(0, 30, 32)))
+    with pytest.raises(ValueError, match="cannot run batched"):
+        gp.compare(specs, xr, y, batch="on")
+    with pytest.raises(ValueError, match="batch mode"):
+        gp.compare(specs, x, y, batch="sometimes")
+
+
+def test_batched_compare_agrees_with_sequential():
+    """Same data, same key: the batched bank and the sequential sessions
+    must pick the same winning model, and the ln B factors must agree
+    within the stochastic-estimator noise (SLQ/Hutchinson probes differ
+    between the two paths; seeds are fixed, so this is deterministic)."""
+    x, y = _grid_data(n=64)
+    opts = E.SolverOpts(n_probes=8, lanczos_k=32, cg_tol=1e-9,
+                        cg_max_iter=200)
+    pol = gp.SolverPolicy(backend="iterative", opts=opts, n_starts=3,
+                          max_iters=30, multimodal=False)
+    specs = gp.spec_bank(KERNEL_BANK, noise=gp.NoiseModel(0.1), solver=pol)
+    rb = gp.compare(specs, x, y, key=jax.random.key(0), batch="on")
+    rs = gp.compare(specs, x, y, key=jax.random.key(0), batch="off")
+    zb = np.asarray([r.log_z_laplace for r in rb])
+    zs = np.asarray([r.log_z_laplace for r in rs])
+    assert np.all(np.isfinite(zb)) and np.all(np.isfinite(zs))
+    lnb_b = zb[:, None] - zb[None, :]
+    lnb_s = zs[:, None] - zs[None, :]
+    assert np.max(np.abs(lnb_b - lnb_s)) < 12.0
+    assert int(np.argmax(zb)) == int(np.argmax(zs))
+    # peaks are interchangeable under the EXACT evaluator: the dense
+    # ln P_max at each path's peak must agree closely per model
+    for b_, s_ in zip(rb, rs):
+        cov = C.REGISTRY[b_.name]
+        lp_b = float(hl.profiled_loglik(cov, jnp.asarray(b_.theta_hat),
+                                        x, y, 0.1, 1e-8)[0])
+        lp_s = float(hl.profiled_loglik(cov, jnp.asarray(s_.theta_hat),
+                                        x, y, 0.1, 1e-8)[0])
+        assert abs(lp_b - lp_s) < 1.5, (b_.name, lp_b, lp_s)
+
+
+def _all_avals(jaxpr):
+    from jax.core import ClosedJaxpr, Jaxpr
+    seen = []
+
+    def walk(j):
+        for v in list(j.invars) + list(j.outvars) + list(j.constvars):
+            if hasattr(v, "aval"):
+                seen.append(v.aval)
+        for eqn in j.eqns:
+            for v in list(eqn.invars) + list(eqn.outvars):
+                if hasattr(v, "aval"):
+                    seen.append(v.aval)
+            for p in eqn.params.values():
+                for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                    if isinstance(sub, ClosedJaxpr):
+                        walk(sub.jaxpr)
+                    elif isinstance(sub, Jaxpr):
+                        walk(sub)
+
+    walk(jaxpr)
+    return seen
+
+
+def _loop_fft_counts(jaxpr):
+    """fft-eqn count for every loop body (while/scan) in the program."""
+    from jax.core import ClosedJaxpr, Jaxpr
+    counts = []
+
+    def count_ffts(j):
+        c = 0
+        for eqn in j.eqns:
+            if eqn.primitive.name == "fft":
+                c += 1
+            for p in eqn.params.values():
+                for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                    if isinstance(sub, ClosedJaxpr):
+                        c += count_ffts(sub.jaxpr)
+                    elif isinstance(sub, Jaxpr):
+                        c += count_ffts(sub)
+        return c
+
+    def walk(j):
+        for eqn in j.eqns:
+            if eqn.primitive.name in ("while", "scan"):
+                for p in eqn.params.values():
+                    for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                        if isinstance(sub, ClosedJaxpr):
+                            counts.append(count_ffts(sub.jaxpr))
+            else:
+                for p in eqn.params.values():
+                    for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                        if isinstance(sub, ClosedJaxpr):
+                            walk(sub.jaxpr)
+                        elif isinstance(sub, Jaxpr):
+                            walk(sub)
+
+    walk(jaxpr)
+    return counts
+
+
+def _bank_objective_jaxpr(kinds, n):
+    x = jnp.arange(n, dtype=jnp.float64) * 2.0
+    y = jnp.sin(0.1 * x)
+    covs = [C.REGISTRY[k] for k in kinds]
+    m_max = max(c.n_params for c in covs)
+    bank = B.BankOperator(tuple(kinds), x, 0.1, 1e-8)
+    pbox = pad_boxes([flat_box(c, x) for c in covs], m_max)
+    obj = B.make_bank_objective(
+        bank, pbox, y, jax.random.key(0),
+        E.SolverOpts(n_probes=4, lanczos_k=8, cg_max_iter=10))
+    thetas = 0.5 * (pbox.lo + pbox.hi)
+    return jax.make_jaxpr(obj.value_and_grad_theta)(thetas)
+
+
+def test_batched_bank_one_shared_matvec_launch_n4096():
+    """The acceptance contract: at n = 4096 the bank objective's CG (and
+    Lanczos) loop bodies contain ONE shared FFT matvec — the same two fft
+    ops whether the bank holds 1 model or 4 — and no (n, n)-sized
+    intermediate exists anywhere (trace only; nothing is executed)."""
+    n = 4096
+    jx4 = _bank_objective_jaxpr(KERNEL_BANK, n)
+    jx1 = _bank_objective_jaxpr(("se",), n)
+    counts4 = [c for c in _loop_fft_counts(jx4.jaxpr) if c > 0]
+    counts1 = [c for c in _loop_fft_counts(jx1.jaxpr) if c > 0]
+    assert counts4, "no FFT-bearing loops found — walker broken?"
+    # per CG/Lanczos iteration: exactly one rfft + one irfft, regardless
+    # of how many models the bank holds
+    assert all(c == 2 for c in counts4), counts4
+    assert counts4 == counts1
+    big = [a for a in _all_avals(jx4.jaxpr)
+           if hasattr(a, "shape") and list(a.shape).count(n) >= 2]
+    assert not big, sorted({tuple(a.shape) for a in big})
+
+
+# ---------------------------------------------------------------------------
+# SKI prediction cross-covariance (ROADMAP satellite)
+# ---------------------------------------------------------------------------
+
+def test_ski_predict_cross_covariance_matches_dense():
+    x, y = _gappy_data()
+    theta = jnp.asarray([5.0, jnp.log(24.0), 0.05])
+    xs = jnp.linspace(float(x[0]) + 1.3, float(x[-1]) - 1.3, 96)
+    opts = E.SolverOpts(n_probes=4, lanczos_k=16, cg_tol=1e-11,
+                        cg_max_iter=800, precond="circulant")
+    gi = gp.GP.bind(gp.GPSpec(kernel="k1", noise=gp.NoiseModel(0.2),
+                              solver=gp.SolverPolicy(backend="iterative",
+                                                     opts=opts)), x, y)
+    assert gi.operator_name == "ski"
+    pd_ = gp.GP.bind(gp.GPSpec(kernel="k1", noise=gp.NoiseModel(0.2)),
+                     x, y).predict(xs, theta=theta)
+    pi_ = gi.predict(xs, theta=theta, var_chunk=32)
+    np.testing.assert_allclose(np.asarray(pi_.mean), np.asarray(pd_.mean),
+                               atol=1e-2)
+    np.testing.assert_allclose(np.asarray(pi_.var), np.asarray(pd_.var),
+                               rtol=0.1)
+
+
+def test_ski_predict_never_materialises_cross_block():
+    """With test points interpolated onto the inducing grid and the
+    variance solved in chunks, no (n, n*) buffer exists in the traced
+    program (the satellite's memory contract)."""
+    from repro.core import predict as P
+
+    x, y = _gappy_data()
+    n = int(x.shape[0])
+    n_star = 96
+    theta = jnp.asarray([5.0, jnp.log(24.0), 0.05])
+    xs = jnp.linspace(float(x[0]) + 1.3, float(x[-1]) - 1.3, n_star)
+    opts = E.SolverOpts(n_probes=4, lanczos_k=8, cg_max_iter=10)
+    op = OPS.select_operator("k1", x, 0.2, 1e-8)
+    assert op.name == "ski"
+
+    def f(yy):
+        post = P._predict_impl(C.K1, theta, x, yy, xs, 0.2,
+                               backend="iterative", solver_opts=opts,
+                               op=op, var_chunk=32, cross="interp")
+        return post.mean, post.var
+
+    jaxpr = jax.make_jaxpr(f)(y)
+    bad = [a for a in _all_avals(jaxpr.jaxpr)
+           if hasattr(a, "shape") and n in a.shape and n_star in a.shape]
+    assert not bad, sorted({tuple(a.shape) for a in bad})
+
+
+def test_predict_plumbs_preconditioner(monkeypatch):
+    """SolverOpts.precond reaches the CG behind predict (small fix)."""
+    from repro.core import iterative as it
+
+    seen = []
+    orig = it.make_preconditioner
+
+    def spy(op, theta, precond=None, precond_rank=0):
+        seen.append(precond)
+        return orig(op, theta, precond, precond_rank)
+
+    monkeypatch.setattr(it, "make_preconditioner", spy)
+    x, y = _gappy_data()
+    opts = E.SolverOpts(n_probes=2, lanczos_k=8, cg_tol=1e-8,
+                        cg_max_iter=200, precond="circulant")
+    sess = gp.GP.bind(gp.GPSpec(kernel="k1", noise=gp.NoiseModel(0.2),
+                                solver=gp.SolverPolicy(
+                                    backend="iterative", opts=opts)), x, y)
+    theta = jnp.asarray([5.0, jnp.log(24.0), 0.05])
+    xs = jnp.linspace(float(x[0]) + 1.3, float(x[-1]) - 1.3, 8)
+    post = sess.predict(xs, theta=theta, var_chunk=8)
+    assert np.all(np.isfinite(np.asarray(post.var)))
+    assert seen and all(p == "circulant" for p in seen)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: one warning, identical outputs
+# ---------------------------------------------------------------------------
+
+def _one_deprecation(record):
+    deps = [w for w in record if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1, [str(w.message) for w in record]
+
+
+def test_train_shim_warns_once_and_matches():
+    from repro.core import train as T
+
+    x, y = _grid_data(n=48)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        old = T.train(C.K1, x, y, 0.1, jax.random.key(0), n_starts=2,
+                      max_iters=10)
+    _one_deprecation(rec)
+    new = gp.GP.bind(
+        gp.GPSpec(kernel=C.K1, noise=gp.NoiseModel(0.1),
+                  solver=gp.SolverPolicy(n_starts=2, max_iters=10,
+                                         scan_points=0)),
+        x, y).fit(jax.random.key(0)).result
+    np.testing.assert_array_equal(np.asarray(old.theta_hat),
+                                  np.asarray(new.theta_hat))
+    assert float(old.log_p_max) == float(new.log_p_max)
+    assert int(old.n_evals) == int(new.n_evals)
+
+
+def test_predict_shim_warns_once_and_matches():
+    from repro.core import predict as P
+
+    x, y = _grid_data(n=48)
+    theta = jnp.asarray([4.0, 2.5, 0.05])
+    xs = jnp.linspace(1.0, 20.0, 7)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        old = P.predict(C.K1, theta, x, y, xs, 0.1)
+    _one_deprecation(rec)
+    new = gp.GP.bind(gp.GPSpec(kernel=C.K1, noise=gp.NoiseModel(0.1)),
+                     x, y).predict(xs, theta=theta)
+    np.testing.assert_array_equal(np.asarray(old.mean),
+                                  np.asarray(new.mean))
+    np.testing.assert_array_equal(np.asarray(old.var), np.asarray(new.var))
+
+
+def test_evidence_shim_warns_once_and_matches():
+    from repro.core import laplace as L
+
+    x, y = _grid_data(n=48)
+    theta = jnp.asarray([4.0, 2.5, 0.05])
+    box = flat_box(C.K1, x)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        old = L.evidence_profiled(C.K1, theta, x, y, 0.1, box)
+    _one_deprecation(rec)
+    new = gp.GP.bind(gp.GPSpec(kernel=C.K1, noise=gp.NoiseModel(0.1),
+                               box=box), x, y).log_evidence(theta=theta)
+    # bit-identical (nan-safe: theta is not a true peak, so log_z may be
+    # nan on BOTH paths — what matters is that they are the same numbers)
+    np.testing.assert_array_equal(np.asarray(old.log_z),
+                                  np.asarray(new.log_z))
+    assert float(old.log_peak) == float(new.log_peak)
+    np.testing.assert_array_equal(np.asarray(old.hessian),
+                                  np.asarray(new.hessian))
+    np.testing.assert_array_equal(np.asarray(old.errors),
+                                  np.asarray(new.errors))
+
+
+def test_compare_shim_warns_once_and_matches():
+    from repro.core import model_compare as MC
+
+    x, y = _grid_data(n=48)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        old = MC.compare(jax.random.key(5), [C.SE], x, y, 0.1, n_starts=2,
+                         max_iters=10, scan_points=0, multimodal=False)
+    _one_deprecation(rec)
+    pol = gp.SolverPolicy(backend="dense", n_starts=2, max_iters=10,
+                          scan_points=0, multimodal=False)
+    new = gp.compare(gp.spec_bank(["se"], noise=gp.NoiseModel(0.1),
+                                  solver=pol), x, y,
+                     key=jax.random.key(5), batch="off")
+    assert old[0].name == new[0].name
+    assert old[0].log_z_laplace == new[0].log_z_laplace
+    assert old[0].log_p_max == new[0].log_p_max
+    assert old[0].n_evals_train == new[0].n_evals_train
+
+
+# ---------------------------------------------------------------------------
+# Public-API snapshot (accidental surface changes fail tier-1)
+# ---------------------------------------------------------------------------
+
+GP_PUBLIC_API = [
+    "GP", "GPSpec", "ModelReport", "NoiseModel", "SolverPolicy",
+    "as_spec", "compare", "log_bayes_factors", "spec_bank",
+]
+
+GP_SESSION_METHODS = [
+    "bind", "cov", "fit", "log_evidence", "log_likelihood", "n",
+    "operator_name", "predict", "sample", "theta_hat",
+]
+
+GPSPEC_FIELDS = ["kernel", "box", "noise", "solver"]
+
+
+def test_public_api_snapshot():
+    assert sorted(gp.__all__) == GP_PUBLIC_API
+    for name in GP_PUBLIC_API:
+        assert hasattr(gp, name), name
+    methods = sorted(m for m in dir(gp.GP) if not m.startswith("_"))
+    assert methods == GP_SESSION_METHODS
+    import dataclasses as dc
+    assert [f.name for f in dc.fields(gp.GPSpec)] == GPSPEC_FIELDS
+    assert gp.NoiseModel._fields == ("sigma_n", "jitter", "include_noise")
+    assert gp.SolverPolicy._fields == (
+        "backend", "opts", "n_starts", "max_iters", "grad_tol",
+        "scan_points", "multimodal", "dense_cutoff")
