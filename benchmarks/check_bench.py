@@ -1,0 +1,70 @@
+"""Nightly bench-regression gate over BENCH_fused.json (DESIGN.md §12).
+
+Fails (exit 1) when either headline speedup of the PR-5 performance work
+drops below the floor at n >= 4096:
+
+  * fused-vs-unfused SKI gram matvec (``fused_matvec`` rows), and
+  * preconditioned-vs-plain CG at matched tolerance
+    (``precond_cg_large``).
+
+Run by the nightly CI lane right after ``kernel_bench.py`` writes the
+artifact, so a regression turns the scheduled job red instead of silently
+shipping a slower hot loop.  The floor is 1.0 (parity) rather than the
+measured ~1.4-2.4x: interpret-mode wall-clock on shared CI runners is
+noisy, and the gate exists to catch "the fast path became the slow path",
+not to pin exact ratios.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(payload: dict, min_speedup: float = 1.0,
+          min_n: int = 4096) -> list:
+    failures = []
+    rows = payload.get("fused_matvec", [])
+    gated = [r for r in rows if r["n"] >= min_n]
+    if not gated:
+        failures.append(f"no fused_matvec rows with n >= {min_n}")
+    for r in gated:
+        if r["speedup"] < min_speedup:
+            failures.append(
+                f"fused-vs-unfused speedup x{r['speedup']:.2f} < "
+                f"x{min_speedup} at n={r['n']}")
+    cg = payload.get("precond_cg_large")
+    if cg is None:
+        failures.append("precond_cg_large row missing")
+    else:
+        if cg["n"] < min_n:
+            failures.append(f"precond_cg_large ran at n={cg['n']} < "
+                            f"{min_n}")
+        if cg["speedup"] < min_speedup:
+            failures.append(
+                f"preconditioned-vs-plain CG speedup "
+                f"x{cg['speedup']:.2f} < x{min_speedup} at n={cg['n']}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_fused.json")
+    ap.add_argument("--min-speedup", type=float, default=1.0)
+    ap.add_argument("--min-n", type=int, default=4096)
+    args = ap.parse_args(argv)
+    with open(args.json) as f:
+        payload = json.load(f)
+    failures = check(payload, args.min_speedup, args.min_n)
+    if failures:
+        for msg in failures:
+            print(f"BENCH REGRESSION: {msg}", file=sys.stderr)
+        return 1
+    print(f"bench gate OK ({args.json}: fused and preconditioned "
+          f"speedups >= x{args.min_speedup} at n >= {args.min_n})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

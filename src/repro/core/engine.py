@@ -24,7 +24,8 @@ closures safe to call inside jit/while_loop traces.
 
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional, Protocol, runtime_checkable
+from typing import (Callable, NamedTuple, Optional, Protocol, Union,
+                    runtime_checkable)
 
 import jax
 import jax.numpy as jnp
@@ -84,8 +85,14 @@ class SolverOpts(NamedTuple):
     operator: Optional[str] = None  # linear-operator override ("pallas" |
     # "toeplitz" | "ski" | "lowrank"); None = structure auto-detect
     # (DESIGN.md §9-§10)
-    precond: Optional[str] = None   # CG preconditioner selection ("pivchol"
-    # | "circulant" | None); see iterative.make_preconditioner
+    precond: Optional[str] = None   # preconditioner selection ("pivchol"
+    # | "circulant" | "auto" | None); "auto" picks by structure + size
+    # (iterative.resolve_precond, DESIGN.md §12); an SLQ-capable choice
+    # also preconditions the Lanczos log-det
+    fused: Union[bool, str] = "auto"  # fused Pallas SKI sandwich (True |
+    # False | "auto"); "auto" enables the one-launch gather-FFT-scatter
+    # kernel on supported geometries at n >= ski_fused.FUSED_AUTO_MIN_N
+    # (DESIGN.md §12)
 
 
 # ---------------------------------------------------------------------------
@@ -174,12 +181,20 @@ class IterativeSolver:
         # and W construction exactly once per session) skips the per-solver
         # re-dispatch; otherwise select by structure as before
         self.op = op if op is not None else kopers.select_operator(
-            kind, self.x, sigma_n, jitter, operator=opts.operator)
-        self._mv = self.op.gram_matvec
+            kind, self.x, sigma_n, jitter, operator=opts.operator,
+            fused=opts.fused)
+        # the θ-bound apply hoists per-θ spectrum / factor work out of
+        # every CG & Lanczos loop body; on a fused SKI operator it is the
+        # one-launch Pallas sandwich (DESIGN.md §12)
+        self._mv_bound = kopers.bound_gram_matvec(self.op, self.theta,
+                                                  self.y.dtype)
 
         # pluggable preconditioner, built against the DISPATCHED operator's
         # own diag/column/first-column access — pivoted Cholesky and the
-        # circulant apply work on the Toeplitz/SKI paths too
+        # circulant apply work on the Toeplitz/SKI paths too.  "auto"
+        # resolves by structure + size (iterative.resolve_precond); the
+        # bundle also carries the SLQ accessors when the structure has
+        # them (see logdet()).
         self._precond = it.make_preconditioner(self.op, self.theta,
                                                opts.precond,
                                                opts.precond_rank)
@@ -198,10 +213,11 @@ class IterativeSolver:
         self._logdet = None
 
     def _cg(self, rhs):
-        sol = self._it.cg_solve(lambda v: self._mv(self.theta, v), rhs,
+        sol = self._it.cg_solve(self._mv_bound, rhs,
                                 tol=self.opts.cg_tol,
                                 max_iter=self.opts.cg_max_iter,
-                                precond=self._precond)
+                                precond=self._precond.apply
+                                if self._precond is not None else None)
         self.cg_iters = sol.iters
         self.cg_resnorm = jnp.max(jnp.atleast_1d(sol.resnorm))
         return sol.x
@@ -227,11 +243,21 @@ class IterativeSolver:
 
     def logdet(self):
         if self._logdet is None:
-            self._logdet = self._it.slq_logdet(
-                lambda v: self._mv(self.theta, v), self.n,
-                jax.random.fold_in(self.key, 1),
-                n_probes=self.opts.n_probes, k=self.opts.lanczos_k,
-                dtype=self.y.dtype)
+            pc = self._precond
+            if pc is not None and pc.slq is not None:
+                # preconditioned SLQ: Lanczos on P^{-1/2} K P^{-1/2} whose
+                # ln-spectrum is nearly flat — matched accuracy at a
+                # fraction of lanczos_k on ill-conditioned kernels
+                self._logdet = self._it.slq_logdet_precond(
+                    self._mv_bound, pc.slq, jax.random.fold_in(self.key, 1),
+                    n_probes=self.opts.n_probes, k=self.opts.lanczos_k,
+                    dtype=self.y.dtype)
+            else:
+                self._logdet = self._it.slq_logdet(
+                    self._mv_bound, self.n,
+                    jax.random.fold_in(self.key, 1),
+                    n_probes=self.opts.n_probes, k=self.opts.lanczos_k,
+                    dtype=self.y.dtype)
         return self._logdet
 
     def quad(self, y):
@@ -255,6 +281,24 @@ class IterativeSolver:
 # ---------------------------------------------------------------------------
 # Factories and engine-level evaluations
 # ---------------------------------------------------------------------------
+
+def select_precond(op, opts: SolverOpts = SolverOpts()) -> Optional[str]:
+    """Resolved concrete preconditioner choice for one bound operator —
+    the ``precond="auto"`` structure/size policy front (DESIGN.md §12;
+    delegates to :func:`repro.core.iterative.resolve_precond`)."""
+    from . import iterative as it
+    return it.resolve_precond(opts.precond, op, opts.precond_rank)
+
+
+def select_fused(op, opts: SolverOpts = SolverOpts()) -> bool:
+    """Resolved fused-kernel decision for one bound operator — the
+    ``fused="auto"`` policy front.  Operators resolve the flag at
+    construction (geometry support + the measured size crossover,
+    :func:`repro.kernels.ski_fused.resolve_fused`); this reads it back
+    for callers that need the decision without re-probing."""
+    del opts
+    return bool(getattr(op, "fused", False))
+
 
 def resolve_kind(cov: Covariance) -> str:
     """Covariance-tile registry key for the iterative backend.

@@ -173,6 +173,105 @@ def slq_logdet(matvec: Callable, n: int, key, n_probes: int = 16,
 
 
 # ---------------------------------------------------------------------------
+# Preconditioned Lanczos + SLQ (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def preconditioned_lanczos(matvec: Callable, pinv: Callable, z0, k: int):
+    """k-step Lanczos on  M = P^{-1/2} K P^{-1/2}  WITHOUT square roots.
+
+    In the u-basis of M the recurrence is transformed by z_j = P^{1/2}u_j,
+    s_j = P^{-1}z_j, so every quantity is reachable through one K matvec
+    and one P^{-1} apply per step:
+
+        α_j = s_jᵀ K s_j,    β_j z_{j+1} = K s_j − α_j z_j − β_{j-1} z_{j-1}
+
+    with normalisation z_jᵀ s_j = 1 (the PCG inner product).  Full
+    re-orthogonalisation runs in the same P^{-1} inner product with the
+    STORED s-basis, so it costs no extra P applies.
+
+    z0: (n, p) start block with E[z zᵀ] = P (``SLQPrecond.sample``).
+    Returns (alphas (k, p), betas (k-1, p), unorm2 (p,)) where
+    unorm2 = z0ᵀ P^{-1} z0 = ||u_0||² carries the probe normalisation.
+    """
+    n, pb = z0.shape
+    s_raw = pinv(z0)
+    unorm2 = jnp.sum(z0 * s_raw, axis=0)
+    beta0 = jnp.sqrt(jnp.maximum(unorm2, 1e-300))
+    Z = jnp.zeros((k, n, pb), z0.dtype).at[0].set(z0 / beta0)
+    S = jnp.zeros((k, n, pb), z0.dtype).at[0].set(s_raw / beta0)
+    alphas = jnp.zeros((k, pb), z0.dtype)
+    betas = jnp.zeros((max(k - 1, 1), pb), z0.dtype)
+
+    def body(i, carry):
+        Z, S, alphas, betas = carry
+        zi, si = Z[i], S[i]
+        w = matvec(si)
+        a = jnp.sum(si * w, axis=0)
+        w = w - a * zi - jnp.where(i > 0, betas[jnp.maximum(i - 1, 0)], 0.0) \
+            * Z[jnp.maximum(i - 1, 0)]
+        # full P^{-1}-reorthogonalisation: <u_w, u_j> = wᵀ s_j
+        proj = jnp.einsum("knp,np->kp", S, w)
+        mask = (jnp.arange(k) <= i)[:, None]
+        w = w - jnp.einsum("kp,knp->np", proj * mask, Z)
+        wp = pinv(w)
+        b = jnp.sqrt(jnp.maximum(jnp.sum(w * wp, axis=0), 1e-300))
+        zn, sn = w / b, wp / b
+        keep = i + 1 < k
+        Z = Z.at[jnp.minimum(i + 1, k - 1)].set(
+            jnp.where(keep, zn, Z[k - 1]))
+        S = S.at[jnp.minimum(i + 1, k - 1)].set(
+            jnp.where(keep, sn, S[k - 1]))
+        alphas = alphas.at[i].set(a)
+        betas = jnp.where(i < k - 1, betas.at[jnp.minimum(i, k - 2)].set(b),
+                          betas)
+        return (Z, S, alphas, betas)
+
+    _, _, alphas, betas = jax.lax.fori_loop(
+        0, k, body, (Z, S, alphas, betas))
+    return alphas, betas, unorm2
+
+
+def slq_quadrature(alphas, betas, unorm2):
+    """Per-probe Gauss quadrature of the (preconditioned) Lanczos
+    tridiagonals: vals_p = ||u_p||² Σ_i (U_{0i})² ln λ_i(T_p).  Shared by
+    the single-operator and bank preconditioned-SLQ estimators."""
+
+    def one(al, be, u2):
+        T = jnp.diag(al)
+        if al.shape[0] > 1:
+            T = T + jnp.diag(be, 1) + jnp.diag(be, -1)
+        lam, U = jnp.linalg.eigh(T)
+        lam = jnp.clip(lam, 1e-30)
+        return u2 * jnp.sum(U[0] ** 2 * jnp.log(lam))
+
+    return jax.vmap(one, in_axes=(1, 1, 0))(alphas, betas, unorm2)
+
+
+def slq_logdet_precond(matvec: Callable, slq_pre, key, n_probes: int = 16,
+                       k: int = 16, dtype=jnp.float64):
+    """ln det K = ln det P + tr ln(P^{-1/2} K P^{-1/2}), estimated.
+
+    The second term is SLQ on the PRECONDITIONED matrix M whose spectrum
+    clusters at 1 wherever P captures K: ln λ(M) ≈ 0, so both the Lanczos
+    convergence AND the probe variance collapse — matched accuracy at a
+    fraction of the plain ``lanczos_k`` on ill-conditioned kernels
+    (regression-pinned in tests/test_precond_slq.py).  Probes are Gaussian
+    z ~ N(0, P) (``slq_pre.sample``), i.e. u = P^{-1/2} z ~ N(0, I); the
+    estimator is  mean_z[ (zᵀP^{-1}z) Σ_i (U_{0i})² ln λ_i(T) ]  with T
+    the preconditioned-Lanczos tridiagonal — no n factor, the probe norm
+    carries it.
+
+    ``slq_pre``: :class:`repro.kernels.operators.SLQPrecond` (apply_inv /
+    sample / exact logdet) — NOT the bare CG apply.
+    """
+    z = slq_pre.sample(key, n_probes).astype(dtype)
+    alphas, betas, unorm2 = preconditioned_lanczos(
+        matvec, lambda r: slq_pre.apply_inv(r).astype(dtype), z, k)
+    vals = slq_quadrature(alphas, betas, unorm2)
+    return slq_pre.logdet.astype(dtype) + jnp.mean(vals)
+
+
+# ---------------------------------------------------------------------------
 # Iterative profiled hyperlikelihood + gradient (eqs. 2.16 / 2.17, O(n^2))
 # ---------------------------------------------------------------------------
 
@@ -201,8 +300,10 @@ def profiled_loglik_iterative(kind: str, theta, x, y, sigma_n: float, key,
     dK_i z comes through the structure-dispatched LinearOperator (tangent
     of the Toeplitz first column on grids, stacked Pallas tangent tile
     otherwise) — K and dK are never materialised.  ``precond`` /
-    ``precond_rank`` select the CG preconditioner
-    (:func:`make_preconditioner`); SLQ runs on K itself either way.
+    ``precond_rank`` select the preconditioner
+    (:func:`make_preconditioner`, "auto" resolves by structure + size);
+    when it is SLQ-capable the log-det runs the preconditioned Lanczos
+    recurrence (:func:`slq_logdet_precond`) instead of plain SLQ.
     """
     theta = jnp.asarray(theta)
     x = jnp.asarray(x)
@@ -211,20 +312,27 @@ def profiled_loglik_iterative(kind: str, theta, x, y, sigma_n: float, key,
     m = theta.shape[0]
     op = operators.select_operator(kind, x, float(sigma_n), float(jitter),
                                    operator=operator)
-    mv = op.gram_matvec
+    mv_bound = operators.bound_gram_matvec(op, theta, y.dtype)
     M = make_preconditioner(op, theta, precond, precond_rank)
 
     z = jax.random.rademacher(key, (n, n_probes)).astype(y.dtype)
     rhs = jnp.concatenate([y[:, None], z], axis=1)
-    sol = cg_solve(lambda v: mv(theta, v), rhs, tol=cg_tol,
-                   max_iter=cg_max_iter, precond=M)
+    sol = cg_solve(mv_bound, rhs, tol=cg_tol,
+                   max_iter=cg_max_iter,
+                   precond=M.apply if M is not None else None)
     alpha = sol.x[:, 0]                     # K^-1 y
     Kinv_z = sol.x[:, 1:]                   # K^-1 z
 
     yKy = y @ alpha
     s2 = yKy / n
-    logdet = slq_logdet(lambda v: mv(theta, v), n, jax.random.fold_in(key, 1),
-                        n_probes=n_probes, k=lanczos_k, dtype=y.dtype)
+    if M is not None and M.slq is not None:
+        logdet = slq_logdet_precond(mv_bound, M.slq,
+                                    jax.random.fold_in(key, 1),
+                                    n_probes=n_probes, k=lanczos_k,
+                                    dtype=y.dtype)
+    else:
+        logdet = slq_logdet(mv_bound, n, jax.random.fold_in(key, 1),
+                            n_probes=n_probes, k=lanczos_k, dtype=y.dtype)
     lp = -0.5 * n * (LOG2PI + 1.0 + jnp.log(s2)) - 0.5 * logdet
 
     if not with_grad:
@@ -276,6 +384,26 @@ def pivoted_cholesky(diag, matcol_fn: Callable, rank: int,
     return L
 
 
+def _woodbury_factor(L, noise2: float):
+    """Small-factor Cholesky Lm = chol(noise2 I_r + LᵀL) of the Woodbury
+    identity for P = L Lᵀ + noise2 I — built once, shared by the apply
+    and the determinant lemma."""
+    rank = L.shape[1]
+    return jnp.linalg.cholesky(noise2 * jnp.eye(rank, dtype=L.dtype)
+                               + L.T @ L)
+
+
+def _woodbury_apply(L, Lm, noise2: float) -> Callable:
+    """r → P^{-1} r = (r − L (noise2 I_r + LᵀL)^{-1} Lᵀ r) / noise2."""
+    from jax.scipy.linalg import cho_solve
+
+    def apply(r):
+        u = cho_solve((Lm, True), L.T @ r)
+        return (r - L @ u) / noise2
+
+    return apply
+
+
 def pivoted_cholesky_precond(diag, matcol_fn: Callable, n: int, rank: int,
                              noise2: float) -> Callable:
     """Rank-r pivoted-Cholesky preconditioner  P = L L^T + noise2 * I.
@@ -290,18 +418,8 @@ def pivoted_cholesky_precond(diag, matcol_fn: Callable, n: int, rank: int,
     pivots capture K's smooth directions (the GPyTorch/BBMM observation),
     collapsing CG iteration counts for ill-conditioned K.
     """
-    from jax.scipy.linalg import cho_solve
-
     L = pivoted_cholesky(diag, matcol_fn, rank)
-    M = noise2 * jnp.eye(rank, dtype=L.dtype) + L.T @ L
-    Lm = jnp.linalg.cholesky(M)
-
-    def apply(r):
-        t = L.T @ r
-        u = cho_solve((Lm, True), t)
-        return (r - L @ u) / noise2
-
-    return apply
+    return _woodbury_apply(L, _woodbury_factor(L, noise2), noise2)
 
 
 def pivoted_cholesky_precond_for_operator(op, theta, rank: int) -> Callable:
@@ -364,28 +482,143 @@ def circulant_precond_for_operator(op, theta, floor: float = 1e-12
 
 
 PRECONDITIONERS = ("pivchol", "circulant")
+PRECOND_CHOICES = PRECONDITIONERS + ("auto",)
 _DEFAULT_PIVCHOL_RANK = 32
+
+# Minimum pivoted-Cholesky rank before its SLQ accessors are attached:
+# below this the rank-r P describes quasi-periodic (comb-spectrum)
+# kernels poorly and the preconditioned estimator's Gaussian-probe
+# variance UNDERPERFORMS plain Rademacher SLQ (measured r = 32 worse,
+# r = 64 parity, r = 128 better on cond ≈ 3e7 k1) — so a default-rank
+# "pivchol" keeps its pre-PR behaviour: Woodbury CG apply + plain SLQ.
+_PIVCHOL_SLQ_MIN_RANK = 64
+
+# precond="auto" crossover (DESIGN.md §12): below this n the circulant
+# preconditioner's extra per-iteration FFTs and slower compile LOSE
+# wall-clock against the handful of CG iterations they save (measured 2x
+# one-shot regression at n = 285, still negative at n = 1777 —
+# BENCH_ski.json); above it the iteration collapse dominates
+# (BENCH_fused.json).
+PRECOND_AUTO_MIN_N = 2048
+
+# Conditioning probe of the auto policy: the registered covariances are
+# UNIT-SCALE (sigma_f profiled out, k(0) = 1), so cond(K) ≈ n / noise2 up
+# to kernel-shape factors and plain-CG iterations grow like its square
+# root.  Preconditioning pays once that estimate is large; below it plain
+# CG converges in tens of iterations and the ~30% heavier preconditioned
+# iteration is a pure loss (measured: sigma_n = 0.1 at n = 4110 —
+# circulant 381 ms vs plain 257 ms per objective evaluation).
+PRECOND_AUTO_MIN_COND = 1e6
+
+
+class Preconditioner(NamedTuple):
+    """What ``SolverOpts(precond=...)`` resolves to for one (op, θ).
+
+    apply:  r → P_cg⁻¹ r, the SPD apply handed to :func:`cg_solve`.
+    slq:    the :class:`~repro.kernels.operators.SLQPrecond` accessors
+            (P⁻¹ apply, N(0, P) sampler, exact ln det P) when the
+            structure can provide them — enables the preconditioned SLQ
+            log-det; None falls back to plain :func:`slq_logdet`.
+    choice: the resolved concrete name ("pivchol" | "circulant").
+    """
+
+    apply: Callable
+    slq: Optional[object]
+    choice: str
+
+
+def resolve_precond(precond: Optional[str], op,
+                    precond_rank: int = 0) -> Optional[str]:
+    """``SolverOpts(precond=...)`` → concrete choice for one operator.
+
+    ``"auto"`` is the structure / size / conditioning policy (DESIGN.md
+    §12 decision table): FFT-structured operators (toeplitz / ski) get
+    "circulant" once n ≥ ``PRECOND_AUTO_MIN_N`` AND the host-side
+    conditioning probe n / noise2 ≥ ``PRECOND_AUTO_MIN_COND`` — at
+    smaller n the build + compile + per-iteration cost outweighs the
+    saved iterations (the measured n = 285 regression this policy exists
+    to fix), and on well-conditioned systems plain CG converges before
+    the preconditioner amortises.  Scattered-data operators stay
+    unpreconditioned (the mean-spacing circulant stand-in is unreliable
+    and pivoted Cholesky costs O(n r²) per objective evaluation; both
+    remain one explicit ``precond=`` away).
+    """
+    if precond is None:
+        return "pivchol" if precond_rank > 0 else None
+    if precond == "auto":
+        noise2 = float(getattr(op, "noise2", 0.0))
+        cond_probe = float(op.n) / max(noise2, 1e-300)
+        if getattr(op, "name", None) in ("toeplitz", "ski") \
+                and int(op.n) >= PRECOND_AUTO_MIN_N \
+                and cond_probe >= PRECOND_AUTO_MIN_COND:
+            return "circulant"
+        return None
+    if precond in PRECONDITIONERS:
+        return precond
+    raise ValueError(f"unknown preconditioner {precond!r}; choose from "
+                     f"{PRECOND_CHOICES} or None")
+
+
+def _pivchol_slq_parts(op, theta, rank: int):
+    """(cg_apply, SLQPrecond) sharing ONE pivoted-Cholesky factorisation.
+
+    P = L Lᵀ + noise2 I is Woodbury-invertible (the CG apply), exactly
+    sampleable (z = L g₁ + σ g₂ has E[zzᵀ] = P), and has the analytic
+    ln det P = (n − r) ln σ² + 2 Σ ln diag chol(σ²I_r + LᵀL) — the three
+    accessors preconditioned SLQ needs, at no cost beyond the factor the
+    CG preconditioner already builds.
+    """
+    from ..kernels.operators import SLQPrecond
+
+    noise2 = op.noise2
+    L = pivoted_cholesky(op.diag(theta), lambda i: op.matcol(theta, i),
+                         rank)
+    Lm = _woodbury_factor(L, noise2)
+    apply = _woodbury_apply(L, Lm, noise2)
+
+    def sample(key, p):
+        k1, k2 = jax.random.split(key)
+        g1 = jax.random.normal(k1, (rank, p), L.dtype)
+        g2 = jax.random.normal(k2, (op.n, p), L.dtype)
+        return L @ g1 + jnp.sqrt(jnp.asarray(noise2, L.dtype)) * g2
+
+    logdet = ((op.n - rank) * jnp.log(jnp.asarray(noise2, L.dtype))
+              + 2.0 * jnp.sum(jnp.log(jnp.diagonal(Lm))))
+    return apply, SLQPrecond(apply, sample, logdet)
 
 
 def make_preconditioner(op, theta, precond: Optional[str] = None,
-                        precond_rank: int = 0) -> Optional[Callable]:
+                        precond_rank: int = 0) -> Optional[Preconditioner]:
     """Pluggable preconditioner selection (``SolverOpts(precond=...)``).
 
     * ``None`` + ``precond_rank > 0`` — legacy spelling of "pivchol";
     * ``"pivchol"``   — greedy rank-r pivoted Cholesky + Woodbury apply
-      (rank = ``precond_rank`` or 32), best for smooth / low-rank kernels;
-    * ``"circulant"`` — the Strang-type FFT apply above, best for
-      (near-)grid data where K is (near-)Toeplitz;
-    * ``None`` otherwise — unpreconditioned CG.
+      (rank = ``precond_rank`` or 32), best for smooth / low-rank
+      kernels; SLQ-capable on every operator (exact ln det P + sampler)
+      once rank ≥ ``_PIVCHOL_SLQ_MIN_RANK`` (below it the low-rank P
+      estimates the log-det WORSE than plain SLQ, so the log-det stays
+      plain and only CG is preconditioned);
+    * ``"circulant"`` — the structure's best Strang-type FFT apply, best
+      for (near-)grid data where K is (near-)Toeplitz; SLQ-capable where
+      the operator exposes ``slq_precond`` (the exact-grid Toeplitz path
+      — its n×n Strang circulant has an analytic spectrum);
+    * ``"auto"``      — the :func:`resolve_precond` size/structure policy;
+    * ``None`` otherwise — unpreconditioned CG, plain SLQ.
+
+    Returns a :class:`Preconditioner` (CG apply + optional SLQ accessors)
+    or None.
     """
-    if precond is None:
-        precond = "pivchol" if precond_rank > 0 else None
-    if precond is None:
+    choice = resolve_precond(precond, op, precond_rank)
+    if choice is None:
         return None
-    if precond == "pivchol":
+    if choice == "pivchol":
         rank = precond_rank if precond_rank > 0 else _DEFAULT_PIVCHOL_RANK
-        return pivoted_cholesky_precond_for_operator(op, theta, rank)
-    if precond == "circulant":
-        return circulant_precond_for_operator(op, theta)
-    raise ValueError(f"unknown preconditioner {precond!r}; choose from "
-                     f"{PRECONDITIONERS} or None")
+        apply, slq = _pivchol_slq_parts(op, theta, rank)
+        if rank < _PIVCHOL_SLQ_MIN_RANK:
+            slq = None
+        return Preconditioner(apply, slq, "pivchol")
+    apply = circulant_precond_for_operator(op, theta)
+    slq_hook = getattr(op, "slq_precond", None)
+    return Preconditioner(apply,
+                          slq_hook(theta) if slq_hook is not None else None,
+                          "circulant")

@@ -42,6 +42,8 @@ from typing import Callable, NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from types import SimpleNamespace
+
 from ..core import engine as eng
 from ..core import iterative as it
 from ..core.covariances import Covariance
@@ -50,7 +52,9 @@ from ..core.reparam import FlatBox, apply_ordering, flat_box, to_box
 from ..data.grid import build_inducing_grid, classify_grid, interp_weights
 from ..kernels import kernel_matvec
 from ..kernels import ops as kops
-from ..kernels.operators import _embed, interp_gather, interp_scatter
+from ..kernels import ski_fused
+from ..kernels.operators import (SLQPrecond, _embed, _strang_spectrum,
+                                 interp_gather, interp_scatter)
 from .spec import pad_boxes
 
 
@@ -65,7 +69,8 @@ class BankOperator:
     """
 
     def __init__(self, kinds: Sequence[str], x, sigma_n: float = 0.0,
-                 jitter: float = 0.0, like: "BankOperator" = None):
+                 jitter: float = 0.0, like: "BankOperator" = None,
+                 fused="auto"):
         for k in kinds:
             if k not in kernel_matvec.TILE_FNS:
                 raise ValueError(
@@ -81,6 +86,7 @@ class BankOperator:
             # bind contract for the derived stats/modes banks
             self.idx, self.w = like.idx, like.w
             self.structure = like.structure
+            self.fused_geom = like.fused_geom
             grid = like.grid
         else:
             info = classify_grid(x)
@@ -100,6 +106,24 @@ class BankOperator:
                     "(data.grid.classify_grid); irregular inputs have no "
                     "shared FFT geometry — use sequential sessions")
             self.structure = info.kind
+            # fused Pallas sandwich geometry (SKI banks only: the exact-
+            # grid bank has no W to fuse around its FFT) — DESIGN.md §12
+            self.fused_geom = None if self.idx is None else \
+                ski_fused.build_fused_geometry(self.idx, self.w,
+                                               int(grid.shape[0]))
+        if like is not None and fused == "auto":
+            # derived banks (stats / Laplace modes) inherit the training
+            # bank's RESOLVED decision — an explicit SolverOpts(fused=)
+            # must not be silently re-resolved to the default
+            self.fused = like.fused
+        elif self.idx is None:
+            # exact-grid banks have no interpolation sandwich to fuse;
+            # the flag is inapplicable (mirrors the Toeplitz session
+            # path, which ignores fused=) rather than an error
+            self.fused = False
+        else:
+            self.fused = ski_fused.resolve_fused(fused, self.fused_geom,
+                                                 self.n)
         self.grid = grid
         self.m_grid = int(grid.shape[0])
         self.L = 2 * self.m_grid - 2
@@ -163,11 +187,23 @@ class BankOperator:
         The B embedding spectra are computed HERE, once per theta bank;
         every call then costs one shared rfft + one shared irfft over the
         whole stacked block (plus the gather/scatter sandwich on SKI) —
-        the per-CG-iteration launch count is independent of B.
+        the per-CG-iteration launch count is independent of B.  On a
+        fused SKI bank the whole sandwich collapses further into ONE
+        Pallas launch per call, with the B permuted power-of-two spectra
+        precomputed here (DESIGN.md §12).
         """
         T = self.first_columns(thetas, dtype)
-        lam = jnp.fft.rfft(_embed(T), axis=-1)              # (B, Lf)
         noise2 = jnp.asarray(self.noise2, dtype)
+        if self.fused:
+            geom, n2 = self.fused_geom, self.noise2
+            lams = jax.vmap(
+                lambda t: ski_fused.spectrum_perm(t, geom))(T)  # (B, L)
+
+            def mv(V):
+                return ski_fused.fused_bank_matvec(geom, lams, n2, V)
+
+            return mv
+        lam = jnp.fft.rfft(_embed(T), axis=-1)              # (B, Lf)
         L, m = self.L, self.m_grid
 
         def mv(V):
@@ -219,6 +255,110 @@ class BankOperator:
             return self._W(out)
 
         return apply
+
+    # -- preconditioner policy + the bank-aware factorised preconditioners
+
+    def resolve_precond(self, opts: SolverOpts):
+        """``SolverOpts(precond=...)`` → concrete bank choice, through the
+        SAME structure/size policy as single sessions ("exact" banks count
+        as toeplitz, "near" banks as ski; DESIGN.md §12)."""
+        proxy = SimpleNamespace(
+            name="toeplitz" if self.structure == "exact" else "ski",
+            n=self.n, noise2=self.noise2)
+        return it.resolve_precond(opts.precond, proxy, opts.precond_rank)
+
+    def _member_diag_matcol(self, tcol):
+        """(diag, matcol) oracle of ONE member's surrogate matrix from its
+        first column — exact Toeplitz entries on exact grids, the
+        W K_grid Wᵀ sandwich on SKI (mirrors SKIOperator.diag/matcol)."""
+        if self.idx is None:
+            n = self.n
+            diag = jnp.full((n,), tcol[0], tcol.dtype)
+
+            def matcol(i):
+                return tcol[jnp.abs(jnp.arange(n) - i)]
+
+            return diag, matcol
+        idx, w = self.idx, self.w.astype(tcol.dtype)
+        G = tcol[jnp.abs(idx[:, :, None] - idx[:, None, :])]
+        diag = jnp.einsum("ns,nst,nt->n", w, G, w)
+
+        def matcol(i):
+            cols = tcol[jnp.abs(jnp.arange(self.m_grid)[:, None]
+                                - idx[i][None, :])]          # (m_grid, s)
+            cu = cols @ w[i]
+            return interp_gather(idx, w, cu[:, None])[:, 0]
+
+        return diag, matcol
+
+    def bind_pivchol_precond(self, thetas, dtype, rank: int):
+        """Bank-aware pivoted-Cholesky preconditioner (ROADMAP item).
+
+        One greedy rank-r factorisation PER MEMBER, all advanced in
+        lock-step by ``vmap`` over the member axis (each member keeps its
+        own pivot order — the factorisations are independent, only the
+        program is shared).  Returns ``(apply, slq)``: the batched
+        Woodbury apply for :func:`bank_cg` over (n, B, c) blocks, and the
+        per-member :class:`SLQPrecond` accessors (exact ln det P_b via the
+        determinant lemma, z_b = L_b g₁ + σ g₂ sampling) for
+        :func:`bank_slq_logdet_precond`.
+        """
+        from jax.scipy.linalg import cho_solve
+
+        T = self.first_columns(thetas, dtype)               # (B, m_grid)
+        noise2 = jnp.asarray(self.noise2, dtype)
+
+        def member_L(tcol):
+            diag, matcol = self._member_diag_matcol(tcol)
+            return it.pivoted_cholesky(diag, matcol, rank)
+
+        Ls = jax.vmap(member_L)(T)                          # (B, n, r)
+        M = noise2 * jnp.eye(rank, dtype=dtype) + jnp.einsum(
+            "bnr,bns->brs", Ls, Ls)
+        Lm = jnp.linalg.cholesky(M)                         # (B, r, r)
+
+        def apply(r):
+            t = jnp.einsum("bnr,nbc->brc", Ls, r)
+            u = jax.vmap(lambda lm, tt: cho_solve((lm, True), tt))(Lm, t)
+            return (r - jnp.einsum("bnr,brc->nbc", Ls, u)) / noise2
+
+        def sample(key, p):
+            k1, k2 = jax.random.split(key)
+            g1 = jax.random.normal(k1, (self.B, rank, p), dtype)
+            g2 = jax.random.normal(k2, (self.n, self.B, p), dtype)
+            return jnp.einsum("bnr,brp->nbp", Ls, g1) + jnp.sqrt(noise2) \
+                * g2
+
+        logdet = ((self.n - rank) * jnp.log(noise2)
+                  + 2.0 * jnp.sum(jnp.log(
+                      jnp.diagonal(Lm, axis1=1, axis2=2)), axis=1))  # (B,)
+        return apply, SLQPrecond(apply, sample, logdet)
+
+    def bind_slq_precond(self, thetas, dtype,
+                         floor: float = 1e-12) -> Optional[SLQPrecond]:
+        """Per-member Strang-circulant SLQ accessors for EXACT-grid banks
+        (the bank mirror of ``ToeplitzOperator.slq_precond``): B analytic
+        n-point spectra → batched P⁻¹ apply, N(0, P_b) sampler and exact
+        (B,) ln det P.  SKI banks return None (their grid-space sandwich
+        has no analytic determinant — plain bank SLQ applies)."""
+        if self.idx is not None:
+            return None
+        T = self.first_columns(thetas, dtype)               # (B, n)
+        lam = jax.vmap(lambda t: _strang_spectrum(t, self.noise2,
+                                                  floor))(T)  # (B, n)
+        lamT = lam.T[:, :, None]                            # (n, B, 1)
+        sq = jnp.sqrt(lamT)
+
+        def apply_inv(r):                                   # (n, B, p)
+            return jnp.fft.ifft(jnp.fft.fft(r, axis=0) / lamT,
+                                axis=0).real.astype(r.dtype)
+
+        def sample(key, p):
+            g = jax.random.normal(key, (self.n, self.B, p), dtype)
+            return jnp.fft.ifft(jnp.fft.fft(g, axis=0) * sq, axis=0).real
+
+        return SLQPrecond(apply_inv, sample,
+                          jnp.sum(jnp.log(lam), axis=1))    # (B,)
 
 
 # ---------------------------------------------------------------------------
@@ -301,6 +441,34 @@ def bank_slq_logdet(matvec: Callable, n: int, B: int, key,
     return n * jnp.mean(vals.reshape(B, n_probes), axis=1)
 
 
+def bank_slq_logdet_precond(matvec: Callable, slq_pre, n: int, B: int, key,
+                            n_probes: int = 16, k: int = 16,
+                            dtype=jnp.float64) -> jax.Array:
+    """(B,) preconditioned-SLQ log-determinants through the shared bank
+    matvec: ln det K_b = ln det P_b + tr ln(P_b^{-1/2} K_b P_b^{-1/2}).
+
+    All B × n_probes columns advance in lock-step through ONE
+    preconditioned-Lanczos recurrence (``core.iterative.
+    preconditioned_lanczos`` — each column carries its own α/β/norm
+    state, so members with different conditioning coexist); probes come
+    from the per-member N(0, P_b) sampler and the quadratures average
+    within each member.  ``slq_pre``: a bank-shaped
+    :class:`~repro.kernels.operators.SLQPrecond` whose accessors act on
+    (n, B, p) blocks and whose ``logdet`` is (B,)
+    (``BankOperator.bind_slq_precond`` / ``bind_pivchol_precond``).
+    """
+    z = slq_pre.sample(key, n_probes).astype(dtype)          # (n, B, p)
+
+    def flat(f):
+        return lambda v: f(v.reshape(n, B, n_probes)).reshape(n, -1)
+
+    alphas, betas, unorm2 = it.preconditioned_lanczos(
+        flat(matvec), flat(slq_pre.apply_inv), z.reshape(n, -1), k)
+    vals = it.slq_quadrature(alphas, betas, unorm2)
+    return slq_pre.logdet.astype(dtype) \
+        + jnp.mean(vals.reshape(B, n_probes), axis=1)
+
+
 # ---------------------------------------------------------------------------
 # The padded-bank profiled hyperlikelihood objective
 # ---------------------------------------------------------------------------
@@ -341,41 +509,66 @@ def make_bank_objective(bank: BankOperator, box: FlatBox, y, key,
     zp = jax.random.rademacher(jax.random.fold_in(key, 0x5eed),
                                (n, p)).astype(dtype)
     slq_key = jax.random.fold_in(key, 1)
-    use_circ = opts.precond == "circulant"
+    # one policy resolution per objective ("auto" → structure + size rule,
+    # DESIGN.md §12); pivchol shares ONE factorisation between the CG
+    # apply and the SLQ accessors, circulant pairs the embedding apply
+    # with the exact-grid Strang SLQ accessors when available
+    choice = bank.resolve_precond(opts)
+    rank = opts.precond_rank if opts.precond_rank > 0 \
+        else it._DEFAULT_PIVCHOL_RANK
 
-    def _solve(thetas, rhs):
+    def _bind(thetas):
         mv = bank.bind_matvec(thetas, dtype)
-        M = bank.bind_precond(thetas, dtype) if use_circ else None
-        sol = bank_cg(mv, rhs, tol=opts.cg_tol, max_iter=opts.cg_max_iter,
-                      precond=M)
-        return mv, sol
+        if choice == "pivchol":
+            cg_apply, slq_pre = bank.bind_pivchol_precond(thetas, dtype,
+                                                          rank)
+            if rank < it._PIVCHOL_SLQ_MIN_RANK:
+                slq_pre = None          # low-rank P: CG only, plain SLQ
+        elif choice == "circulant":
+            cg_apply = bank.bind_precond(thetas, dtype)
+            slq_pre = bank.bind_slq_precond(thetas, dtype)
+        else:
+            cg_apply, slq_pre = None, None
+        return mv, cg_apply, slq_pre
+
+    def _logdet(mv, slq_pre):
+        if slq_pre is not None:
+            return bank_slq_logdet_precond(mv, slq_pre, n, B, slq_key,
+                                           n_probes=p, k=opts.lanczos_k,
+                                           dtype=dtype)
+        return bank_slq_logdet(mv, n, B, slq_key, n_probes=p,
+                               k=opts.lanczos_k, dtype=dtype)
 
     def _sigma2_hat(alpha):
         return jnp.einsum("n,nb->b", y, alpha) / n          # (B,)
 
     def sigma2_theta(thetas):
         rhs = jnp.broadcast_to(y[:, None, None], (n, B, 1))
-        _, sol = _solve(thetas, rhs)
+        mv, cg_apply, _ = _bind(thetas)
+        sol = bank_cg(mv, rhs, tol=opts.cg_tol,
+                      max_iter=opts.cg_max_iter, precond=cg_apply)
         return _sigma2_hat(sol.x[:, :, 0])
 
     def stats_theta(thetas):
         rhs = jnp.broadcast_to(y[:, None, None], (n, B, 1))
-        mv, sol = _solve(thetas, rhs)
+        mv, cg_apply, slq_pre = _bind(thetas)
+        sol = bank_cg(mv, rhs, tol=opts.cg_tol,
+                      max_iter=opts.cg_max_iter, precond=cg_apply)
         s2 = _sigma2_hat(sol.x[:, :, 0])
-        logdet = bank_slq_logdet(mv, n, B, slq_key, n_probes=p,
-                                 k=opts.lanczos_k, dtype=dtype)
+        logdet = _logdet(mv, slq_pre)
         lp = -0.5 * n * (LOG2PI + 1.0 + jnp.log(s2)) - 0.5 * logdet
         return lp, s2
 
     def value_and_grad_theta(thetas):
         rhs = jnp.concatenate([y[:, None], zp], axis=1)     # (n, 1+p)
         rhs = jnp.broadcast_to(rhs[:, None, :], (n, B, 1 + p))
-        mv, sol = _solve(thetas, rhs)
+        mv, cg_apply, slq_pre = _bind(thetas)
+        sol = bank_cg(mv, rhs, tol=opts.cg_tol,
+                      max_iter=opts.cg_max_iter, precond=cg_apply)
         alpha = sol.x[:, :, 0]                              # (n, B)
         Kinv_z = sol.x[:, :, 1:]                            # (n, B, p)
         s2 = _sigma2_hat(alpha)
-        logdet = bank_slq_logdet(mv, n, B, slq_key, n_probes=p,
-                                 k=opts.lanczos_k, dtype=dtype)
+        logdet = _logdet(mv, slq_pre)
         lp = -0.5 * n * (LOG2PI + 1.0 + jnp.log(s2)) - 0.5 * logdet
         tmv = bank.bind_tangent_matvecs(thetas, dtype)
         V = jnp.concatenate(
@@ -562,7 +755,7 @@ def train_bank(covs: Sequence[Covariance], x, y, sigma_n: float, key,
         z0s.append(jnp.pad(z, ((0, 0), (0, m_max - c.n_params))))
     Z0 = jnp.stack(z0s, axis=1).reshape(R * K, m_max)    # (B, m_max)
 
-    bank = BankOperator(kinds_full, x, sigma_n, jitter)
+    bank = BankOperator(kinds_full, x, sigma_n, jitter, fused=opts.fused)
     obj = make_bank_objective(bank, box_full, y,
                               jax.random.fold_in(key, 0x5eed), opts)
     run = jax.jit(partial(_ncg_minimize_bank, obj.value_and_grad_z,
@@ -587,6 +780,7 @@ def train_bank(covs: Sequence[Covariance], x, y, sigma_n: float, key,
 
     # sigma_f_hat still needs K^{-1}y at the peaks: ONE light batched CG
     # (no SLQ) on a K-member bank sharing the training bank's geometry
+    # (like= also inherits the bank's resolved fused decision)
     bank_k = BankOperator(tuple(kinds), x, sigma_n, jitter, like=bank)
     obj_k = make_bank_objective(bank_k, FlatBox(pbox.lo.astype(x.dtype),
                                                 pbox.hi.astype(x.dtype)),

@@ -62,9 +62,12 @@ def batchable(specs: Sequence[GPSpec], x) -> bool:
         # explicit operator overrides pin a structure the bank may not have
         if s.solver.opts.operator is not None:
             return False
-        # the bank preconditions with its own circulant spectra only;
-        # honouring an explicit pivchol request needs the sequential path
-        if s.solver.opts.precond not in (None, "circulant"):
+        # the bank preconditions with its own bank-aware circulant AND
+        # pivoted-Cholesky factorisations (plus the "auto" policy) — any
+        # other value is unknown and falls to the sequential path's own
+        # validation
+        if s.solver.opts.precond not in (None, "circulant", "pivchol",
+                                         "auto"):
             return False
     return True
 
@@ -100,8 +103,9 @@ def compare(specs: Sequence[Union[GPSpec, str]], x, y, key=None,
             "batch='on' but the candidate bank cannot run batched: needs "
             ">= 2 specs sharing noise + solver policy, every spec "
             "resolving to the iterative backend, registered kernel tiles, "
-            "no explicit operator override, precond None|'circulant' and "
-            "inputs classifying 'exact'/'near' (data.grid.classify_grid)")
+            "no explicit operator override, precond None|'circulant'|"
+            "'pivchol'|'auto' and inputs classifying 'exact'/'near' "
+            "(data.grid.classify_grid)")
     if batch != "off" and eligible and not run_nested:
         return _compare_batched(specs, x, y, key)
     return _compare_sequential(specs, x, y, key, run_nested=run_nested,

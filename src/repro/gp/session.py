@@ -84,7 +84,8 @@ class GP:
             kind = eng.resolve_kind(cov)
             op = kopers.select_operator(kind, x, float(spec.noise.sigma_n),
                                         float(jitter),
-                                        operator=spec.solver.opts.operator)
+                                        operator=spec.solver.opts.operator,
+                                        fused=spec.solver.opts.fused)
         return cls(spec, x, y, box, backend, jitter, kind, op)
 
     # ------------------------------------------------------------------

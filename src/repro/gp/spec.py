@@ -24,8 +24,9 @@ import jax.numpy as jnp
 from ..core import covariances as C
 from ..core.covariances import Covariance
 from ..core.engine import BACKENDS, SolverOpts
-from ..core.iterative import PRECONDITIONERS
+from ..core.iterative import PRECOND_CHOICES
 from ..core.reparam import FlatBox
+from ..kernels.ski_fused import FUSED_CHOICES
 
 
 class NoiseModel(NamedTuple):
@@ -112,10 +113,14 @@ class GPSpec:
                 f"unknown backend {self.solver.backend!r}; choose from "
                 f"{('auto',) + BACKENDS}")
         pc = self.solver.opts.precond
-        if pc is not None and pc not in PRECONDITIONERS:
+        if pc is not None and pc not in PRECOND_CHOICES:
             raise ValueError(
                 f"unknown preconditioner {pc!r}; choose from "
-                f"{PRECONDITIONERS} or None")
+                f"{PRECOND_CHOICES} or None")
+        fu = self.solver.opts.fused
+        if fu not in FUSED_CHOICES:
+            raise ValueError(
+                f"unknown fused mode {fu!r}; choose from {FUSED_CHOICES}")
         if self.box is not None and not isinstance(self.box, FlatBox):
             object.__setattr__(self, "box", FlatBox(*self.box))
 

@@ -44,6 +44,14 @@ consumed by ``core.iterative.make_preconditioner``: ``diag(theta)`` and
 traced-index-safe) and ``circulant_precond(theta)`` (the structure's own
 best Strang-type FFT apply — exact first column on the Toeplitz path, a
 grid-space sandwich on the SKI path, a mean-spacing stand-in on tiles).
+
+PR 5 (DESIGN.md §12) adds two per-θ hooks: ``bound_gram_matvec(theta,
+dtype)`` — the CG/Lanczos hot-loop apply with spectrum/factor work
+hoisted out of the loop body (on a fused SKIOperator: ONE Pallas launch
+performing the whole gather→FFT→scatter sandwich, ``kernels.ski_fused``)
+— and ``slq_precond(theta)`` (Toeplitz only) — the :class:`SLQPrecond`
+accessors of the n×n Strang circulant (analytic spectrum → exact
+ln det P, N(0, P) sampling) that drive the preconditioned-SLQ log-det.
 """
 
 from __future__ import annotations
@@ -57,6 +65,7 @@ from ..data.grid import (GRID_RTOL, build_inducing_grid, classify_grid,
                          interp_weights, is_regular_grid)
 from . import kernel_matvec
 from . import ops as kops
+from . import ski_fused
 
 
 @runtime_checkable
@@ -82,6 +91,21 @@ class LinearOperator(Protocol):
         tangents of the full training matrix.
         """
         ...
+
+
+def bound_gram_matvec(op, theta, dtype) -> "callable":
+    """``v -> (K + noise2 I) v`` with every per-θ precomputation hoisted.
+
+    Solver loops (CG / Lanczos) apply the SAME θ hundreds of times; an
+    operator that exposes ``bound_gram_matvec(theta, dtype)`` returns a
+    closure with its spectrum / factor work done ONCE, outside the traced
+    loop body (DESIGN.md §12).  This helper falls back to the plain
+    per-call ``gram_matvec`` for operators without the hook.
+    """
+    bind = getattr(op, "bound_gram_matvec", None)
+    if bind is not None:
+        return bind(theta, dtype)
+    return lambda v: op.gram_matvec(theta, v)
 
 
 # ---------------------------------------------------------------------------
@@ -212,6 +236,59 @@ def _circulant_inverse_apply(t, noise2: float, floor: float = 1e-12):
     return apply
 
 
+class SLQPrecond:
+    """The three accessors preconditioned SLQ needs from its P ≈ K
+    (DESIGN.md §12): ``apply_inv`` (r → P⁻¹r), ``sample`` ((key, p) →
+    (n, p) probes with E[zzᵀ] = P), and the EXACT ``logdet`` of P.
+    Unlike the CG preconditioner (any SPD apply works), SLQ needs all
+    three — structures that cannot provide them fall back to plain SLQ
+    (``core.iterative.slq_logdet``).
+    """
+
+    def __init__(self, apply_inv, sample, logdet):
+        self.apply_inv = apply_inv
+        self.sample = sample
+        self.logdet = logdet
+
+
+def _strang_spectrum(t, noise2: float, floor: float = 1e-12):
+    """Real eigenvalues of the n×n Strang circulant of first column t.
+
+    c wraps t around the half: c[j] = t[j] for j ≤ n/2, t[n−j] beyond —
+    the classic optimal circulant approximation of a symmetric Toeplitz
+    matrix.  Clipped positive (+ noise) exactly like the embedding
+    preconditioner, so P is SPD with an ANALYTIC spectrum: P^{±1/2} and
+    ln det P come for free, which is what unlocks preconditioned SLQ.
+    """
+    t = jnp.asarray(t)
+    n = t.shape[0]
+    j = jnp.arange(n)
+    c = jnp.where(j <= n // 2, t[jnp.minimum(j, n - 1)], t[(n - j) % n])
+    lam = jnp.fft.fft(c).real
+    lam = jnp.clip(lam, floor * jnp.max(jnp.abs(lam)))
+    return lam + jnp.asarray(noise2, lam.dtype)
+
+
+def strang_slq_precond(t, noise2: float, floor: float = 1e-12
+                       ) -> SLQPrecond:
+    """:class:`SLQPrecond` from the n×n Strang circulant of ``t`` —
+    every access is one length-n FFT pair; ln det P = Σ ln λ exact."""
+    lam = _strang_spectrum(t, noise2, floor)
+    n = lam.shape[0]
+    sq = jnp.sqrt(lam)
+
+    def apply_inv(r):
+        return jnp.fft.ifft(jnp.fft.fft(r, axis=0)
+                            / lam[:, None], axis=0).real.astype(r.dtype)
+
+    def sample(key, p):
+        g = jax.random.normal(key, (n, p), lam.dtype)
+        return jnp.fft.ifft(jnp.fft.fft(g, axis=0)
+                            * sq[:, None], axis=0).real
+
+    return SLQPrecond(apply_inv, sample, jnp.sum(jnp.log(lam)))
+
+
 def _toeplitz_matvec_stacked(T, v):
     """m first columns at once: T (m, n), v (n, b) -> (m, n, b).
 
@@ -303,6 +380,35 @@ class ToeplitzOperator(_StationaryColumnAccess):
         return _circulant_inverse_apply(self.first_column(theta),
                                         self.noise2, floor)
 
+    def bound_gram_matvec(self, theta, dtype):
+        """Per-θ bound apply: the first column and its embedding spectrum
+        are computed HERE, once — every call inside a CG/Lanczos loop is
+        then one rfft/irfft pair (the spectrum no longer re-evaluates per
+        iteration; DESIGN.md §12)."""
+        t = self.first_column(theta, dtype)
+        lam = jnp.fft.rfft(_embed(t))
+        n, L = self.n, 2 * self.n - 2
+        noise2 = self.noise2
+
+        def mv(v):
+            squeeze = v.ndim == 1
+            if squeeze:
+                v = v[:, None]
+            vp = jnp.zeros((L, v.shape[1]), v.dtype).at[:n].set(v)
+            out = jnp.fft.irfft(lam[:, None] * jnp.fft.rfft(vp, axis=0),
+                                n=L, axis=0)[:n].astype(v.dtype)
+            out = out + jnp.asarray(noise2, v.dtype) * v
+            return out[:, 0] if squeeze else out
+
+        return mv
+
+    def slq_precond(self, theta, floor: float = 1e-12) -> SLQPrecond:
+        """Preconditioned-SLQ accessors from the n×n Strang circulant of
+        the exact first column (apply/sample via length-n FFTs, ln det P
+        analytic) — the shift-invert-style log-det path of DESIGN.md §12."""
+        return strang_slq_precond(self.first_column(theta), self.noise2,
+                                  floor)
+
 
 # ---------------------------------------------------------------------------
 # Off-grid fast path: structured kernel interpolation (SKI)
@@ -358,7 +464,8 @@ class SKIOperator:
     def __init__(self, kind: str, x, sigma_n: float = 0.0,
                  jitter: float = 0.0, grid=None,
                  spacing: Optional[float] = None,
-                 n_grid: Optional[int] = None, order: str = "cubic"):
+                 n_grid: Optional[int] = None, order: str = "cubic",
+                 fused="auto"):
         if grid is None:
             grid = build_inducing_grid(x, spacing=spacing, n_grid=n_grid)
         idx, w = interp_weights(x, grid, order=order)
@@ -377,6 +484,13 @@ class SKIOperator:
         self.m_grid = int(self.grid.shape[0])
         self.idx = jnp.asarray(idx)                    # (n, s) int32
         self.w = jnp.asarray(w, self.x.dtype)          # (n, s)
+        # fused Pallas sandwich (DESIGN.md §12): banded-W + in-kernel-FFT
+        # constants, built host-side once; ``fused`` resolves "auto" by
+        # geometry support and the measured size crossover
+        self.fused_geom = ski_fused.build_fused_geometry(idx, w,
+                                                         self.m_grid)
+        self.fused = ski_fused.resolve_fused(fused, self.fused_geom,
+                                             int(self.n))
 
     # -- the sparse interpolation applications (trace-safe: idx/w constants)
 
@@ -396,16 +510,64 @@ class SKIOperator:
         return out[:, 0] if squeeze else out
 
     def gram_matvec(self, theta, v):
+        if self.fused:
+            squeeze = v.ndim == 1
+            if squeeze:
+                v = v[:, None]
+            out = self.bound_gram_matvec(theta, v.dtype)(v)
+            return out[:, 0] if squeeze else out
         return self.matvec(theta, v) + jnp.asarray(self.noise2, v.dtype) * v
+
+    def bound_gram_matvec(self, theta, dtype):
+        """Per-θ bound training matvec, the CG/Lanczos hot-loop apply.
+
+        Fused path: the permuted power-of-two spectrum is built here,
+        once, and every call is ONE Pallas launch performing the whole
+        W·irfft(Λ⊙rfft(Wᵀ·))·+noise2 sandwich in VMEM (DESIGN.md §12).
+        Unfused path: the inner Toeplitz spectrum is still hoisted, each
+        call being the gather → FFT pair → scatter composition.
+        """
+        if self.fused:
+            lam = ski_fused.spectrum_perm(
+                self._toep.first_column(theta, dtype), self.fused_geom)
+            geom, noise2 = self.fused_geom, self.noise2
+
+            def mv(v):
+                return ski_fused.fused_gram_matvec(geom, lam, noise2, v)
+
+            return mv
+        # the inner ToeplitzOperator carries no noise (noise lives on the
+        # DATA axis), so its bound apply is the pure K_grid spectrum matvec
+        inner = self._toep.bound_gram_matvec(theta, dtype)
+        noise2 = self.noise2
+
+        def mv(v):
+            out = self._W(inner(self._Wt(v)))
+            return out + jnp.asarray(noise2, v.dtype) * v
+
+        return mv
 
     def tangent_matvecs(self, theta, V):
         """dK/dθ_i @ V = W (dK_grid/dθ_i) Wᵀ V — W is θ-independent, so the
-        stacked Toeplitz tangents slot straight between the applications."""
+        stacked Toeplitz tangents slot straight between the applications
+        (one widened fused launch when the fused kernel is active: shared
+        Wᵀ + forward FFT, per-direction spectrum/inverse/gather)."""
         squeeze = V.ndim == 1
         if squeeze:
             V = V[:, None]
-        T = self._toep.tangent_matvecs(theta, self._Wt(V))   # (m, m_grid, b)
-        out = jax.vmap(self._W)(T)                           # (m, n, b)
+        if self.fused:
+            dtype = V.dtype
+            rows = jax.jacfwd(
+                lambda th: self._toep.first_column(th, dtype)
+            )(jnp.asarray(theta, dtype))                     # (m_grid, m)
+            lams = jax.vmap(
+                lambda t: ski_fused.spectrum_perm(t, self.fused_geom)
+            )(rows.T)                                        # (m, L)
+            out = ski_fused.fused_tangent_matvecs(self.fused_geom, lams,
+                                                  0.0, V)
+        else:
+            T = self._toep.tangent_matvecs(theta, self._Wt(V))
+            out = jax.vmap(self._W)(T)                       # (m, n, b)
         return out[:, :, 0] if squeeze else out
 
     # -- cross-covariance on the SAME inducing grid (prediction fast path)
@@ -589,7 +751,7 @@ def make_operator(name: str, kind: str, x, sigma_n: float = 0.0,
 
 def select_operator(kind: str, x, sigma_n: float = 0.0, jitter: float = 0.0,
                     operator: Optional[str] = None,
-                    rtol: float = GRID_RTOL) -> LinearOperator:
+                    rtol: float = GRID_RTOL, fused="auto") -> LinearOperator:
     """Structure-aware dispatch (DESIGN.md §9–§10).
 
     An explicit ``operator`` name always wins (``SolverOpts(operator=...)``
@@ -613,11 +775,16 @@ def select_operator(kind: str, x, sigma_n: float = 0.0, jitter: float = 0.0,
         raise ValueError(
             f"no covariance tile registered for kind {kind!r}; the "
             f"matrix-free operators support {sorted(kernel_matvec.TILE_FNS)}")
+    if fused not in ski_fused.FUSED_CHOICES:
+        raise ValueError(f"unknown fused mode {fused!r}; choose from "
+                         f"{ski_fused.FUSED_CHOICES}")
     if operator is not None:
-        return make_operator(operator, kind, x, sigma_n, jitter)
+        kwargs = {"fused": fused} if operator == SKIOperator.name else {}
+        return make_operator(operator, kind, x, sigma_n, jitter, **kwargs)
     info = classify_grid(x, rtol=rtol)
     if info.kind == "exact":
         return ToeplitzOperator(kind, x, sigma_n, jitter, rtol=rtol)
     if info.kind == "near":
-        return SKIOperator(kind, x, sigma_n, jitter, spacing=info.h)
+        return SKIOperator(kind, x, sigma_n, jitter, spacing=info.h,
+                           fused=fused)
     return PallasTileOperator(kind, x, sigma_n, jitter)

@@ -5,6 +5,11 @@ parameter transforms (the erfinv/exp maps run once here, not per tile),
 padding to tile multiples with a covariance-safe sentinel, the white-noise
 diagonal (added as sigma_n^2 * v OUTSIDE the kernel — the diagonal never
 needs a tile), and interpret-mode selection (CPU container vs real TPU).
+
+The fused SKI sandwich kernels (gram / stacked-tangent / bank matvecs in
+ONE launch, DESIGN.md §12) live in :mod:`.ski_fused` and are re-exported
+here as part of the public kernel surface; they share this module's
+interpret-mode selection.
 """
 
 from __future__ import annotations
@@ -17,6 +22,8 @@ import jax.numpy as jnp
 from ..core.covariances import smoothness_from_flat
 from . import kernel_matvec, kernel_tile
 from .kernel_matvec import N_PARAM_SLOTS
+from .ski_fused import (fused_bank_matvec, fused_gram_matvec,  # noqa: F401
+                        fused_tangent_matvecs, spectrum_perm)  # noqa: F401
 
 # Natural-parameter layouts per family (see kernel_matvec module doc).
 _FLAT_TO_NATURAL = {

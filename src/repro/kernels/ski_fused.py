@@ -1,0 +1,586 @@
+"""Fused Pallas gather→FFT→scatter SKI kernel (DESIGN.md §12).
+
+The SKI training matvec
+
+    (W K_grid Wᵀ + σ² I) v
+
+is the per-iteration hot loop of every CG/SLQ solve on near-grid data
+(the paper's footnote-7 regime).  The unfused composition issues one XLA
+scatter (Wᵀ), a size-L rfft, a spectrum multiply, an irfft and one XLA
+gather (W) per iteration — five launches and four HBM round-trips of the
+grid-space block.  This module fuses the whole sandwich into ONE Pallas
+kernel whose body keeps the CSR-style interpolation weights, the
+circulant spectrum, and every FFT intermediate VMEM-resident:
+
+  * **Wᵀ without a scatter.**  Near-grid data places every point in a
+    DISTINCT cell of the inducing grid (``data.grid.classify_grid``
+    guarantees it), so W's transpose is a *banded* map: the point in
+    cell c touches nodes c + d for the s stencil offsets d.  The kernel
+    gathers the per-cell point values once (``occ``: cell → point row,
+    one gather) and accumulates s *shifted* weighted copies — no scatter
+    primitive anywhere (XLA's CPU scatter is serial; Mosaic has none).
+  * **In-kernel FFT.**  Mosaic has no FFT primitive, so the kernel
+    carries its own: a mixed radix-8/4/2 Stockham-style pipeline over a
+    power-of-two embedding length L ≥ 2 m_grid (the circulant embedding
+    is padded with don't-care zeros between t[m-1] and t[m-1] mirrored —
+    algebraically exact for matvecs whatever the filler).  The forward
+    transform is decimation-in-frequency (natural input → digit-reversed
+    output) and the inverse decimation-in-time (digit-reversed input →
+    natural output), so NO reversal permutation is ever applied — the
+    spectrum is pre-permuted host-side instead (:func:`spectrum_perm`).
+    Two real columns ride one complex column (pair packing), the first
+    DIF stage prunes the zero-padded upper blocks (m ≤ L/2), and the
+    last DIT stage computes only the blocks covering the m kept rows.
+  * **One launch per CG iteration.**  Gram and stacked dK/dθ tangent
+    variants exist; the spectrum (per θ) is computed OUTSIDE the kernel
+    once per solve (:meth:`~repro.kernels.operators.SKIOperator.
+    bound_gram_matvec`), so the traced CG loop body contains exactly one
+    ``pallas_call`` and zero ``fft`` ops (jaxpr-walk test).
+
+Interpret-mode safety: the kernel body uses only reshape / slice /
+concatenate / elementwise ops plus two row gathers, all of which execute
+under ``interpret=True`` on CPU (where this repo certifies semantics)
+and are Mosaic-lowerable in principle on TPU.  Data whose interpolation
+geometry is NOT distinct-cell (an explicit ``operator="ski"`` override
+on scattered inputs) is unsupported here — ``fused="auto"`` falls back
+to the unfused composition, ``fused=True`` raises.
+
+measured (interpret mode, this container): fused gram matvec x1.4-1.7
+vs the unfused composition at n ≥ 4096, b = 8 — see BENCH_fused.json.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "FUSED_CHOICES", "FUSED_AUTO_MIN_N", "FusedSKIGeometry",
+    "build_fused_geometry", "resolve_fused", "spectrum_perm",
+    "fused_gram_matvec", "fused_tangent_matvecs", "fused_bank_matvec",
+]
+
+# Accepted SolverOpts(fused=...) values (validated in gp.spec too).
+FUSED_CHOICES = (True, False, "auto")
+
+# fused="auto" crossover: below this n the pallas-call overhead and the
+# small-L FFT give the unfused composition the edge in interpret mode;
+# above it the fused kernel wins (BENCH_fused.json; DESIGN.md §12).
+FUSED_AUTO_MIN_N = 2048
+
+_INV_SQRT2 = 0.7071067811865476
+
+
+# ---------------------------------------------------------------------------
+# Host-side FFT plan: stage radices, digit-reversal order, twiddle tables
+# ---------------------------------------------------------------------------
+
+def _embed_length(m: int) -> int:
+    """Smallest supported FFT length ≥ 2 m: a power of two or 3·2^k.
+
+    The circulant embedding itself only needs L ≥ 2 m − 1 (the filler
+    between the mirrored halves is don't-care); admitting 3·2^k lengths
+    caps the zero-padding waste at 33% where pure powers of two can hit
+    100% (e.g. m = 8203 → 24576 instead of 32768 — the difference between
+    winning and losing the n = 8192 interpret-mode benchmark).
+    """
+    need = 2 * m
+    p2 = 1 << int(np.ceil(np.log2(need)))
+    t3 = 3 * (1 << max(0, int(np.ceil(np.log2(need / 3.0)))))
+    return min(c for c in (p2, t3) if c >= need)
+
+
+def _factor_stages(L: int) -> list:
+    """Mixed radix plan for L = 2^k or 3·2^k: optional leading 3, one 2/4
+    stage, radix-8 rest (fewest full-array passes the butterfly library
+    supports)."""
+    stages = []
+    if L % 3 == 0:
+        stages.append(3)
+        L //= 3
+    k = int(np.log2(L))
+    if (1 << k) != L:
+        raise ValueError(
+            f"fused FFT length must be a power of two or 3*2^k, got "
+            f"{L * (3 if stages else 1)}")
+    lead = k % 3
+    stages += [2] if lead == 1 else ([4] if lead == 2 else [])
+    return stages + [8] * (k // 3)
+
+
+def _perm_build(L: int, radices: Sequence[int]) -> np.ndarray:
+    """Output ordering of the DIF pipeline: frequency k lands at position
+    perm^{-1}... — returned as ``perm`` with DIF_out[j] = fft[perm[j]]."""
+    if not radices:
+        return np.zeros(1, np.int64)
+    r = radices[0]
+    sub = _perm_build(L // r, radices[1:])
+    return np.concatenate([j + r * sub for j in range(r)])
+
+
+def _twiddle_tables(L: int, radices: Sequence[int]):
+    """Per-stage twiddle factors w^{jn} = e^{-2πi jn / length}, float64
+    numpy; cast to the call dtype when entering a kernel."""
+    cos, sin, meta = [], [], []
+    length = L
+    for r in radices:
+        q = length // r
+        n = np.arange(q)
+        cos.append(np.stack([np.cos(-2 * np.pi * j * n / length)
+                             for j in range(1, r)]))
+        sin.append(np.stack([np.sin(-2 * np.pi * j * n / length)
+                             for j in range(1, r)]))
+        meta.append((r, q))
+        length = q
+    return cos, sin, tuple(meta)
+
+
+# ---------------------------------------------------------------------------
+# Split re/im butterfly cores (shared by DIF and DIT; sign = transform dir)
+# ---------------------------------------------------------------------------
+
+def _dft_core(xs, sign):
+    """r-point DFT of r (re, im) block pairs, twiddle-free.  sign < 0 is
+    the forward kernel e^{-2πi jt/r}; sign > 0 the inverse's conjugate."""
+    r = len(xs)
+    if r == 2:
+        (ar, ai), (br, bi) = xs
+        return [(ar + br, ai + bi), (ar - br, ai - bi)]
+    if r == 3:
+        (x0r, x0i), (x1r, x1i), (x2r, x2i) = xs
+        tr, ti = x1r + x2r, x1i + x2i
+        dr, di = x1r - x2r, x1i - x2i
+        ur, ui = x0r - 0.5 * tr, x0i - 0.5 * ti
+        s3 = 0.8660254037844386 * (-1.0 if sign < 0 else 1.0)  # ±√3/2
+        # y1 = u + i·sign·(√3/2)·d ;  y2 = its conjugate partner
+        return [(x0r + tr, x0i + ti),
+                (ur - s3 * di, ui + s3 * dr),
+                (ur + s3 * di, ui - s3 * dr)]
+    if r == 4:
+        (x0r, x0i), (x1r, x1i), (x2r, x2i), (x3r, x3i) = xs
+        er, ei = x0r + x2r, x0i + x2i
+        fr, fi = x0r - x2r, x0i - x2i
+        gr, gi = x1r + x3r, x1i + x3i
+        hr, hi = x1r - x3r, x1i - x3i
+        if sign < 0:                      # -i * (x1 - x3)
+            hr2, hi2 = hi, -hr
+        else:                             # +i * (x1 - x3)
+            hr2, hi2 = -hi, hr
+        return [(er + gr, ei + gi), (fr + hr2, fi + hi2),
+                (er - gr, ei - gi), (fr - hr2, fi - hi2)]
+    if r == 8:
+        E = _dft_core(xs[0::2], sign)
+        O = _dft_core(xs[1::2], sign)
+        c = _INV_SQRT2
+        tw = [(1.0, 0.0), (c, sign * c), (0.0, sign * 1.0), (-c, sign * c)]
+        lo, hi = [], []
+        for j in range(4):
+            twr, twi = tw[j]
+            orr, oi = O[j]
+            er, ei = E[j]
+            tr = twr * orr - twi * oi
+            ti = twr * oi + twi * orr
+            lo.append((er + tr, ei + ti))
+            hi.append((er - tr, ei - ti))
+        return lo + hi
+    raise ValueError(f"unsupported radix {r}")
+
+
+def _dif_fft(re, im, meta, cos, sin, first_nonzero: Optional[int] = None):
+    """Forward FFT, natural-order input → digit-reversed output.
+
+    ``first_nonzero`` prunes the FIRST stage for zero-padded input: blocks
+    wholly beyond the nonzero prefix enter the butterfly as literal zeros
+    which XLA's simplifier then deletes.
+    """
+    L = re.shape[0]
+    first = True
+    for (r, q), cs, sn in zip(meta, cos, sin):
+        nb = L // (r * q)
+        re = re.reshape(nb, r, q, -1)
+        im = im.reshape(nb, r, q, -1)
+        xs = [(re[:, t], im[:, t]) for t in range(r)]
+        if first and first_nonzero is not None:
+            nzb = int(np.ceil(first_nonzero / q))
+            zb = jnp.zeros_like(xs[0][0])
+            xs = [xs[t] if t < nzb else (zb, zb) for t in range(r)]
+        ys = _dft_core(xs, -1.0)
+        out_r, out_i = [ys[0][0]], [ys[0][1]]
+        for j in range(1, r):
+            cj, sj = cs[j - 1][None, :, None], sn[j - 1][None, :, None]
+            yr, yi = ys[j]
+            out_r.append(cj * yr - sj * yi)
+            out_i.append(cj * yi + sj * yr)
+        re = jnp.concatenate(out_r, axis=1).reshape(L, -1)
+        im = jnp.concatenate(out_i, axis=1).reshape(L, -1)
+        first = False
+    return re, im
+
+
+def _dit_ifft(re, im, meta, cos, sin, m_keep: Optional[int] = None):
+    """Inverse FFT (un-normalised — fold 1/L into the spectrum),
+    digit-reversed input → natural output.  ``m_keep`` truncates the LAST
+    stage to the output blocks covering rows [0, m_keep)."""
+    L = re.shape[0]
+    seq = list(zip(meta, cos, sin))[::-1]
+    for k, ((r, q), cs, sn) in enumerate(seq):
+        last = k == len(seq) - 1
+        nb = L // (r * q)
+        re = re.reshape(nb, r, q, -1)
+        im = im.reshape(nb, r, q, -1)
+        xs = [(re[:, 0], im[:, 0])]
+        for j in range(1, r):
+            cj, sj = cs[j - 1][None, :, None], sn[j - 1][None, :, None]
+            yr, yi = re[:, j], im[:, j]
+            xs.append((cj * yr + sj * yi, cj * yi - sj * yr))  # conj twiddle
+        ys = _dft_core(xs, +1.0)
+        if last and m_keep is not None:
+            ys = ys[:max(1, int(np.ceil(m_keep / q)))]
+        re = jnp.concatenate([y[0] for y in ys], axis=1)
+        re = re.reshape(-1, re.shape[-1])
+        im = jnp.concatenate([y[1] for y in ys], axis=1)
+        im = im.reshape(-1, im.shape[-1])
+    return re, im
+
+
+# ---------------------------------------------------------------------------
+# Fused geometry: banded W layout + FFT plan, built host-side once
+# ---------------------------------------------------------------------------
+
+class FusedSKIGeometry(NamedTuple):
+    """Trace-time constants of the fused sandwich for one (x, grid, W).
+
+    occ:    (m_grid,) int32 — cell → data-point row (n = empty-cell dummy).
+    wcell:  (m_grid, s) — the occupying point's stencil weights (0 rows
+            for empty cells), so both W and Wᵀ become s shifted
+            fused-multiply-adds around ONE row gather each.
+    cell:   (n,) int32 — data point → its (distinct) grid cell.
+    offs:   stencil offsets d (s,) — nodes touched are cell + d.
+    L:      power-of-two FFT length ≥ 2 m_grid.
+    perm:   (L,) digit-reversal order of the DIF output (spectra are
+            stored pre-permuted so the kernel never permutes).
+    meta / cos / sin: FFT stage plan + float64 twiddle tables.
+    """
+
+    n: int
+    m_grid: int
+    occ: np.ndarray
+    wcell: np.ndarray
+    cell: np.ndarray
+    offs: tuple
+    L: int
+    perm: np.ndarray
+    meta: tuple
+    cos: tuple
+    sin: tuple
+
+
+def build_fused_geometry(idx, w, m_grid: int) -> Optional[FusedSKIGeometry]:
+    """Fused-kernel constants from the CSR-style (idx, w) of ``interp_
+    weights`` — or None when the geometry is not distinct-cell banded
+    (then only the unfused composition applies)."""
+    idx = np.asarray(idx)
+    w = np.asarray(w, np.float64)
+    n, s = idx.shape
+    center = 1 if s == 4 else 0            # cubic taps -1..2, linear 0..1
+    cell = idx[:, center].astype(np.int64)
+    offs = idx[0] - cell[0]
+    if not np.all(idx == cell[:, None] + offs[None, :]):
+        return None                        # non-stencil rows
+    if np.unique(cell).shape[0] != n:
+        return None                        # duplicate cells (not near-grid)
+    occ = np.full(m_grid, n, np.int32)     # n = dummy zero row of padded v
+    occ[cell] = np.arange(n, dtype=np.int32)
+    wcell = np.zeros((m_grid, s), np.float64)
+    wcell[cell] = w
+    L = _embed_length(m_grid)
+    radices = _factor_stages(L)
+    cos, sin, meta = _twiddle_tables(L, radices)
+    return FusedSKIGeometry(
+        n=n, m_grid=m_grid, occ=occ, wcell=wcell,
+        cell=cell.astype(np.int32), offs=tuple(int(d) for d in offs),
+        L=L, perm=_perm_build(L, radices), meta=meta,
+        cos=tuple(cos), sin=tuple(sin))
+
+
+def resolve_fused(fused, geom: Optional[FusedSKIGeometry], n: int) -> bool:
+    """SolverOpts(fused=...) → concrete bool for one bound operator.
+
+    ``True`` demands the fused kernel (ValueError if the geometry cannot
+    support it); ``"auto"`` enables it when supported and n ≥
+    ``FUSED_AUTO_MIN_N`` (the measured interpret-mode crossover);
+    ``False`` always uses the unfused composition.
+    """
+    if fused not in FUSED_CHOICES:
+        raise ValueError(f"unknown fused mode {fused!r}; choose from "
+                         f"{FUSED_CHOICES}")
+    if fused is False:
+        return False
+    if fused is True:
+        if geom is None:
+            raise ValueError(
+                "fused=True but the SKI interpolation geometry is not "
+                "distinct-cell banded (points share inducing cells — an "
+                "operator='ski' override on scattered data?); use "
+                "fused='auto' or False to take the unfused composition")
+        return True
+    return geom is not None and n >= FUSED_AUTO_MIN_N
+
+
+def spectrum_perm(first_column, geom: FusedSKIGeometry):
+    """Permuted, 1/L-normalised circulant spectrum of a grid first column.
+
+    Pads the symmetric embedding [t_0..t_{m-1}, 0.., t_{m-1}..t_1] to the
+    power-of-two L (don't-care zeros — exact for matvecs), takes the real
+    FFT spectrum and reorders it to the DIF output order so the kernel's
+    frequency multiply is position-wise.  Runs OUTSIDE the kernel, once
+    per (θ, solve) — O(m log m), hoisted out of every solver loop.
+    """
+    t = jnp.asarray(first_column)
+    m, L = geom.m_grid, geom.L
+    c = jnp.zeros(L, t.dtype).at[:m].set(t).at[L - m + 1:].set(t[1:][::-1])
+    lam = jnp.fft.fft(c).real.astype(t.dtype)
+    return lam[jnp.asarray(geom.perm)] / L      # fold the ifft 1/L here
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies (shared sandwich pieces)
+# ---------------------------------------------------------------------------
+
+def _shifted(arr, d, rows: int):
+    """arr rolled by the stencil offset d with zero fill, truncated/padded
+    to ``rows`` leading rows — the banded W/Wᵀ building block."""
+    z = jnp.zeros((abs(d),) + arr.shape[1:], arr.dtype) if d != 0 else None
+    if d == 0:
+        out = arr
+    elif d > 0:
+        out = jnp.concatenate([z, arr[:-d]])
+    else:
+        out = jnp.concatenate([arr[-d:], z])
+    if out.shape[0] < rows:
+        pad = jnp.zeros((rows - out.shape[0],) + out.shape[1:], out.dtype)
+        out = jnp.concatenate([out, pad])
+    return out[:rows]
+
+
+def _wt_apply(v, occ, wcell, offs, m_grid):
+    """Wᵀ v as one gather + s shifted FMAs: (n, ...) → (m_grid, ...)."""
+    vpad = jnp.concatenate(
+        [v, jnp.zeros((1,) + v.shape[1:], v.dtype)])     # dummy empty-cell
+    vcell = vpad[occ]                                    # (m, ...): 1 gather
+    shape = (wcell.shape[0],) + (1,) * (v.ndim - 1)
+    u = None
+    for o, d in enumerate(offs):
+        contrib = wcell[:, o].reshape(shape) * vcell
+        term = _shifted(contrib, d, m_grid)
+        u = term if u is None else u + term
+    return u
+
+
+def _w_apply(ku, wcell, cell, offs, noise2, v):
+    """W ku + noise2 v via s shifted FMAs in cell space + one row gather."""
+    shape = (wcell.shape[0],) + (1,) * (ku.ndim - 1)
+    outcell = None
+    for o, d in enumerate(offs):
+        term = wcell[:, o].reshape(shape) * _shifted(ku, -d, ku.shape[0])
+        outcell = term if outcell is None else outcell + term
+    return outcell[cell] + jnp.asarray(noise2, v.dtype) * v
+
+
+def _pack_pad(u, L, m):
+    """(m, 2c) real → ((L, c), (L, c)) zero-padded re/im pair packing."""
+    c2 = u.shape[1]
+    ur = jnp.zeros((L, c2 // 2), u.dtype).at[:m].set(u[:, 0::2])
+    ui = jnp.zeros((L, c2 // 2), u.dtype).at[:m].set(u[:, 1::2])
+    return ur, ui
+
+
+def _unpack(R, I, m):
+    """((≥m, c), (≥m, c)) → (m, 2c) interleaved real columns."""
+    return jnp.stack([R[:m], I[:m]], axis=-1).reshape(m, -1)
+
+
+def _grid_conv(ur, ui, lam_cols, geom, tabs):
+    """irfft(Λ ⊙ rfft(·)) on packed columns, fully in-kernel.
+
+    lam_cols: (L, 1) — one real spectrum shared by every packed column
+    (both real columns of a packed pair see the same Λ, so pair packing
+    stays exact).
+    """
+    cos, sin = tabs
+    R, I = _dif_fft(ur, ui, geom.meta, cos, sin, first_nonzero=geom.m_grid)
+    R, I = R * lam_cols, I * lam_cols
+    return _dit_ifft(R, I, geom.meta, cos, sin, m_keep=geom.m_grid)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
+
+def _use_interpret() -> bool:
+    from . import ops as kops
+    return kops._use_interpret()
+
+
+def _const_inputs(geom: FusedSKIGeometry, dtype):
+    """The geometry constants as kernel inputs (Pallas forbids captured
+    array constants), cast to the call dtype."""
+    ins = [jnp.asarray(geom.occ), jnp.asarray(geom.wcell, dtype),
+           jnp.asarray(geom.cell)]
+    for c in geom.cos:
+        ins.append(jnp.asarray(c, dtype))
+    for s in geom.sin:
+        ins.append(jnp.asarray(s, dtype))
+    return ins
+
+
+def _full_specs(arrays):
+    return [pl.BlockSpec(a.shape, lambda *_, sh=a.shape: (0,) * len(sh))
+            for a in arrays]
+
+
+def _split_tabs(refs, n_stages):
+    cos = [refs[i][...] for i in range(n_stages)]
+    sin = [refs[n_stages + i][...] for i in range(n_stages)]
+    return cos, sin
+
+
+def _pad_cols(v, mult=2):
+    pad = (-v.shape[-1]) % mult
+    if pad == 0:
+        return v, v.shape[-1]
+    z = jnp.zeros(v.shape[:-1] + (pad,), v.dtype)
+    return jnp.concatenate([v, z], axis=-1), v.shape[-1]
+
+
+def fused_gram_matvec(geom: FusedSKIGeometry, lam_perm, noise2: float, v):
+    """(W K_grid Wᵀ + noise2 I) v in ONE fused launch.
+
+    lam_perm: permuted spectrum from :func:`spectrum_perm` (per θ, built
+    outside); v: (n, b).  Returns (n, b).
+    """
+    v, b = _pad_cols(v)
+    n, bp = v.shape
+    n_st = len(geom.meta)
+
+    def kernel(*refs):
+        v_ref, lam_ref, occ_ref, wcell_ref, cell_ref = refs[:5]
+        cos, sin = _split_tabs(refs[5:5 + 2 * n_st], n_st)
+        o_ref = refs[5 + 2 * n_st]
+        vv = v_ref[...]
+        u = _wt_apply(vv, occ_ref[...], wcell_ref[...], geom.offs,
+                      geom.m_grid)
+        ur, ui = _pack_pad(u, geom.L, geom.m_grid)
+        R, I = _grid_conv(ur, ui, lam_ref[...][:, None], geom, (cos, sin))
+        ku = _unpack(R, I, geom.m_grid)
+        o_ref[...] = _w_apply(ku, wcell_ref[...], cell_ref[...], geom.offs,
+                              noise2, vv)
+
+    ins = [v, lam_perm.astype(v.dtype)] + _const_inputs(geom, v.dtype)
+    out = pl.pallas_call(
+        kernel, grid=(1,),
+        in_specs=_full_specs(ins),
+        out_specs=pl.BlockSpec((n, bp), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, bp), v.dtype),
+        interpret=_use_interpret(),
+    )(*ins)
+    return out[:, :b]
+
+
+def fused_tangent_matvecs(geom: FusedSKIGeometry, lams_perm, noise2: float,
+                          v):
+    """All m_dirs stacked tangents dK/dθ_i V = W (dK_grid/dθ_i) Wᵀ V in
+    ONE fused launch: the Wᵀ apply and the forward FFT are shared across
+    directions; each direction pays one spectrum multiply + inverse FFT +
+    banded gather.  lams_perm: (m_dirs, L) permuted tangent spectra
+    (``spectrum_perm`` of each first-column jacobian row).  Returns
+    (m_dirs, n, b).  (The noise diagonal is θ-independent: noise2 is
+    accepted for signature symmetry but never added here.)
+    """
+    del noise2
+    v, b = _pad_cols(v)
+    n, bp = v.shape
+    m_dirs = lams_perm.shape[0]
+    n_st = len(geom.meta)
+
+    def kernel(*refs):
+        v_ref, lam_ref, occ_ref, wcell_ref, cell_ref = refs[:5]
+        cos, sin = _split_tabs(refs[5:5 + 2 * n_st], n_st)
+        o_ref = refs[5 + 2 * n_st]
+        vv = v_ref[...]
+        wcell = wcell_ref[...]
+        cell = cell_ref[...]
+        u = _wt_apply(vv, occ_ref[...], wcell, geom.offs, geom.m_grid)
+        ur, ui = _pack_pad(u, geom.L, geom.m_grid)
+        cos_t, sin_t = cos, sin
+        R0, I0 = _dif_fft(ur, ui, geom.meta, cos_t, sin_t,
+                          first_nonzero=geom.m_grid)     # shared forward
+        for i in range(m_dirs):
+            lam = lam_ref[i][:, None]
+            R, I = _dit_ifft(R0 * lam, I0 * lam, geom.meta, cos_t, sin_t,
+                             m_keep=geom.m_grid)
+            ku = _unpack(R, I, geom.m_grid)
+            o_ref[i] = _w_apply(ku, wcell, cell, geom.offs, 0.0,
+                                jnp.zeros_like(vv))
+
+    ins = [v, lams_perm.astype(v.dtype)] + _const_inputs(geom, v.dtype)
+    out = pl.pallas_call(
+        kernel, grid=(1,),
+        in_specs=_full_specs(ins),
+        out_specs=pl.BlockSpec((m_dirs, n, bp), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_dirs, n, bp), v.dtype),
+        interpret=_use_interpret(),
+    )(*ins)
+    return out[:, :, :b]
+
+
+def fused_bank_matvec(geom: FusedSKIGeometry, lams_perm, noise2: float, V):
+    """Bank gram matvec (n, B, c) → (n, B, c) in ONE fused launch.
+
+    lams_perm: (B, L) — one permuted spectrum per bank member (kernels
+    differ only in their spectra; the W geometry is shared).  Columns are
+    pair-packed WITHIN each member so both halves of a packed complex
+    column share the member's real spectrum.
+    """
+    n, B, c = V.shape
+    V, c0 = _pad_cols(V)
+    cp = V.shape[-1]
+    n_st = len(geom.meta)
+
+    def kernel(*refs):
+        v_ref, lam_ref, occ_ref, wcell_ref, cell_ref = refs[:5]
+        cos, sin = _split_tabs(refs[5:5 + 2 * n_st], n_st)
+        o_ref = refs[5 + 2 * n_st]
+        vv = v_ref[...]                                   # (n, B, cp)
+        u = _wt_apply(vv, occ_ref[...], wcell_ref[...], geom.offs,
+                      geom.m_grid)                        # (m, B, cp)
+        u2 = u.reshape(geom.m_grid, -1)                   # (m, B*cp)
+        ur, ui = _pack_pad(u2, geom.L, geom.m_grid)       # (L, B*cp/2)
+        # _pack_pad pairs ADJACENT flat columns; flat order is member-major
+        # (B outer, cp inner) and cp is even, so each packed pair stays
+        # inside one member and shares that member's real spectrum.
+        R, I = _dif_fft(ur, ui, geom.meta, cos, sin,
+                        first_nonzero=geom.m_grid)
+        lam = lam_ref[...].T[:, :, None]                  # (L, B, 1)
+        R = (R.reshape(geom.L, B, cp // 2) * lam).reshape(geom.L, -1)
+        I = (I.reshape(geom.L, B, cp // 2) * lam).reshape(geom.L, -1)
+        R, I = _dit_ifft(R, I, geom.meta, cos, sin, m_keep=geom.m_grid)
+        ku = _unpack(R, I, geom.m_grid).reshape(geom.m_grid, vv.shape[1],
+                                                vv.shape[2])
+        o_ref[...] = _w_apply(ku, wcell_ref[...], cell_ref[...], geom.offs,
+                              noise2, vv)
+
+    ins = [V, lams_perm.astype(V.dtype)] + _const_inputs(geom, V.dtype)
+    out = pl.pallas_call(
+        kernel, grid=(1,),
+        in_specs=_full_specs(ins),
+        out_specs=pl.BlockSpec((n, B, cp), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, B, cp), V.dtype),
+        interpret=_use_interpret(),
+    )(*ins)
+    return out[:, :, :c0]

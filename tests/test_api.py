@@ -157,19 +157,33 @@ KERNEL_BANK = ("se", "matern12", "matern32", "matern52")
 
 def test_compare_batch_mode_contracts():
     """batch='on' raises (not silently degrades) when the bank cannot run
-    batched: with run_nested, with a pivchol precond, or off-grid."""
+    batched: with run_nested, with an explicit operator override, or
+    off-grid.  An explicit pivchol precond is NO LONGER a blocker — the
+    bank preconditions with its own batched pivoted-Cholesky factor
+    (tests/test_precond_slq.py pins the batched-vs-sequential agreement).
+    """
     x, y = _grid_data(n=32)
     pol = gp.SolverPolicy(backend="iterative")
     specs = gp.spec_bank(["se", "matern32"], noise=gp.NoiseModel(0.1),
                          solver=pol)
     with pytest.raises(ValueError, match="run_nested"):
         gp.compare(specs, x, y, batch="on", run_nested=True)
-    pv = gp.SolverPolicy(backend="iterative",
-                         opts=E.SolverOpts(precond="pivchol"))
+    po = gp.SolverPolicy(backend="iterative",
+                         opts=E.SolverOpts(operator="pallas"))
     with pytest.raises(ValueError, match="cannot run batched"):
         gp.compare(gp.spec_bank(["se", "matern32"],
-                                noise=gp.NoiseModel(0.1), solver=pv),
+                                noise=gp.NoiseModel(0.1), solver=po),
                    x, y, batch="on")
+    pv = gp.SolverPolicy(backend="iterative",
+                         opts=E.SolverOpts(precond="pivchol",
+                                           precond_rank=8,
+                                           n_probes=2, lanczos_k=4),
+                         n_starts=1, max_iters=1, multimodal=False)
+    reps = gp.compare(gp.spec_bank(["se", "matern32"],
+                                   noise=gp.NoiseModel(0.1), solver=pv),
+                      x, y, key=jax.random.key(0), batch="on")
+    assert len(reps) == 2
+    assert all(np.isfinite(r.log_p_max) for r in reps)
     rng = np.random.default_rng(0)
     xr = jnp.asarray(np.sort(rng.uniform(0, 30, 32)))
     with pytest.raises(ValueError, match="cannot run batched"):
@@ -496,3 +510,10 @@ def test_public_api_snapshot():
     assert gp.SolverPolicy._fields == (
         "backend", "opts", "n_starts", "max_iters", "grad_tol",
         "scan_points", "multimodal", "dense_cutoff")
+    # the engine knobs are public surface too (PR 5 adds precond="auto"
+    # semantics and the fused= kernel selector)
+    assert E.SolverOpts._fields == (
+        "n_probes", "lanczos_k", "cg_tol", "cg_max_iter", "precond_rank",
+        "fd_step", "operator", "precond", "fused")
+    assert E.SolverOpts().precond is None
+    assert E.SolverOpts().fused == "auto"

@@ -1,0 +1,319 @@
+"""Fused Pallas gather→FFT→scatter SKI kernel (DESIGN.md §12).
+
+Covers: the in-kernel FFT plan against numpy's FFT, fused-vs-unfused
+exactness for gram and stacked tangent matvecs (both dtypes, odd/1-column
+batches), the distinct-cell geometry guard and the ``fused=`` resolution
+rules, the fused bank matvec, the one-fused-launch-per-CG-iteration /
+no-fft-in-loop jaxpr contract, end-to-end agreement through the gp front
+door, and the new SolverOpts/GPSpec validation errors.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import gp
+from repro.core import covariances as C
+from repro.core import engine as E
+from repro.core import iterative as I
+from repro.core.reparam import flat_box
+from repro.gp import batch as B
+from repro.gp.spec import pad_boxes
+from repro.kernels import operators as OPS
+from repro.kernels import ski_fused as F
+
+from test_engine import _all_avals
+
+THETA_K2 = jnp.asarray([3.2, 1.5, 0.05, 2.8, -0.1])
+
+
+def _gappy(n_full=4800, drop=0.1, h=2.0, seed=0):
+    rng = np.random.default_rng(seed)
+    grid = np.arange(n_full, dtype=np.float64) * h
+    return jnp.asarray(grid[rng.uniform(size=n_full) > drop])
+
+
+# ---------------------------------------------------------------------------
+# The in-kernel FFT plan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("L", [8, 64, 512, 4096, 16384, 96, 3072, 24576])
+def test_dif_dit_fft_plan_matches_numpy(L):
+    """DIF forward (natural → digit-reversed) and DIT inverse
+    (digit-reversed → natural) reproduce numpy's FFT pair for every
+    mixed radix-8/4/2 factorisation the plan generator emits."""
+    radices = F._factor_stages(L)
+    perm = F._perm_build(L, radices)
+    cos, sin, meta = F._twiddle_tables(L, radices)
+    cj = [jnp.asarray(c) for c in cos]
+    sj = [jnp.asarray(s) for s in sin]
+    rng = np.random.default_rng(L)
+    xr = rng.normal(size=(L, 3))
+    xi = rng.normal(size=(L, 3))
+    R, Im = F._dif_fft(jnp.asarray(xr), jnp.asarray(xi), meta, cj, sj)
+    want = np.fft.fft(xr + 1j * xi, axis=0)[perm]
+    got = np.asarray(R) + 1j * np.asarray(Im)
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9
+                               * np.max(np.abs(want)))
+    # inverse roundtrip (1/L normalisation lives in the caller's spectrum)
+    br, bi = F._dit_ifft(R, Im, meta, cj, sj)
+    np.testing.assert_allclose(np.asarray(br) / L, xr, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(bi) / L, xi, atol=1e-12)
+
+
+def test_fft_pruning_is_exact():
+    """Stage-1 input pruning (zero-padded tail) and last-stage output
+    truncation change nothing in the kept rows."""
+    L, m = 512, 170
+    radices = F._factor_stages(L)
+    cos, sin, meta = F._twiddle_tables(L, radices)
+    cj = [jnp.asarray(c) for c in cos]
+    sj = [jnp.asarray(s) for s in sin]
+    rng = np.random.default_rng(3)
+    xr = np.zeros((L, 2))
+    xr[:m] = rng.normal(size=(m, 2))
+    z = jnp.zeros_like(jnp.asarray(xr))
+    R0, I0 = F._dif_fft(jnp.asarray(xr), z, meta, cj, sj)
+    R1, I1 = F._dif_fft(jnp.asarray(xr), z, meta, cj, sj, first_nonzero=m)
+    np.testing.assert_allclose(np.asarray(R1), np.asarray(R0), atol=1e-12)
+    b0, _ = F._dit_ifft(R0, I0, meta, cj, sj)
+    b1, _ = F._dit_ifft(R0, I0, meta, cj, sj, m_keep=m)
+    assert b1.shape[0] >= m
+    np.testing.assert_allclose(np.asarray(b1)[:m], np.asarray(b0)[:m],
+                               atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Fused operator exactness vs the unfused composition / dense oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b", [1, 3, 8])
+def test_fused_gram_matches_unfused(b):
+    x = _gappy(1200)
+    n = int(x.shape[0])
+    skf = OPS.SKIOperator("k2", x, 0.1, 1e-8, fused=True)
+    sku = OPS.SKIOperator("k2", x, 0.1, 1e-8, fused=False)
+    rng = np.random.default_rng(b)
+    v = jnp.asarray(rng.normal(size=(n, b)))
+    want = jax.jit(lambda vv: sku.gram_matvec(THETA_K2, vv))(v)
+    got = jax.jit(lambda vv: skf.gram_matvec(THETA_K2, vv))(v)
+    scale = float(jnp.max(jnp.abs(want)))
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-9 * scale
+    # 1-D round trip
+    got1 = jax.jit(lambda vv: skf.gram_matvec(THETA_K2, vv))(v[:, 0])
+    assert got1.shape == (n,)
+    np.testing.assert_allclose(np.asarray(got1), np.asarray(want[:, 0]),
+                               atol=1e-9 * scale)
+
+
+def test_fused_gram_matches_dense_on_gappy_grid():
+    """Gappy-grid W is a selection matrix, so the fused surrogate must hit
+    the dense build_K to fp precision — exactly like the unfused path."""
+    x = _gappy(600, drop=0.12, seed=5)
+    n = int(x.shape[0])
+    theta = jnp.asarray([5.0, 2.5, 0.05])
+    op = OPS.SKIOperator("k1", x, 0.01, 1e-8, fused=True)
+    K = C.build_K(C.K1, theta, x, 0.01, 1e-8)
+    v = jnp.asarray(np.random.default_rng(0).normal(size=(n, 3)))
+    want = K @ v
+    got = jax.jit(lambda vv: op.gram_matvec(theta, vv))(v)
+    assert float(jnp.max(jnp.abs(got - want))) \
+        <= 1e-9 * float(jnp.max(jnp.abs(want)))
+
+
+def test_fused_tangents_match_unfused():
+    x = _gappy(1200)
+    n = int(x.shape[0])
+    skf = OPS.SKIOperator("k2", x, 0.1, 1e-8, fused=True)
+    sku = OPS.SKIOperator("k2", x, 0.1, 1e-8, fused=False)
+    v = jnp.asarray(np.random.default_rng(1).normal(size=(n, 4)))
+    want = jax.jit(lambda vv: sku.tangent_matvecs(THETA_K2, vv))(v)
+    got = jax.jit(lambda vv: skf.tangent_matvecs(THETA_K2, vv))(v)
+    assert got.shape == want.shape == (5, n, 4)
+    scale = float(jnp.max(jnp.abs(want))) + 1e-30
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-9 * scale
+
+
+def test_fused_float32_accuracy():
+    x = jnp.asarray(np.asarray(_gappy(1200)), jnp.float32)
+    n = int(x.shape[0])
+    theta32 = THETA_K2.astype(jnp.float32)
+    skf = OPS.SKIOperator("k2", x, 0.1, 1e-8, fused=True)
+    sku = OPS.SKIOperator("k2", x, 0.1, 1e-8, fused=False)
+    v = jnp.asarray(np.random.default_rng(2).normal(size=(n, 8)),
+                    jnp.float32)
+    want = jax.jit(lambda vv: sku.gram_matvec(theta32, vv))(v)
+    got = jax.jit(lambda vv: skf.gram_matvec(theta32, vv))(v)
+    rel = float(jnp.max(jnp.abs(got - want)) / jnp.max(jnp.abs(want)))
+    assert rel < 1e-5, rel
+
+
+# ---------------------------------------------------------------------------
+# Geometry guard + resolution rules
+# ---------------------------------------------------------------------------
+
+def test_fused_geometry_requires_distinct_cells():
+    rng = np.random.default_rng(7)
+    x_scatter = jnp.asarray(np.sort(rng.uniform(0.0, 300.0, 400)))
+    op = OPS.SKIOperator("se", x_scatter, 0.1, 1e-8, fused="auto")
+    assert op.fused_geom is None and op.fused is False
+    with pytest.raises(ValueError, match="distinct-cell"):
+        OPS.SKIOperator("se", x_scatter, 0.1, 1e-8, fused=True)
+    # near-grid geometry IS supported
+    op2 = OPS.SKIOperator("se", _gappy(800), 0.1, 1e-8, fused=True)
+    assert op2.fused_geom is not None and op2.fused is True
+
+
+def test_fused_auto_size_crossover():
+    small = _gappy(256)
+    big = _gappy(4800)
+    assert OPS.SKIOperator("se", small, 0.1, 1e-8, fused="auto").fused \
+        is False
+    assert OPS.SKIOperator("se", big, 0.1, 1e-8, fused="auto").fused \
+        is True
+    assert int(big.shape[0]) >= F.FUSED_AUTO_MIN_N
+
+
+def test_fused_validation_errors_list_choices():
+    with pytest.raises(ValueError, match=r"choose from"):
+        OPS.select_operator("se", _gappy(300), 0.1, 1e-8, fused="sometimes")
+    with pytest.raises(ValueError, match=r"fused"):
+        gp.GPSpec(kernel="se", solver=gp.SolverPolicy(
+            opts=E.SolverOpts(fused="yes")))
+    with pytest.raises(ValueError, match=r"auto"):
+        gp.GPSpec(kernel="se", solver=gp.SolverPolicy(
+            opts=E.SolverOpts(precond="strang")))
+
+
+# ---------------------------------------------------------------------------
+# Bank fused matvec
+# ---------------------------------------------------------------------------
+
+def test_fused_bank_matvec_matches_unfused():
+    x = _gappy(1400, seed=9)
+    n = int(x.shape[0])
+    kinds = ("k1", "se", "matern32")
+    covs = [C.REGISTRY[k] for k in kinds]
+    m_max = max(c.n_params for c in covs)
+    pbox = pad_boxes([flat_box(c, x) for c in covs], m_max)
+    thetas = 0.5 * (pbox.lo + pbox.hi)
+    bf = B.BankOperator(kinds, x, 0.1, 1e-8, fused=True)
+    bu = B.BankOperator(kinds, x, 0.1, 1e-8, fused=False)
+    V = jnp.asarray(np.random.default_rng(4).normal(size=(n, 3, 3)))
+    want = jax.jit(bu.bind_matvec(thetas, V.dtype))(V)
+    got = jax.jit(bf.bind_matvec(thetas, V.dtype))(V)
+    scale = float(jnp.max(jnp.abs(want)))
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-9 * scale
+    # exact-grid banks have no W to fuse around: auto stays unfused
+    xg = jnp.arange(1024, dtype=jnp.float64) * 2.0
+    assert B.BankOperator(("se",), xg, 0.1, 1e-8).fused is False
+
+
+# ---------------------------------------------------------------------------
+# The launch-count / memory jaxpr contract
+# ---------------------------------------------------------------------------
+
+def _loop_primitive_counts(jaxpr, names):
+    """Per while/scan loop body: count of each primitive name in it."""
+    from jax.core import ClosedJaxpr, Jaxpr
+    counts = []
+
+    def count(j):
+        c = {nm: 0 for nm in names}
+        for eqn in j.eqns:
+            if eqn.primitive.name in c:
+                c[eqn.primitive.name] += 1
+            for p in eqn.params.values():
+                for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                    if isinstance(sub, ClosedJaxpr):
+                        sub = sub.jaxpr
+                    if isinstance(sub, Jaxpr):
+                        for nm, v in count(sub).items():
+                            c[nm] += v
+        return c
+
+    def walk(j):
+        for eqn in j.eqns:
+            if eqn.primitive.name in ("while", "scan"):
+                for p in eqn.params.values():
+                    for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                        if isinstance(sub, ClosedJaxpr):
+                            counts.append(count(sub.jaxpr))
+            else:
+                for p in eqn.params.values():
+                    for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                        if isinstance(sub, ClosedJaxpr):
+                            sub = sub.jaxpr
+                        if isinstance(sub, Jaxpr):
+                            walk(sub)
+
+    walk(jaxpr)
+    return counts
+
+
+def test_fused_cg_one_launch_no_fft_no_dense_intermediates():
+    """Acceptance contract: with the fused kernel active, every traced CG
+    loop body contains EXACTLY ONE pallas_call and ZERO fft ops (the
+    spectrum is bound outside the loop), and no (n, n) / (n, m_grid) /
+    (m_grid, m_grid) buffer exists anywhere in the program."""
+    x = _gappy(4800)
+    n = int(x.shape[0])
+    assert n >= 4096
+    op = OPS.SKIOperator("k2", x, 0.1, 1e-8, fused=True)
+    m_grid = op.m_grid
+    mv = op.bound_gram_matvec(THETA_K2, jnp.float64)
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.normal(size=(n, 5)))
+
+    jaxpr = jax.make_jaxpr(
+        lambda bb: I.cg_solve(mv, bb, max_iter=20).x)(b)
+    counts = _loop_primitive_counts(jaxpr.jaxpr, ("pallas_call", "fft"))
+    cg_loops = [c for c in counts if c["pallas_call"] > 0 or c["fft"] > 0]
+    assert cg_loops, "no launch-bearing loop found — walker broken?"
+    for c in cg_loops:
+        assert c["pallas_call"] == 1, counts
+        assert c["fft"] == 0, counts
+    avals = [a for a in _all_avals(jaxpr.jaxpr) if hasattr(a, "shape")]
+    bad = [a for a in avals
+           if a.shape and (tuple(a.shape).count(n) >= 2
+                           or tuple(a.shape).count(m_grid) >= 2
+                           or (n in tuple(a.shape)
+                               and m_grid in tuple(a.shape)))]
+    assert not bad, sorted({tuple(a.shape) for a in bad})
+
+
+def test_fused_solver_value_and_grad_agree_with_unfused():
+    """End-to-end: the engine's value+gradient with the fused kernel
+    matches the unfused path to solver tolerance on the same probes."""
+    x = _gappy(2400, seed=11)
+    y = jnp.sin(0.05 * x) + 0.1 * jnp.asarray(
+        np.random.default_rng(1).normal(size=x.shape[0]))
+    theta = jnp.asarray([5.0, jnp.log(60.0), 0.05])
+    outs = {}
+    for fused in (True, False):
+        s = E.make_solver(
+            "iterative", C.K1, theta, x, y, 0.1, key=jax.random.key(5),
+            opts=E.SolverOpts(n_probes=8, lanczos_k=32, cg_tol=1e-10,
+                              fused=fused))
+        assert s.op.name == "ski" and s.op.fused is fused
+        outs[fused] = (E.profiled_loglik(s), E.profiled_grad(s))
+    lp_f, g_f = outs[True]
+    lp_u, g_u = outs[False]
+    np.testing.assert_allclose(float(lp_f), float(lp_u), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(g_f), np.asarray(g_u),
+                               rtol=1e-4, atol=1e-8)
+
+
+def test_front_door_binds_fused_operator():
+    x = _gappy(4800)
+    y = jnp.sin(0.05 * x)
+    spec = gp.GPSpec(kernel="k1", noise=gp.NoiseModel(0.1),
+                     solver=gp.SolverPolicy(backend="iterative"))
+    sess = gp.GP.bind(spec, x, y)
+    assert sess.operator_name == "ski" and sess.op.fused is True
+    off = gp.GPSpec(kernel="k1", noise=gp.NoiseModel(0.1),
+                    solver=gp.SolverPolicy(
+                        backend="iterative",
+                        opts=E.SolverOpts(fused=False)))
+    assert gp.GP.bind(off, x, y).op.fused is False

@@ -1,0 +1,323 @@
+"""Preconditioned SLQ / Lanczos log-determinants (DESIGN.md §12).
+
+Covers: the Strang-circulant SLQ preconditioner's exactness properties
+(SPD apply, analytic ln det, N(0, P) sampling), the preconditioned
+Lanczos recurrence against dense ``slogdet`` on an ILL-CONDITIONED
+quasi-periodic kernel with the ≤ ½-lanczos_k acceptance pin, the pivchol
+SLQ variant on the gappy/SKI path, θ-gradients of the log-det against
+dense autodiff, the "auto" policy resolution rules (including the small-n
+fix), bank-wide preconditioned SLQ and the bank pivchol batched-vs-
+sequential agreement.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import covariances as C
+from repro.core import engine as E
+from repro.core import hyperlik as H
+from repro.core import iterative as I
+from repro.core.reparam import flat_box
+from repro.gp import batch as B
+from repro.gp.spec import pad_boxes
+from repro.kernels import operators as OPS
+
+# an ill-conditioned quasi-periodic k1: short periodic lengthscale, tiny
+# noise — cond(K) ~ 3e7, the regime where plain SLQ's lanczos_k blows up
+ILL_THETA = jnp.asarray([5.0, 2.5, 0.05])
+ILL_SIGMA, ILL_JITTER = 1e-3, 1e-10
+N_GRID = 400
+
+
+@pytest.fixture(scope="module")
+def ill_grid():
+    x = jnp.arange(N_GRID, dtype=jnp.float64) * 2.0
+    K = C.build_K(C.K1, ILL_THETA, x, ILL_SIGMA, ILL_JITTER)
+    exact = float(np.linalg.slogdet(np.asarray(K))[1])
+    return x, K, exact
+
+
+@pytest.fixture(scope="module")
+def gappy_ill():
+    rng = np.random.default_rng(1)
+    grid = np.arange(500, dtype=np.float64) * 2.0
+    x = jnp.asarray(grid[rng.uniform(size=500) > 0.15])
+    K = C.build_K(C.K1, ILL_THETA, x, ILL_SIGMA, ILL_JITTER)
+    exact = float(np.linalg.slogdet(np.asarray(K))[1])
+    return x, K, exact
+
+
+# ---------------------------------------------------------------------------
+# Strang SLQ preconditioner building blocks
+# ---------------------------------------------------------------------------
+
+def test_strang_slq_precond_is_consistent(ill_grid):
+    """apply_inv is the SPD inverse of the matrix the sampler draws from,
+    and logdet is ITS exact log-determinant — the three accessors describe
+    ONE matrix P."""
+    x, _, _ = ill_grid
+    op = OPS.ToeplitzOperator("k1", x, ILL_SIGMA, ILL_JITTER)
+    sp = op.slq_precond(ILL_THETA)
+    n = N_GRID
+    eye = jnp.eye(n)
+    Pinv = jnp.stack([sp.apply_inv(eye[:, i][:, None])[:, 0]
+                      for i in range(n)], axis=1)
+    np.testing.assert_allclose(np.asarray(Pinv), np.asarray(Pinv.T),
+                               atol=1e-10)
+    P = np.linalg.inv(np.asarray(Pinv))
+    lam = np.linalg.eigvalsh(np.asarray(P))
+    assert lam.min() > 0.0
+    np.testing.assert_allclose(float(sp.logdet),
+                               float(np.linalg.slogdet(P)[1]), rtol=1e-8)
+    # sampler covariance == P (moment check on many draws)
+    z = sp.sample(jax.random.key(0), 20000)
+    cov = np.asarray(z @ z.T) / z.shape[1]
+    scale = np.max(np.abs(P))
+    assert np.max(np.abs(cov - P)) < 0.05 * scale
+
+
+def test_pivchol_logdet_formula_exact(gappy_ill):
+    """(n−r) ln σ² + 2 Σ ln diag chol(σ²I + LᵀL) == slogdet(LLᵀ + σ²I)."""
+    x, _, _ = gappy_ill
+    op = OPS.select_operator("k1", x, ILL_SIGMA, ILL_JITTER)
+    _, slq = I._pivchol_slq_parts(op, ILL_THETA, rank=24)
+    # rebuild P densely from the same factor
+    L = I.pivoted_cholesky(op.diag(ILL_THETA),
+                           lambda i: op.matcol(ILL_THETA, i), 24)
+    P = np.asarray(L @ L.T) + op.noise2 * np.eye(op.n)
+    np.testing.assert_allclose(float(slq.logdet),
+                               float(np.linalg.slogdet(P)[1]), rtol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# The acceptance pin: matched accuracy at ≤ half the Lanczos iterations
+# ---------------------------------------------------------------------------
+
+def test_precond_slq_halves_lanczos_k_on_ill_conditioned_kernel(ill_grid):
+    """Acceptance criterion: on the ill-conditioned quasi-periodic kernel
+    the preconditioned estimator at k = lanczos_k/2 must be at least as
+    accurate as plain SLQ at k = lanczos_k (same probe count) — observed:
+    it beats plain at k = 8 vs 256 (a 32x budget gap), so the ½ pin has
+    wide margin."""
+    x, _, exact = ill_grid
+    op = OPS.ToeplitzOperator("k1", x, ILL_SIGMA, ILL_JITTER)
+    mv = op.bound_gram_matvec(ILL_THETA, jnp.float64)
+    sp = op.slq_precond(ILL_THETA)
+    key = jax.random.key(0)
+
+    def err_pre(k):
+        est = I.slq_logdet_precond(mv, sp, key, n_probes=16, k=k)
+        return abs(float(est) - exact)
+
+    def err_plain(k):
+        est = I.slq_logdet(mv, N_GRID, key, n_probes=16, k=k)
+        return abs(float(est) - exact)
+
+    for k in (16, 32, 64):
+        assert err_pre(k // 2) < err_plain(k), (k, err_pre(k // 2),
+                                               err_plain(k))
+    # absolute accuracy: preconditioned k=8 inside 0.2% of dense slogdet
+    assert err_pre(8) < 2e-3 * abs(exact)
+    # ... where plain SLQ at k=64 is still >5% off (the blow-up this
+    # preconditioner exists to fix)
+    assert err_plain(64) > 5e-2 * abs(exact)
+
+
+def test_pivchol_slq_accuracy_on_gappy_ski(gappy_ill):
+    """The pivoted-Cholesky SLQ variant (the only SLQ-capable choice on
+    near-grid/scattered data) converges to dense slogdet on the gappy
+    ill-conditioned set at adequate rank."""
+    x, _, exact = gappy_ill
+    op = OPS.select_operator("k1", x, ILL_SIGMA, ILL_JITTER)
+    assert op.name == "ski"
+    mv = op.bound_gram_matvec(ILL_THETA, jnp.float64)
+    _, slq = I._pivchol_slq_parts(op, ILL_THETA, rank=128)
+    est = float(I.slq_logdet_precond(mv, slq, jax.random.key(1),
+                                     n_probes=16, k=32))
+    assert abs(est - exact) < 1e-2 * abs(exact)
+
+
+def test_precond_slq_through_engine_and_gradients(ill_grid):
+    """IterativeSolver with precond="circulant" on the exact grid runs
+    the preconditioned log-det; value AND θ-gradient match the dense
+    backend (autodiff) on the ill-conditioned kernel."""
+    x, _, exact = ill_grid
+    y = jnp.sin(0.05 * x) + 0.01 * jnp.asarray(
+        np.random.default_rng(3).normal(size=N_GRID))
+    s = E.make_solver("iterative", C.K1, ILL_THETA, x, y, ILL_SIGMA,
+                      key=jax.random.key(7), jitter=ILL_JITTER,
+                      opts=E.SolverOpts(n_probes=16, lanczos_k=12,
+                                        cg_tol=1e-11, cg_max_iter=3000,
+                                        precond="circulant"))
+    assert s._precond is not None and s._precond.slq is not None
+    assert abs(float(s.logdet()) - exact) < 2e-3 * abs(exact)
+    sd = E.make_solver("dense", C.K1, ILL_THETA, x, y, ILL_SIGMA,
+                       jitter=ILL_JITTER)
+    lp_i, lp_d = float(E.profiled_loglik(s)), float(E.profiled_loglik(sd))
+    assert abs(lp_i - lp_d) < 0.02 * abs(lp_d)
+    g_i, g_d = E.profiled_grad(s), E.profiled_grad(sd)
+    cos = float(jnp.dot(g_i, g_d)
+                / (jnp.linalg.norm(g_i) * jnp.linalg.norm(g_d)))
+    assert cos > 0.99, cos
+
+
+def test_dlndet_dtheta_matches_dense_autodiff(ill_grid):
+    """∂lndet/∂θ through the preconditioned path: the Hutchinson trace
+    term tr(K⁻¹ dK_i) built from preconditioned CG solves matches the
+    autodiff derivative of dense slogdet."""
+    x, _, _ = ill_grid
+
+    def dense_lndet(th):
+        K = C.build_K(C.K1, th, x, ILL_SIGMA, ILL_JITTER)
+        return jnp.linalg.slogdet(K)[1]
+
+    want = jax.grad(dense_lndet)(ILL_THETA)
+    op = OPS.ToeplitzOperator("k1", x, ILL_SIGMA, ILL_JITTER)
+    mv = op.bound_gram_matvec(ILL_THETA, jnp.float64)
+    M = I.make_preconditioner(op, ILL_THETA, "circulant")
+    z = jax.random.rademacher(jax.random.key(2), (N_GRID, 64)
+                              ).astype(jnp.float64)
+    Kinv_z = I.cg_solve(mv, z, tol=1e-11, max_iter=4000,
+                        precond=M.apply).x
+    dkv = op.tangent_matvecs(ILL_THETA, z)          # (m, n, p)
+    got = jnp.mean(jnp.einsum("jp,mjp->mp", Kinv_z, dkv), axis=-1)
+    cos = float(jnp.dot(got, want)
+                / (jnp.linalg.norm(got) * jnp.linalg.norm(want)))
+    assert cos > 0.99
+    assert float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want)) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# The precond="auto" policy (the small-n fix)
+# ---------------------------------------------------------------------------
+
+def test_resolve_precond_auto_rules():
+    x_small = jnp.arange(285, dtype=jnp.float64) * 2.0
+    x_big = jnp.arange(4096, dtype=jnp.float64) * 2.0
+    op_s = OPS.select_operator("k1", x_small, 0.01, 1e-8)
+    op_b = OPS.select_operator("k1", x_big, 0.01, 1e-8)
+    # the n=285 regression fix: auto resolves to NO preconditioner there
+    assert I.resolve_precond("auto", op_s) is None
+    assert I.resolve_precond("auto", op_b) == "circulant"
+    # the conditioning probe: a LOUD noise floor means plain CG converges
+    # before the preconditioner amortises — auto declines even at large n
+    op_loud = OPS.select_operator("k1", x_big, 0.5, 1e-8)
+    assert I.resolve_precond("auto", op_loud) is None
+    rng = np.random.default_rng(0)
+    op_i = OPS.select_operator(
+        "se", jnp.asarray(np.sort(rng.uniform(0, 9000, 4500))), 0.01, 1e-8)
+    assert op_i.name == "pallas"
+    assert I.resolve_precond("auto", op_i) is None      # no FFT structure
+    # passthroughs + legacy rank spelling unchanged
+    assert I.resolve_precond(None, op_b) is None
+    assert I.resolve_precond(None, op_b, precond_rank=16) == "pivchol"
+    assert I.resolve_precond("pivchol", op_s) == "pivchol"
+    with pytest.raises(ValueError, match="auto"):
+        I.resolve_precond("strang", op_b)
+
+
+def test_make_preconditioner_bundle_shapes(ill_grid):
+    x, _, _ = ill_grid
+    op = OPS.ToeplitzOperator("k1", x, ILL_SIGMA, ILL_JITTER)
+    pc = I.make_preconditioner(op, ILL_THETA, "circulant")
+    assert pc.choice == "circulant" and pc.slq is not None
+    # pivchol is SLQ-capable only at adequate rank — a low-rank P
+    # estimates the log-det WORSE than plain SLQ, so it preconditions
+    # CG only (pre-PR behaviour preserved at the default rank 32)
+    pc2 = I.make_preconditioner(op, ILL_THETA, "pivchol", 16)
+    assert pc2.choice == "pivchol" and pc2.slq is None
+    pc3 = I.make_preconditioner(op, ILL_THETA, "pivchol",
+                                I._PIVCHOL_SLQ_MIN_RANK)
+    assert pc3.slq is not None
+    assert I.make_preconditioner(op, ILL_THETA, None) is None
+    # auto below the crossover resolves to None (n = 400 < min-n)
+    assert I.make_preconditioner(op, ILL_THETA, "auto") is None
+    # SKI + circulant: CG apply exists, SLQ accessors do not (grid-space
+    # sandwich has no analytic determinant) -> plain SLQ fallback
+    rng = np.random.default_rng(2)
+    grid = np.arange(500, dtype=np.float64) * 2.0
+    xg = jnp.asarray(grid[rng.uniform(size=500) > 0.15])
+    ski = OPS.select_operator("k1", xg, 0.1, 1e-8)
+    pc3 = I.make_preconditioner(ski, ILL_THETA, "circulant")
+    assert pc3.slq is None and callable(pc3.apply)
+
+
+# ---------------------------------------------------------------------------
+# Bank-wide: preconditioned bank SLQ + bank pivchol agreement
+# ---------------------------------------------------------------------------
+
+def test_bank_precond_slq_matches_dense_per_member():
+    xg = jnp.arange(N_GRID, dtype=jnp.float64) * 2.0
+    kinds = ("k1", "se")
+    thetas = jnp.stack([ILL_THETA, jnp.asarray([2.0, 0.0, 0.0])])
+    bank = B.BankOperator(kinds, xg, ILL_SIGMA, ILL_JITTER)
+    mv = bank.bind_matvec(thetas, jnp.float64)
+    sp = bank.bind_slq_precond(thetas, jnp.float64)
+    assert sp is not None
+    ld = B.bank_slq_logdet_precond(mv, sp, N_GRID, 2, jax.random.key(0),
+                                   n_probes=16, k=10)
+    for bi, (cov, th) in enumerate([(C.K1, ILL_THETA),
+                                    (C.SE, jnp.asarray([2.0]))]):
+        K = C.build_K(cov, th, xg, ILL_SIGMA, ILL_JITTER)
+        exact = float(np.linalg.slogdet(np.asarray(K))[1])
+        assert abs(float(ld[bi]) - exact) < 5e-3 * abs(exact), (bi, exact)
+
+
+def test_bank_pivchol_agrees_with_sequential(gappy_ill):
+    """Satellite acceptance: the bank-aware pivoted-Cholesky apply equals
+    the per-member sequential builder (same rank, same pivots) on both
+    bank structures."""
+    x_near, _, _ = gappy_ill
+    x_exact = jnp.arange(300, dtype=jnp.float64) * 2.0
+    rng = np.random.default_rng(5)
+    for x in (x_exact, x_near):
+        n = int(x.shape[0])
+        kinds = ("k1", "se", "matern32")
+        covs = [C.REGISTRY[k] for k in kinds]
+        m_max = max(c.n_params for c in covs)
+        pbox = pad_boxes([flat_box(c, x) for c in covs], m_max)
+        thetas = 0.5 * (pbox.lo + pbox.hi)
+        bank = B.BankOperator(kinds, x, 0.1, 1e-8)
+        apply_b, slq_b = bank.bind_pivchol_precond(thetas, jnp.float64, 20)
+        r = jnp.asarray(rng.normal(size=(n, 3, 2)))
+        got = apply_b(r)
+        for bi, k in enumerate(kinds):
+            op = OPS.select_operator(k, x, 0.1, 1e-8)
+            th = thetas[bi][:covs[bi].n_params]
+            M = I.pivoted_cholesky_precond_for_operator(op, th, 20)
+            want = M(r[:, bi, :])
+            scale = float(jnp.max(jnp.abs(want)))
+            assert float(jnp.max(jnp.abs(got[:, bi] - want))) \
+                < 1e-10 * scale, (k, bank.structure)
+            # per-member exact logdet agrees with the sequential factor
+            _, slq_seq = I._pivchol_slq_parts(op, th, 20)
+            np.testing.assert_allclose(float(slq_b.logdet[bi]),
+                                       float(slq_seq.logdet), rtol=1e-10)
+
+
+def test_bank_objective_precond_policy(gappy_ill):
+    """make_bank_objective resolves "auto" through the same policy and
+    still produces finite values/gradients with each precond choice."""
+    x, _, _ = gappy_ill
+    n = int(x.shape[0])
+    y = jnp.sin(0.05 * x)
+    kinds = ("k1", "se")
+    covs = [C.REGISTRY[k] for k in kinds]
+    m_max = max(c.n_params for c in covs)
+    pbox = pad_boxes([flat_box(c, x) for c in covs], m_max)
+    thetas = 0.5 * (pbox.lo + pbox.hi)
+    bank = B.BankOperator(kinds, x, 0.1, 1e-8)
+    assert bank.resolve_precond(E.SolverOpts(precond="auto")) is None
+    assert bank.resolve_precond(
+        E.SolverOpts(precond="circulant")) == "circulant"
+    for pc in (None, "circulant", "pivchol", "auto"):
+        obj = B.make_bank_objective(
+            bank, pbox, y, jax.random.key(0),
+            E.SolverOpts(n_probes=4, lanczos_k=8, cg_max_iter=30,
+                         precond=pc))
+        lp, g = jax.jit(obj.value_and_grad_theta)(thetas)
+        assert np.all(np.isfinite(np.asarray(lp))), pc
+        assert np.all(np.isfinite(np.asarray(g))), pc
+    assert n < I.PRECOND_AUTO_MIN_N   # why auto resolved to None above
