@@ -1,11 +1,13 @@
-"""Nightly bench-regression gate over BENCH_fused.json (DESIGN.md §12).
+"""Nightly bench-regression gate over BENCH_fused.json / BENCH_kron.json.
 
-Fails (exit 1) when either headline speedup of the PR-5 performance work
-drops below the floor at n >= 4096:
+Fails (exit 1) when a headline speedup of the performance work drops
+below the floor at n >= 4096 — the payload keys select the gate:
 
-  * fused-vs-unfused SKI gram matvec (``fused_matvec`` rows), and
+  * fused-vs-unfused SKI gram matvec (``fused_matvec`` rows),
   * preconditioned-vs-plain CG at matched tolerance
-    (``precond_cg_large``).
+    (``precond_cg_large``), and
+  * multi-axis Kronecker / ProductSKI vs the O(n^2) Pallas product tile
+    (``kron_matvec`` rows + the ``product_ski`` row, DESIGN.md §13).
 
 Run by the nightly CI lane right after ``kernel_bench.py`` writes the
 artifact, so a regression turns the scheduled job red instead of silently
@@ -24,6 +26,8 @@ import sys
 
 def check(payload: dict, min_speedup: float = 1.0,
           min_n: int = 4096) -> list:
+    if "kron_matvec" in payload or "product_ski" in payload:
+        return check_kron(payload, min_speedup, min_n)
     failures = []
     rows = payload.get("fused_matvec", [])
     gated = [r for r in rows if r["n"] >= min_n]
@@ -48,6 +52,36 @@ def check(payload: dict, min_speedup: float = 1.0,
     return failures
 
 
+def check_kron(payload: dict, min_speedup: float = 1.0,
+               min_n: int = 4096) -> list:
+    """BENCH_kron.json gate: the multi-axis operators must beat the
+    O(n^2) Pallas product tile at n >= 4096 (floor 1.0 = parity; the
+    measured interpret-mode margin is >= 10x, so a trip means the
+    O(n log n) path stopped being the fast path)."""
+    failures = []
+    rows = payload.get("kron_matvec", [])
+    gated = [r for r in rows if r["n"] >= min_n]
+    if not gated:
+        failures.append(f"no kron_matvec rows with n >= {min_n}")
+    for r in gated:
+        if r["speedup"] < min_speedup:
+            failures.append(
+                f"Kronecker-vs-tile speedup x{r['speedup']:.2f} < "
+                f"x{min_speedup} at n={r['n']}")
+    ps = payload.get("product_ski")
+    if ps is None:
+        failures.append("product_ski row missing")
+    else:
+        if ps["n"] < min_n:
+            failures.append(f"product_ski ran at n={ps['n']} < {min_n}")
+        if ps["speedup_vs_pallas"] < min_speedup:
+            failures.append(
+                f"ProductSKI-vs-tile speedup "
+                f"x{ps['speedup_vs_pallas']:.2f} < x{min_speedup} at "
+                f"n={ps['n']}")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="BENCH_fused.json")
@@ -61,8 +95,8 @@ def main(argv=None) -> int:
         for msg in failures:
             print(f"BENCH REGRESSION: {msg}", file=sys.stderr)
         return 1
-    print(f"bench gate OK ({args.json}: fused and preconditioned "
-          f"speedups >= x{args.min_speedup} at n >= {args.min_n})")
+    print(f"bench gate OK ({args.json}: gated speedups >= "
+          f"x{args.min_speedup} at n >= {args.min_n})")
     return 0
 
 

@@ -355,6 +355,86 @@ def run_fused_ski(sizes=(1024, 4096, 8192), b=8, drop=0.1, verbose=True):
     return rows
 
 
+def _product_grid(shape, hs=(0.5, 0.25), dtype=np.float32):
+    axes = [h * np.arange(m, dtype=np.float64) for m, h in zip(shape, hs)]
+    X = np.stack(np.meshgrid(*axes, indexing="ij"), -1)
+    return jnp.asarray(X.reshape(-1, len(shape)), dtype)
+
+
+def run_kron(shapes=((32, 32), (64, 64)), b=8, verbose=True):
+    """Kronecker reshape-FFT-cycle gram matvec vs the exact O(n^2) Pallas
+    product tile on full 2-D grids (DESIGN.md §13).
+
+    Both sides compute the SAME separable Gram matvec; the Kronecker
+    operator never builds an (n, n) — or even (m_a, m_a) — buffer, so the
+    n >= 4096 row is the headline O(n log n)-vs-O(n^2) claim of the
+    multi-axis PR, regression-gated by check_bench.py.
+    """
+    rows = []
+    kind = "se*matern32"
+    theta = jnp.asarray([2.0, 1.4], jnp.float32)
+    rng = np.random.default_rng(0)
+    for shape in shapes:
+        X = _product_grid(shape)
+        n = int(X.shape[0])
+        v = jnp.asarray(rng.normal(size=(n, b)), jnp.float32)
+        kr = opr.KroneckerOperator(kind, X, 0.1, 1e-6)
+        pl = opr.PallasTileOperator(kind, X, 0.1, 1e-6)
+        mv_k = jax.jit(kr.bound_gram_matvec(theta, jnp.float32))
+        mv_p = jax.jit(lambda vv: pl.gram_matvec(theta, vv))
+        a, bb = mv_p(v), mv_k(v)
+        err = float(jnp.max(jnp.abs(a - bb)) / (jnp.max(jnp.abs(a)) + 1e-30))
+        assert err < 1e-4, f"kron disagreement at n={n}: {err}"
+        t_p, t_k, _ = _ab_med(mv_p, mv_k, v, reps=3, trials=5)
+        rows.append({"shape": list(shape), "n": n, "relerr": err,
+                     "t_pallas_s": t_p, "t_kron_s": t_k,
+                     "speedup": t_p / t_k})
+        if verbose:
+            r = rows[-1]
+            print(f"kron {shape[0]}x{shape[1]} n={n:6d}: relerr={err:.1e} "
+                  f"pallas={t_p*1e3:.2f}ms kron={t_k*1e3:.2f}ms "
+                  f"x{r['speedup']:.1f}", flush=True)
+    return rows
+
+
+def run_product_ski(shape=(72, 64), drop=0.08, b=8, verbose=True):
+    """Gappy 2-D product records: ProductSKI (outer-product stencils
+    around the Kronecker grid FFT) vs the exact Pallas product tile, plus
+    the fused-vs-unfused 2-D sandwich ratio when the geometry supports
+    one launch (dyadic spacings -> distinct stencil centres).
+    """
+    kind = "se*matern32"
+    theta = jnp.asarray([2.0, 1.4], jnp.float32)
+    rng = np.random.default_rng(0)
+    X = np.asarray(_product_grid(shape), np.float64)
+    X = jnp.asarray(X[rng.uniform(size=X.shape[0]) > drop], jnp.float32)
+    n = int(X.shape[0])
+    v = jnp.asarray(rng.normal(size=(n, b)), jnp.float32)
+    un = opr.ProductSKIOperator(kind, X, 0.1, 1e-6, fused=False)
+    fu = opr.ProductSKIOperator(kind, X, 0.1, 1e-6, fused=True)
+    pl = opr.PallasTileOperator(kind, X, 0.1, 1e-6)
+    mv_u = jax.jit(un.bound_gram_matvec(theta, jnp.float32))
+    mv_f = jax.jit(fu.bound_gram_matvec(theta, jnp.float32))
+    mv_p = jax.jit(lambda vv: pl.gram_matvec(theta, vv))
+    a, bb, cc = mv_p(v), mv_u(v), mv_f(v)
+    err = float(jnp.max(jnp.abs(a - bb)) / (jnp.max(jnp.abs(a)) + 1e-30))
+    err_f = float(jnp.max(jnp.abs(bb - cc))
+                  / (jnp.max(jnp.abs(bb)) + 1e-30))
+    assert err < 1e-4 and err_f < 1e-4, (err, err_f)
+    t_p, t_u, _ = _ab_med(mv_p, mv_u, v, reps=3, trials=5)
+    t_u2, t_f, fused_speedup = _ab_med(mv_u, mv_f, v, reps=3, trials=5)
+    row = {"shape": list(shape), "n": n, "drop": drop, "relerr": err,
+           "relerr_fused": err_f, "t_pallas_s": t_p,
+           "t_product_ski_s": t_u, "speedup_vs_pallas": t_p / t_u,
+           "t_fused_s": t_f, "fused_speedup": fused_speedup}
+    if verbose:
+        print(f"product_ski {shape[0]}x{shape[1]} n={n:6d}: "
+              f"relerr={err:.1e} pallas={t_p*1e3:.2f}ms "
+              f"unfused={t_u*1e3:.2f}ms x{row['speedup_vs_pallas']:.1f} "
+              f"(fused x{fused_speedup:.2f})", flush=True)
+    return row
+
+
 def run_precond_slq(n=1024, verbose=True):
     """Plain vs preconditioned SLQ log-det on an ill-conditioned
     quasi-periodic kernel (exact grid → Strang-circulant SLQ precond).
@@ -554,13 +634,16 @@ def run_compare_batched(n=4096, kernels=("k1", "se", "matern32",
 
 def main(json_path="BENCH_operators.json", ski_json_path="BENCH_ski.json",
          api_json_path="BENCH_api.json",
-         fused_json_path="BENCH_fused.json"):
+         fused_json_path="BENCH_fused.json",
+         kron_json_path="BENCH_kron.json"):
     rows = run()
     tang = run_stacked_tangent()
     op_rows = run_operators()
     tidal_rows = run_tidal_training()
     ski_rows = run_ski()
     fused_rows = run_fused_ski()          # float32: before enable_x64
+    kron_rows = run_kron()                # float32: before enable_x64
+    prod_ski_row = run_product_ski()
     ski_tidal_rows = run_ski_tidal_training()
     api_row = run_compare_batched()
     slq_row = run_precond_slq()
@@ -618,6 +701,21 @@ def main(json_path="BENCH_operators.json", ski_json_path="BENCH_ski.json",
         with open(fused_json_path, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {fused_json_path}")
+    if kron_json_path:
+        payload = {"kron_matvec": kron_rows,
+                   "product_ski": prod_ski_row,
+                   "note": "N-D Kronecker-grid operators (DESIGN.md §13): "
+                           "reshape-FFT-cycle gram matvec vs the exact "
+                           "O(n^2) Pallas product tile on full 2-D grids, "
+                           "and ProductSKI (gappy 2-D records) vs the "
+                           "same tile + the fused 2-D sandwich ratio.  "
+                           "Interpret-mode wall-clock, interleaved-A/B "
+                           "medians; the n >= 4096 rows are regression-"
+                           "gated by benchmarks/check_bench.py "
+                           "(Kronecker-vs-tile speedup >= 1.0)."}
+        with open(kron_json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {kron_json_path}")
     if api_json_path:
         payload = {"compare_batched": api_row,
                    "note": "gp.compare batched bank vs sequential "
@@ -632,7 +730,8 @@ def main(json_path="BENCH_operators.json", ski_json_path="BENCH_ski.json",
             json.dump(payload, f, indent=2)
         print(f"wrote {api_json_path}")
     return rows + [tang] + op_rows + tidal_rows + ski_rows + fused_rows \
-        + ski_tidal_rows + [api_row, slq_row, cg_row] + policy_rows
+        + kron_rows + ski_tidal_rows \
+        + [prod_ski_row, api_row, slq_row, cg_row] + policy_rows
 
 
 if __name__ == "__main__":
@@ -647,6 +746,10 @@ if __name__ == "__main__":
     ap.add_argument("--fused-json", default="BENCH_fused.json",
                     help="output path for the fused-kernel + "
                          "preconditioned-SLQ record")
+    ap.add_argument("--kron-json", default="BENCH_kron.json",
+                    help="output path for the multi-axis Kronecker / "
+                         "product-SKI record")
     args = ap.parse_args()
     main(json_path=args.json, ski_json_path=args.ski_json,
-         api_json_path=args.api_json, fused_json_path=args.fused_json)
+         api_json_path=args.api_json, fused_json_path=args.fused_json,
+         kron_json_path=args.kron_json)

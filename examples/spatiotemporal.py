@@ -1,0 +1,103 @@
+"""Spatio-temporal GP on a gappy 2-D product grid (DESIGN.md §13).
+
+A sensor field sampled on a time x space product grid with records
+dropped (sensor outages): the coordinates are (n, 2), the kernel a
+separable product "se*matern32" — one registered factor per axis —
+and the front door is unchanged:
+
+    spec = gp.GPSpec(kernel="se*matern32", ...)
+    sess = gp.GP.bind(spec, X, y).fit(key)
+
+``GP.bind`` probes the product structure once: the full grid would ride
+the Kronecker reshape-FFT operator (O(n log n), exact); the gappy
+records here ride the product-SKI outer-product stencils around the
+same Kronecker grid FFT — and because unjittered drops snap exactly,
+the interpolation is a selection matrix and the matvec stays EXACT.
+
+    PYTHONPATH=src python examples/spatiotemporal.py [--drop 0.15]
+"""
+
+import argparse
+
+import jax
+
+from repro.core import enable_x64
+
+enable_x64()
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import gp  # noqa: E402
+
+
+def make_field(shape=(20, 14), drop=0.15, sigma_n=0.1, seed=0):
+    """Gappy samples of a smooth-in-time / rougher-in-space field."""
+    t = 0.5 * np.arange(shape[0])
+    s = 0.25 * np.arange(shape[1])
+    X = np.stack(np.meshgrid(t, s, indexing="ij"), -1).reshape(-1, 2)
+    rng = np.random.default_rng(seed)
+    keep = rng.uniform(size=X.shape[0]) > drop
+    X = X[keep]
+    f = np.sin(0.8 * X[:, 0]) * np.cos(1.6 * X[:, 1])
+    y = f + sigma_n * rng.standard_normal(X.shape[0])
+    return jnp.asarray(X), jnp.asarray(y), jnp.asarray(f)
+
+
+def main(drop=0.15):
+    X, y, f = make_field(drop=drop)
+    print(f"gappy 2-D field: n={X.shape[0]} records "
+          f"({drop:.0%} dropped from a 20x14 product grid)")
+
+    # small NCG budget: every objective evaluation runs CG + SLQ
+    # through the product-SKI matvec, ~1-2 s each in interpret mode
+    policy = gp.SolverPolicy(backend="iterative", n_starts=2, max_iters=40)
+    spec = gp.GPSpec(kernel="se*matern32",
+                     noise=gp.NoiseModel(sigma_n=0.1), solver=policy)
+    sess = gp.GP.bind(spec, X, y).fit(jax.random.key(0))
+    tr = sess.result
+    print(f"operator: {sess.operator_name}   "
+          f"ln P_max = {float(tr.log_p_max):.2f}   "
+          f"theta_hat = {np.round(np.asarray(tr.theta_hat), 3)} "
+          f"(time lengthscale, space lengthscale)")
+
+    # predict on a small block of held-out grid cells
+    rng = np.random.default_rng(1)
+    tq = 0.5 * rng.uniform(2, 17, size=12)
+    sq = 0.25 * rng.uniform(2, 11, size=12)
+    Xstar = jnp.asarray(np.stack([tq, sq], -1))
+    post = sess.predict(Xstar)
+    truth = np.sin(0.8 * tq) * np.cos(1.6 * sq)
+    err = np.abs(np.asarray(post.mean) - truth)
+    print(f"posterior at 12 off-grid points: "
+          f"max |mean - truth| = {err.max():.3f}   "
+          f"mean predictive std = "
+          f"{np.sqrt(np.asarray(post.var)).mean():.3f}")
+
+    return sess
+
+
+def compare_kernels(X, y, policy):
+    """Model comparison stays one call; composite banks batch on product
+    structure exactly like 1-D banks on (near-)grids (``--compare``;
+    several minutes in interpret mode — the whole bank trains as ONE
+    batched program sharing each per-axis FFT launch)."""
+    reports = gp.compare(
+        gp.spec_bank(["se*se", "se*matern32"],
+                     noise=gp.NoiseModel(sigma_n=0.1), solver=policy),
+        X, y, key=jax.random.key(2))
+    for r in reports:
+        print(f"  {r.name:14s} ln P_max = {r.log_p_max:.2f}   "
+              f"ln Z_laplace = {r.log_z_laplace:.2f}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--drop", type=float, default=0.15,
+                    help="fraction of grid records dropped")
+    ap.add_argument("--compare", action="store_true",
+                    help="also run the batched 2-kernel comparison")
+    args = ap.parse_args()
+    sess = main(drop=args.drop)
+    if args.compare:
+        compare_kernels(sess.x, sess.y, sess.spec.solver)

@@ -98,6 +98,11 @@ class Covariance:
       ordering_groups: tuples of timescale indices required to be
         non-decreasing (paper's T2 >= T1 constraint for k2); used by the
         prior-volume bookkeeping and samplers.
+      axes: for separable product covariances k(x,x') = prod_a k_a(x_a,x'_a),
+        the per-axis factor covariances (empty for plain 1-D kernels).  Axis
+        ``a`` owns the contiguous ``theta`` block starting at
+        ``sum(axes[:a].n_params)``; data-dependent parameter boxes are then
+        derived per axis from column ``x[:, a]`` (reparam.flat_box).
     """
 
     name: str
@@ -106,6 +111,7 @@ class Covariance:
     timescale_idx: Tuple[int, ...] = ()
     smoothness_idx: Tuple[int, ...] = ()
     ordering_groups: Tuple[Tuple[int, ...], ...] = ()
+    axes: Tuple["Covariance", ...] = ()
 
     @property
     def n_params(self) -> int:
@@ -270,5 +276,75 @@ def mixture(name: str, a: Covariance, b: Covariance) -> Covariance:
     )
 
 
+def separable(name: str, *factors: Covariance) -> Covariance:
+    """Separable product covariance over multi-axis inputs (DESIGN.md §13).
+
+    ``k(x, x') = prod_a k_a(x[a], x'[a])`` with x in R^d, one 1-D factor per
+    axis and theta the concatenation of the per-axis blocks.  On a product
+    grid the Gram matrix is the Kronecker product  K = K_1 (x) ... (x) K_d,
+    which is what KroneckerOperator / ProductSKIOperator exploit for
+    O(n log n) matvecs; this dense form is the ground truth they are tested
+    against.  Inputs must be (n, d) with d == len(factors).
+    """
+    if len(factors) < 2:
+        raise ValueError("separable() needs at least two axis factors")
+    offs = [0]
+    for f in factors:
+        offs.append(offs[-1] + f.n_params)
+
+    def fn(theta, x1, x2):
+        x1 = jnp.asarray(x1)
+        x2 = jnp.asarray(x2)
+        if x1.ndim != 2 or x1.shape[1] != len(factors):
+            raise ValueError(
+                f"separable covariance '{name}' needs (n, {len(factors)}) "
+                f"inputs, got x1 shape {x1.shape}; pass one column per axis "
+                "factor")
+        out = factors[0].fn(theta[offs[0]:offs[1]], x1[:, 0], x2[:, 0])
+        for a in range(1, len(factors)):
+            out = out * factors[a].fn(theta[offs[a]:offs[a + 1]],
+                                      x1[:, a], x2[:, a])
+        return out
+
+    return Covariance(
+        name=name,
+        param_names=tuple(f"ax{a}_{p}" for a, f in enumerate(factors)
+                          for p in f.param_names),
+        fn=fn,
+        timescale_idx=tuple(offs[a] + i for a, f in enumerate(factors)
+                            for i in f.timescale_idx),
+        smoothness_idx=tuple(offs[a] + i for a, f in enumerate(factors)
+                             for i in f.smoothness_idx),
+        ordering_groups=tuple(tuple(offs[a] + i for i in grp)
+                              for a, f in enumerate(factors)
+                              for grp in f.ordering_groups),
+        axes=tuple(factors),
+    )
+
+
 REGISTRY = {c.name: c for c in
             (K1, K2, SE, MATERN12, MATERN32, MATERN52, RQ, PERIODIC)}
+
+
+def resolve(name: str) -> Covariance:
+    """Look up a covariance by name, understanding composite "a*b" names.
+
+    "se*matern32" -> separable(SE along axis 0, MATERN32 along axis 1) for
+    (n, 2) inputs; any number of "*"-joined registered factors is accepted.
+    Raises KeyError (with the supported names) for unknown factors so
+    callers can surface a uniform validation error.
+    """
+    if name in REGISTRY:
+        return REGISTRY[name]
+    if "*" in name:
+        parts = name.split("*")
+        missing = [p for p in parts if p not in REGISTRY]
+        if missing:
+            raise KeyError(
+                f"unknown covariance factor(s) {missing} in '{name}'; "
+                f"registered factors: {sorted(REGISTRY)}")
+        return separable(name, *(REGISTRY[p] for p in parts))
+    raise KeyError(
+        f"unknown covariance '{name}'; registered: {sorted(REGISTRY)} "
+        "(join registered names with '*' for a separable multi-axis "
+        "product, e.g. 'se*matern32')")

@@ -308,12 +308,16 @@ def resolve_kind(cov: Covariance) -> str:
     fallback deeper in the stack).
     """
     name = cov.name if isinstance(cov, Covariance) else str(cov)
-    if name not in kops._FLAT_TO_NATURAL:
+    # composite "a*b" names resolve factor-wise (separable product kernels
+    # over (n, d) inputs, DESIGN.md §13); every factor needs its own tile
+    parts = name.split("*") if "*" in name else [name]
+    if any(p not in kops._FLAT_TO_NATURAL for p in parts):
         raise ValueError(
             f"covariance {name!r} has no registered tile, so the iterative "
             f"backend cannot evaluate it matrix-free; registered kinds: "
-            f"{sorted(kops._FLAT_TO_NATURAL)}.  Use backend='dense' for "
-            f"unregistered covariances.")
+            f"{sorted(kops._FLAT_TO_NATURAL)} (join with '*' for separable "
+            f"multi-axis products).  Use backend='dense' for unregistered "
+            f"covariances.")
     return name
 
 

@@ -485,6 +485,28 @@ PRECONDITIONERS = ("pivchol", "circulant")
 PRECOND_CHOICES = PRECONDITIONERS + ("auto",)
 _DEFAULT_PIVCHOL_RANK = 32
 
+# Pivoted-Cholesky auto-rank ladder (noise-to-signal probe): registered
+# covariances are unit-scale (k(0) = 1), so snr = 1 / noise2 bounds how
+# much of K's spectrum pokes above the noise floor — the part the rank-r
+# factor must capture for P⁻¹K to cluster.  Benign noise keeps the
+# pre-PR rank 32; ill-conditioned fits (the paper's sigma_n = 1e-3
+# regime, where rank 32 measurably UNDERPERFORMS plain SLQ —
+# _PIVCHOL_SLQ_MIN_RANK) escalate to 64 / 128.  An explicit
+# ``precond_rank > 0`` always wins.
+_PIVCHOL_RANK_LADDER = ((1e5, 128), (1e3, 64))
+
+
+def _auto_pivchol_rank(op) -> int:
+    """Noise-to-signal pivoted-Cholesky rank policy (host-side, per bind)."""
+    noise2 = float(getattr(op, "noise2", 0.0))
+    snr = 1.0 / max(noise2, 1e-300)
+    rank = _DEFAULT_PIVCHOL_RANK
+    for thresh, r in _PIVCHOL_RANK_LADDER:
+        if snr >= thresh:
+            rank = r
+            break
+    return max(1, min(rank, int(op.n)))
+
 # Minimum pivoted-Cholesky rank before its SLQ accessors are attached:
 # below this the rank-r P describes quasi-periodic (comb-spectrum)
 # kernels poorly and the preconditioned estimator's Gaussian-probe
@@ -532,7 +554,8 @@ def resolve_precond(precond: Optional[str], op,
     """``SolverOpts(precond=...)`` → concrete choice for one operator.
 
     ``"auto"`` is the structure / size / conditioning policy (DESIGN.md
-    §12 decision table): FFT-structured operators (toeplitz / ski) get
+    §12 decision table): FFT-structured operators (toeplitz / ski /
+    kron / product_ski) get
     "circulant" once n ≥ ``PRECOND_AUTO_MIN_N`` AND the host-side
     conditioning probe n / noise2 ≥ ``PRECOND_AUTO_MIN_COND`` — at
     smaller n the build + compile + per-iteration cost outweighs the
@@ -548,7 +571,8 @@ def resolve_precond(precond: Optional[str], op,
     if precond == "auto":
         noise2 = float(getattr(op, "noise2", 0.0))
         cond_probe = float(op.n) / max(noise2, 1e-300)
-        if getattr(op, "name", None) in ("toeplitz", "ski") \
+        if getattr(op, "name", None) in ("toeplitz", "ski", "kron",
+                                         "product_ski") \
                 and int(op.n) >= PRECOND_AUTO_MIN_N \
                 and cond_probe >= PRECOND_AUTO_MIN_COND:
             return "circulant"
@@ -593,7 +617,8 @@ def make_preconditioner(op, theta, precond: Optional[str] = None,
 
     * ``None`` + ``precond_rank > 0`` — legacy spelling of "pivchol";
     * ``"pivchol"``   — greedy rank-r pivoted Cholesky + Woodbury apply
-      (rank = ``precond_rank`` or 32), best for smooth / low-rank
+      (rank = ``precond_rank`` or the :func:`_auto_pivchol_rank`
+      noise-to-signal ladder: 32 / 64 / 128), best for smooth / low-rank
       kernels; SLQ-capable on every operator (exact ln det P + sampler)
       once rank ≥ ``_PIVCHOL_SLQ_MIN_RANK`` (below it the low-rank P
       estimates the log-det WORSE than plain SLQ, so the log-det stays
@@ -612,7 +637,7 @@ def make_preconditioner(op, theta, precond: Optional[str] = None,
     if choice is None:
         return None
     if choice == "pivchol":
-        rank = precond_rank if precond_rank > 0 else _DEFAULT_PIVCHOL_RANK
+        rank = precond_rank if precond_rank > 0 else _auto_pivchol_rank(op)
         apply, slq = _pivchol_slq_parts(op, theta, rank)
         if rank < _PIVCHOL_SLQ_MIN_RANK:
             slq = None

@@ -130,7 +130,7 @@ def _predict_iterative(cov: Covariance, theta, x, y, xstar, sigma_n: float,
     default) keeps the exact Pallas cross applications.
     """
     from ..kernels import ops as kops
-    from ..kernels.operators import SKIOperator
+    from ..kernels.operators import ProductSKIOperator, SKIOperator
 
     kind = eng.resolve_kind(cov)
     x = jnp.asarray(x)
@@ -143,7 +143,8 @@ def _predict_iterative(cov: Covariance, theta, x, y, xstar, sigma_n: float,
     alpha = solver.alpha
 
     star = None
-    if cross == "interp" and isinstance(solver.op, SKIOperator):
+    if cross == "interp" and isinstance(solver.op,
+                                        (SKIOperator, ProductSKIOperator)):
         star = solver.op.cross_interp(xstar)   # None: traced / off-grid x*
     if star is not None:
         mean = solver.op.cross_matvec(theta, star, alpha)

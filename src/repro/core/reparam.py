@@ -49,7 +49,23 @@ def data_timescale_range(x):
 
 
 def flat_box(cov: Covariance, x) -> FlatBox:
-    """Flat-prior box for every hyperparameter of ``cov`` given inputs x."""
+    """Flat-prior box for every hyperparameter of ``cov`` given inputs x.
+
+    Separable multi-axis covariances get per-axis timescale ranges: the
+    Jeffreys box of the axis-a factor comes from column x[:, a] only, so a
+    space x time product with metres on one axis and seconds on the other
+    keeps each prior anchored to its own axis's resolvable separations.
+    """
+    if cov.axes:
+        x = jnp.asarray(x)
+        if x.ndim != 2 or x.shape[1] != len(cov.axes):
+            raise ValueError(
+                f"separable covariance '{cov.name}' needs (n, "
+                f"{len(cov.axes)}) inputs for its per-axis prior box, got "
+                f"shape {x.shape}")
+        parts = [flat_box(f, x[:, a]) for a, f in enumerate(cov.axes)]
+        return FlatBox(jnp.concatenate([p.lo for p in parts]),
+                       jnp.concatenate([p.hi for p in parts]))
     dt_min, dt_max = data_timescale_range(x)
     lo = jnp.zeros(cov.n_params)
     hi = jnp.zeros(cov.n_params)

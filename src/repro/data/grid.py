@@ -151,6 +151,107 @@ def classify_grid(x, rtol: float = GRID_RTOL,
 
 
 # ---------------------------------------------------------------------------
+# Multi-axis (product-grid) classification (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+# A full product grid with m = prod(m_a) cells is only worth expanding when
+# it does not dwarf the data: prod(m_a) <= KRON_EXPAND * n.  This guards the
+# degenerate collinear case (n points on a diagonal have n distinct values
+# per axis, so the product grid would hold n^d cells).
+KRON_EXPAND = NEAR_GRID_EXPAND
+
+
+class ProductGridInfo(NamedTuple):
+    """Result of :func:`classify_grid_nd` for (n, d) coordinates.
+
+    kind:  "kron"      — x IS a full product grid in canonical row-major
+                          order (axis d-1 fastest): K is exactly the
+                          Kronecker product of per-axis Toeplitz matrices.
+           "product"   — every axis is "exact" or "near" on its own 1-D
+                          grid and the expanded product grid stays within
+                          KRON_EXPAND cells per point: gappy / permuted /
+                          jittered product data, handled by product SKI.
+           "irregular" — anything else (incl. tracers): Pallas tiles.
+    axes:  per-axis :class:`GridInfo` (empty tuple when unavailable).
+    grids: per-axis sorted unique coordinates for "kron", else None.
+    shape: per-axis cell counts (m_1, ..., m_d) for "kron", else None.
+    """
+
+    kind: str
+    axes: tuple = ()
+    grids: Optional[tuple] = None
+    shape: Optional[tuple] = None
+
+
+def classify_grid_nd(x, rtol: float = GRID_RTOL,
+                     near_rtol: float = NEAR_GRID_RTOL,
+                     max_expand: float = KRON_EXPAND) -> ProductGridInfo:
+    """Classify concrete (n, d>=2) coordinates for product-structure dispatch.
+
+    Each axis's DISTINCT values are classified with the 1-D
+    :func:`classify_grid`; the joint structure is then
+      * "kron" when every axis is exact, the n points enumerate the full
+        m_1 x ... x m_d product grid, and they do so in canonical row-major
+        order (last axis fastest — the layout the Kronecker reshape cycle
+        assumes);
+      * "product" when every axis is exact or near and the expanded product
+        grid is at most ``max_expand`` cells per data point — gappy records
+        (missing pixels, station dropouts), permuted full grids, and small
+        per-axis jitter all land here and ride product SKI;
+      * "irregular" otherwise (scattered data, collinear/diagonal inputs
+        that would need an n^d product grid, duplicate points, tracers).
+
+    Tracers and abstract shapes answer "irregular" (trace-safe, like the
+    1-D probe); a CONCRETE array of the wrong rank raises ValueError naming
+    the supported layouts.
+    """
+    xc = _concrete(x)
+    if xc is None:
+        return ProductGridInfo("irregular")
+    if xc.ndim != 2 or xc.shape[1] < 2:
+        raise ValueError(
+            f"classify_grid_nd needs (n, d>=2) coordinates, got shape "
+            f"{xc.shape}; supported input layouts are (n,) / (n, 1) series "
+            "(1-D classify_grid) and (n, d) multi-axis points")
+    if not np.all(np.isfinite(xc)):
+        return ProductGridInfo("irregular")
+    xc = np.asarray(xc, np.float64)
+    n, d = xc.shape
+    uniques, invs, axes = [], [], []
+    for a in range(d):
+        u, inv = np.unique(xc[:, a], return_inverse=True)
+        uniques.append(u)
+        invs.append(inv)
+        if u.shape[0] < 2:              # constant axis: no product structure
+            axes.append(GridInfo("irregular", None))
+        else:
+            axes.append(classify_grid(u, rtol=rtol, near_rtol=near_rtol,
+                                      max_expand=max_expand))
+    axes = tuple(axes)
+    if any(info.kind == "irregular" for info in axes):
+        return ProductGridInfo("irregular", axes)
+
+    # Expansion guard: cells the per-axis grids would span.
+    cells = []
+    for a, info in enumerate(axes):
+        span = float(uniques[a][-1] - uniques[a][0])
+        cells.append(int(round(span / info.h)) + 1)
+    if float(np.prod([float(c) for c in cells])) > max_expand * n:
+        return ProductGridInfo("irregular", axes)
+
+    if all(info.kind == "exact" for info in axes):
+        shape = tuple(u.shape[0] for u in uniques)
+        flat = np.ravel_multi_index(tuple(invs), shape)
+        if np.unique(flat).shape[0] < n:       # duplicate points
+            return ProductGridInfo("irregular", axes)
+        if int(np.prod(shape)) == n and np.array_equal(
+                flat, np.arange(n, dtype=flat.dtype)):
+            return ProductGridInfo("kron", axes, tuple(uniques), shape)
+        return ProductGridInfo("product", axes)
+    return ProductGridInfo("product", axes)
+
+
+# ---------------------------------------------------------------------------
 # SKI inducing grids + sparse interpolation weights (DESIGN.md §10)
 # ---------------------------------------------------------------------------
 

@@ -49,13 +49,35 @@ from ..core import iterative as it
 from ..core.covariances import Covariance
 from ..core.engine import LOG2PI, SolverOpts
 from ..core.reparam import FlatBox, apply_ordering, flat_box, to_box
-from ..data.grid import build_inducing_grid, classify_grid, interp_weights
+import numpy as np
+
+from ..data.grid import (build_inducing_grid, classify_grid,
+                         classify_grid_nd, interp_weights)
 from ..kernels import kernel_matvec
 from ..kernels import ops as kops
 from ..kernels import ski_fused
 from ..kernels.operators import (SLQPrecond, _embed, _strang_spectrum,
                                  interp_gather, interp_scatter)
 from .spec import pad_boxes
+
+
+def _axis_conv_bank(U, axis, lam, m, L):
+    """Per-member circulant-embedded Toeplitz conv along ONE grid axis of
+    a stacked multi-axis bank block (the bank mirror of ``operators.
+    _axis_toeplitz_apply``).  U: (m_1..m_d, <batch>, c) with <batch> the
+    member(+direction) dims; lam: (<batch>, L_f) per-batch spectra —
+    broadcast against U's other grid axes, so ONE shared rfft/irfft pair
+    serves the whole bank whatever B (and m_max) are."""
+    U = jnp.moveaxis(U, axis, 0)
+    sh = U.shape
+    up = jnp.zeros((L,) + sh[1:], U.dtype).at[:m].set(U)
+    uhat = jnp.fft.rfft(up, axis=0)
+    nb = lam.ndim - 1
+    lamb = jnp.moveaxis(lam, -1, 0)
+    lamb = lamb.reshape((lamb.shape[0],) + (1,) * (U.ndim - nb - 2)
+                        + lam.shape[:-1] + (1,))
+    out = jnp.fft.irfft(uhat * lamb, n=L, axis=0)[:m]
+    return jnp.moveaxis(out.astype(U.dtype), 0, axis)
 
 
 class BankOperator:
@@ -71,12 +93,16 @@ class BankOperator:
     def __init__(self, kinds: Sequence[str], x, sigma_n: float = 0.0,
                  jitter: float = 0.0, like: "BankOperator" = None,
                  fused="auto"):
-        for k in kinds:
-            if k not in kernel_matvec.TILE_FNS:
-                raise ValueError(
-                    f"no covariance tile registered for kind {k!r}; "
-                    f"registered: {sorted(kernel_matvec.TILE_FNS)}")
+        splits = [kops.split_kind(k) for k in kinds]    # ValueError: unknown
+        ds = {len(s) for s in splits}
+        if len(ds) != 1:
+            raise ValueError(
+                "every bank member must cover the same coordinate axes; "
+                f"got factor counts {sorted(len(s) for s in splits)} for "
+                f"kinds {tuple(kinds)}")
+        self.d = ds.pop()
         self.kinds = tuple(kinds)
+        self.kinds_split = tuple(splits)
         self.B = len(self.kinds)
         self.x = jnp.asarray(x)
         self.n = int(self.x.shape[0])
@@ -87,7 +113,12 @@ class BankOperator:
             self.idx, self.w = like.idx, like.w
             self.structure = like.structure
             self.fused_geom = like.fused_geom
+            self.shape = like.shape
+            self.axis_grids = like.axis_grids
+            self.axis_idx, self.axis_w = like.axis_idx, like.axis_w
             grid = like.grid
+        elif self.d > 1:
+            grid = self._init_nd(np.asarray(x, np.float64))
         else:
             info = classify_grid(x)
             if info.kind == "exact":
@@ -106,6 +137,9 @@ class BankOperator:
                     "(data.grid.classify_grid); irregular inputs have no "
                     "shared FFT geometry — use sequential sessions")
             self.structure = info.kind
+            self.shape = None
+            self.axis_grids = None
+            self.axis_idx = self.axis_w = None
             # fused Pallas sandwich geometry (SKI banks only: the exact-
             # grid bank has no W to fuse around its FFT) — DESIGN.md §12
             self.fused_geom = None if self.idx is None else \
@@ -116,21 +150,73 @@ class BankOperator:
             # bank's RESOLVED decision — an explicit SolverOpts(fused=)
             # must not be silently re-resolved to the default
             self.fused = like.fused
-        elif self.idx is None:
-            # exact-grid banks have no interpolation sandwich to fuse;
-            # the flag is inapplicable (mirrors the Toeplitz session
-            # path, which ignores fused=) rather than an error
+        elif self.idx is None or self.d > 1:
+            # exact-grid banks have no interpolation sandwich to fuse, and
+            # multi-axis banks take the unfused Kronecker cycle (per-axis
+            # spectra differ per member); the flag is inapplicable
+            # (mirrors the Toeplitz session path) rather than an error
             self.fused = False
         else:
             self.fused = ski_fused.resolve_fused(fused, self.fused_geom,
                                                  self.n)
         self.grid = grid
-        self.m_grid = int(grid.shape[0])
-        self.L = 2 * self.m_grid - 2
-        self._dt0 = grid - grid[0]
+        self.m_grid = int(grid.shape[0]) if self.d == 1 \
+            else int(np.prod(self.shape))
+        self.L = 2 * self.m_grid - 2 if self.d == 1 else None
+        self._dt0 = grid - grid[0] if self.d == 1 else None
         self.sigma_n = float(sigma_n)
         self.jitter = float(jitter)
         self.noise2 = float(sigma_n) ** 2 + float(jitter)
+
+    def _init_nd(self, xc):
+        """Multi-axis geometry probe: full product grids ("kron") share the
+        per-axis data grids directly; gappy/permuted/jittered product data
+        ("product") shares per-axis inducing grids + ONE combined
+        outer-product W (every member sees the same x).  Anything else has
+        no shared FFT geometry."""
+        info = classify_grid_nd(xc)
+        if info.kind not in ("kron", "product"):
+            raise ValueError(
+                "multi-axis BankOperator needs 'kron' or 'product' "
+                "structure (data.grid.classify_grid_nd): a full product "
+                "grid in canonical row-major order, or gappy/jittered "
+                "points over per-axis grids; irregular (n, d) inputs have "
+                "no shared FFT geometry — use sequential sessions")
+        self.structure = info.kind
+        self.fused_geom = None
+        if info.kind == "kron":
+            self.shape = tuple(int(s) for s in info.shape)
+            self.axis_grids = tuple(jnp.asarray(g, self.x.dtype)
+                                    for g in info.grids)
+            self.idx = self.w = None
+            self.axis_idx = self.axis_w = None
+            return self.x
+        grids, axis_idx, axis_w = [], [], []
+        for a in range(self.d):
+            g = build_inducing_grid(xc[:, a], spacing=info.axes[a].h)
+            ia, wa = interp_weights(xc[:, a], g)
+            grids.append(g)
+            axis_idx.append(ia)
+            axis_w.append(wa)
+        self.shape = tuple(int(g.shape[0]) for g in grids)
+        self.axis_grids = tuple(jnp.asarray(g, self.x.dtype)
+                                for g in grids)
+        n = xc.shape[0]
+        strides = np.ones(self.d, np.int64)
+        for a in range(self.d - 2, -1, -1):
+            strides[a] = strides[a + 1] * self.shape[a + 1]
+        IDX = np.zeros((n, 1), np.int64)
+        WW = np.ones((n, 1), np.float64)
+        for a in range(self.d):
+            IDX = (IDX[:, :, None] + axis_idx[a].astype(np.int64)[
+                :, None, :] * int(strides[a])).reshape(n, -1)
+            WW = (WW[:, :, None] * axis_w[a][:, None, :]).reshape(n, -1)
+        self.idx = jnp.asarray(IDX.astype(np.int32))
+        self.w = jnp.asarray(WW, self.x.dtype)
+        self.axis_idx = tuple(jnp.asarray(ia) for ia in axis_idx)
+        self.axis_w = tuple(jnp.asarray(wa, self.x.dtype)
+                            for wa in axis_w)
+        return self.x
 
     # -- per-member first columns (the ONLY per-family computation) ------
 
@@ -165,6 +251,57 @@ class BankOperator:
             rows.append(jax.jacfwd(col)(thetas[i].astype(dtype)).T)
         return jnp.stack(rows)
 
+    def axis_first_columns(self, thetas, dtype):
+        """Per-axis member first columns for multi-axis banks: a list over
+        axes of (B, m_a) — member b's axis-a factor evaluated on that
+        axis's grid offsets.  Per-member flat thetas are split into
+        per-factor blocks exactly as in ``kernels.ops.theta_blocks``."""
+        cols = [[] for _ in range(self.d)]
+        for i, kind in enumerate(self.kinds):
+            tbs = kops.theta_blocks(kind, thetas[i])
+            for a, (k, tb) in enumerate(zip(self.kinds_split[i], tbs)):
+                dt = (self.axis_grids[a]
+                      - self.axis_grids[a][0]).astype(dtype)
+                p = kops.natural_params(k, tb).astype(dtype)
+                cols[a].append(kernel_matvec.TILE_FNS[k](dt, p))
+        return [jnp.stack(c) for c in cols]
+
+    def _axis_direction_spectra(self, thetas, dtype, m_max: int):
+        """Per-axis per-DIRECTION embedding spectra for the multi-axis bank
+        tangents: a list over axes of (B, m_max, L_af).
+
+        Direction j of member b multiplies, on axis a, either the TANGENT
+        spectrum (j inside axis a's parameter block — the Kronecker product
+        rule) or the axis's BASE spectrum; padded directions j ≥ m_b carry
+        zeros on axis 0 so their product vanishes identically."""
+        out = [[] for _ in range(self.d)]
+        for i, kind in enumerate(self.kinds):
+            tbs = kops.theta_blocks(kind, thetas[i])
+            sizes = [kops.FLAT_NPARAMS[k] for k in self.kinds_split[i]]
+            offs = np.concatenate([[0], np.cumsum(sizes)])
+            m_b = int(offs[-1])
+            for a, (k, tb) in enumerate(zip(self.kinds_split[i], tbs)):
+                dt = (self.axis_grids[a]
+                      - self.axis_grids[a][0]).astype(dtype)
+
+                def col(th, k=k, dt=dt):
+                    return kernel_matvec.TILE_FNS[k](
+                        dt, kops.natural_params(k, th).astype(dtype))
+
+                base = jnp.fft.rfft(_embed(col(tb)))         # (L_af,)
+                rows = jax.jacfwd(col)(tb.astype(dtype)).T   # (p_a, m_a)
+                tang = jnp.fft.rfft(_embed(rows), axis=-1)   # (p_a, L_af)
+                lam = jnp.tile(base[None], (m_max, 1))
+                lam = lam.at[int(offs[a]):int(offs[a + 1])].set(tang)
+                if a == 0 and m_b < m_max:
+                    lam = lam.at[m_b:].set(0.0)
+                out[a].append(lam)
+        return [jnp.stack(o) for o in out]
+
+    def _grid_block(self, U):
+        """(m_grid, B, ...) flat grid block → (m_1, ..., m_d, B, ...)."""
+        return U.reshape(self.shape + U.shape[1:])
+
     # -- shared sparse interpolation (identity on exact grids) -----------
 
     def _W(self, U):
@@ -192,8 +329,22 @@ class BankOperator:
         Pallas launch per call, with the B permuted power-of-two spectra
         precomputed here (DESIGN.md §12).
         """
-        T = self.first_columns(thetas, dtype)
         noise2 = jnp.asarray(self.noise2, dtype)
+        if self.d > 1:
+            cols = self.axis_first_columns(thetas, dtype)
+            lams = [jnp.fft.rfft(_embed(c), axis=-1) for c in cols]
+            Ls = [2 * c.shape[1] - 2 for c in cols]
+
+            def mv(V):
+                U = self._grid_block(self._Wt(V))
+                for a in range(self.d):
+                    U = _axis_conv_bank(U, a, lams[a], self.shape[a],
+                                        Ls[a])
+                out = self._W(U.reshape((self.m_grid,) + V.shape[1:]))
+                return out + noise2 * V
+
+            return mv
+        T = self.first_columns(thetas, dtype)
         if self.fused:
             geom, n2 = self.fused_geom, self.noise2
             lams = jax.vmap(
@@ -219,6 +370,19 @@ class BankOperator:
     def bind_tangent_matvecs(self, thetas, dtype) -> Callable:
         """(n, B, c) -> (n, B, m_max, c): dK_b/dtheta_i @ V_b, all members
         and all directions through ONE widened rfft/irfft pair."""
+        if self.d > 1:
+            mm = int(thetas.shape[1])
+            lams = self._axis_direction_spectra(thetas, dtype, mm)
+
+            def tmv_nd(V):
+                U = self._grid_block(self._Wt(V))[..., None, :]
+                for a in range(self.d):
+                    U = _axis_conv_bank(U, a, lams[a], self.shape[a],
+                                        2 * self.shape[a] - 2)
+                return self._W(U.reshape((self.m_grid,)
+                                         + U.shape[self.d:]))
+
+            return tmv_nd
         R = self.tangent_columns(thetas, dtype)             # (B, mm, m)
         lam = jnp.fft.rfft(_embed(R), axis=-1)              # (B, mm, Lf)
         lamT = jnp.moveaxis(lam, -1, 0)                     # (Lf, B, mm)
@@ -237,7 +401,21 @@ class BankOperator:
     def bind_precond(self, thetas, dtype) -> Callable:
         """Bank circulant preconditioner: the grid-space Strang apply of
         every member from its OWN clipped embedding spectrum (+ noise),
-        sandwiched through the shared W on SKI (DESIGN.md §10)."""
+        sandwiched through the shared W on SKI (DESIGN.md §10).  Multi-
+        axis banks use each member's KRONECKER Strang spectrum (the outer
+        product of per-axis Strang spectra) and a d-D FFT pair."""
+        if self.d > 1:
+            Lam = self._strang_lam_nd(thetas, dtype)        # (B, m1..md)
+            LamT = jnp.moveaxis(Lam, 0, -1)[..., None]      # (m1..md, B, 1)
+            axes = tuple(range(self.d))
+
+            def apply_nd(r):
+                U = self._grid_block(self._Wt(r))
+                out = jnp.fft.ifftn(jnp.fft.fftn(U, axes=axes) / LamT,
+                                    axes=axes).real.astype(r.dtype)
+                return self._W(out.reshape((self.m_grid,) + r.shape[1:]))
+
+            return apply_nd
         T = self.first_columns(thetas, dtype)
         lam = jnp.fft.rfft(_embed(T), axis=-1).real         # (B, Lf)
         floor = 1e-12
@@ -256,14 +434,28 @@ class BankOperator:
 
         return apply
 
+    def _strang_lam_nd(self, thetas, dtype, floor: float = 1e-12):
+        """(B, m_1, ..., m_d) per-member Kronecker Strang spectra + noise
+        (each member's ⊗ of per-axis Strang circulants)."""
+        cols = self.axis_first_columns(thetas, dtype)
+        lams = [jax.vmap(lambda t: _strang_spectrum(t, 0.0, floor))(c)
+                for c in cols]                              # [(B, m_a)]
+        Lam = lams[0]
+        for lb in lams[1:]:
+            Lam = Lam[..., None] * lb.reshape(
+                (self.B,) + (1,) * (Lam.ndim - 1) + (lb.shape[1],))
+        return Lam + jnp.asarray(self.noise2, Lam.dtype)
+
     # -- preconditioner policy + the bank-aware factorised preconditioners
 
     def resolve_precond(self, opts: SolverOpts):
         """``SolverOpts(precond=...)`` → concrete bank choice, through the
         SAME structure/size policy as single sessions ("exact" banks count
-        as toeplitz, "near" banks as ski; DESIGN.md §12)."""
+        as toeplitz, "near" banks as ski, multi-axis banks as kron /
+        product_ski; DESIGN.md §12)."""
         proxy = SimpleNamespace(
-            name="toeplitz" if self.structure == "exact" else "ski",
+            name={"exact": "toeplitz", "near": "ski", "kron": "kron",
+                  "product": "product_ski"}[self.structure],
             n=self.n, noise2=self.noise2)
         return it.resolve_precond(opts.precond, proxy, opts.precond_rank)
 
@@ -291,6 +483,57 @@ class BankOperator:
 
         return diag, matcol
 
+    def _member_diag_matcol_nd(self, tcols):
+        """(diag, matcol) oracle of ONE multi-axis member from its tuple
+        of per-axis first columns: exact Kronecker entries on "kron"
+        structure (outer products of per-axis Toeplitz columns), the
+        per-axis-factorised W-sandwich on "product" (mirrors
+        ProductSKIOperator.diag/matcol — never the s^d joint taps)."""
+        from ..kernels.operators import _toeplitz_matvec
+
+        if self.structure == "kron":
+            d0 = tcols[0][0]
+            for t in tcols[1:]:
+                d0 = d0 * t[0]
+            diag = d0 * jnp.ones((self.n,), tcols[0].dtype)
+
+            def matcol(i):
+                idxs, rem = [], i
+                for m in reversed(self.shape):
+                    idxs.append(rem % m)
+                    rem = rem // m
+                idxs = idxs[::-1]
+                col = None
+                for a, (t, ia) in enumerate(zip(tcols, idxs)):
+                    ca = t[jnp.abs(jnp.arange(self.shape[a]) - ia)]
+                    col = ca if col is None else (
+                        col[:, None] * ca[None, :]).reshape(-1)
+                return col
+
+            return diag, matcol
+        diag = None
+        for a, t in enumerate(tcols):
+            idx_a = self.axis_idx[a]
+            w_a = self.axis_w[a].astype(t.dtype)
+            G = t[jnp.abs(idx_a[:, :, None] - idx_a[:, None, :])]
+            qa = jnp.einsum("ns,nst,nt->n", w_a, G, w_a)
+            diag = qa if diag is None else diag * qa
+
+        def matcol(i):
+            col = None
+            for a, t in enumerate(tcols):
+                idx_a = self.axis_idx[a]
+                w_a = self.axis_w[a].astype(t.dtype)
+                u = jnp.zeros((self.shape[a],), t.dtype).at[
+                    idx_a[i]].add(w_a[i])
+                ya = _toeplitz_matvec(t, u[:, None])[:, 0]
+                col = ya if col is None else (
+                    col[:, None] * ya[None, :]).reshape(-1)
+            return interp_gather(self.idx, self.w.astype(col.dtype),
+                                 col[:, None])[:, 0]
+
+        return diag, matcol
+
     def bind_pivchol_precond(self, thetas, dtype, rank: int):
         """Bank-aware pivoted-Cholesky preconditioner (ROADMAP item).
 
@@ -305,14 +548,23 @@ class BankOperator:
         """
         from jax.scipy.linalg import cho_solve
 
-        T = self.first_columns(thetas, dtype)               # (B, m_grid)
         noise2 = jnp.asarray(self.noise2, dtype)
+        if self.d > 1:
+            cols = tuple(self.axis_first_columns(thetas, dtype))
 
-        def member_L(tcol):
-            diag, matcol = self._member_diag_matcol(tcol)
-            return it.pivoted_cholesky(diag, matcol, rank)
+            def member_L_nd(tcols):
+                diag, matcol = self._member_diag_matcol_nd(tcols)
+                return it.pivoted_cholesky(diag, matcol, rank)
 
-        Ls = jax.vmap(member_L)(T)                          # (B, n, r)
+            Ls = jax.vmap(member_L_nd)(cols)                # (B, n, r)
+        else:
+            T = self.first_columns(thetas, dtype)           # (B, m_grid)
+
+            def member_L(tcol):
+                diag, matcol = self._member_diag_matcol(tcol)
+                return it.pivoted_cholesky(diag, matcol, rank)
+
+            Ls = jax.vmap(member_L)(T)                      # (B, n, r)
         M = noise2 * jnp.eye(rank, dtype=dtype) + jnp.einsum(
             "bnr,bns->brs", Ls, Ls)
         Lm = jnp.linalg.cholesky(M)                         # (B, r, r)
@@ -339,8 +591,34 @@ class BankOperator:
         """Per-member Strang-circulant SLQ accessors for EXACT-grid banks
         (the bank mirror of ``ToeplitzOperator.slq_precond``): B analytic
         n-point spectra → batched P⁻¹ apply, N(0, P_b) sampler and exact
-        (B,) ln det P.  SKI banks return None (their grid-space sandwich
-        has no analytic determinant — plain bank SLQ applies)."""
+        (B,) ln det P.  Full-product-grid banks ("kron") get the d-D
+        analogue — per-member Kronecker Strang spectra, d-D FFT pairs,
+        ln det P_b = Σ ln Λ_b.  SKI / product banks return None (their
+        grid-space sandwich has no analytic determinant — plain bank SLQ
+        applies)."""
+        if self.d > 1:
+            if self.structure != "kron":
+                return None
+            Lam = self._strang_lam_nd(thetas, dtype, floor)  # (B, m1..md)
+            LamT = jnp.moveaxis(Lam, 0, -1)[..., None]
+            sq = jnp.sqrt(LamT)
+            axes = tuple(range(self.d))
+            shape, n, B = self.shape, self.n, self.B
+
+            def apply_inv_nd(r):                             # (n, B, p)
+                U = r.reshape(shape + r.shape[1:])
+                out = jnp.fft.ifftn(jnp.fft.fftn(U, axes=axes) / LamT,
+                                    axes=axes).real.astype(r.dtype)
+                return out.reshape(r.shape)
+
+            def sample_nd(key, p):
+                g = jax.random.normal(key, shape + (B, p), dtype)
+                z = jnp.fft.ifftn(jnp.fft.fftn(g, axes=axes) * sq,
+                                  axes=axes).real
+                return z.reshape(n, B, p)
+
+            logdet = jnp.sum(jnp.log(Lam.reshape(B, -1)), axis=1)
+            return SLQPrecond(apply_inv_nd, sample_nd, logdet)
         if self.idx is not None:
             return None
         T = self.first_columns(thetas, dtype)               # (B, n)
@@ -515,7 +793,7 @@ def make_bank_objective(bank: BankOperator, box: FlatBox, y, key,
     # with the exact-grid Strang SLQ accessors when available
     choice = bank.resolve_precond(opts)
     rank = opts.precond_rank if opts.precond_rank > 0 \
-        else it._DEFAULT_PIVCHOL_RANK
+        else it._auto_pivchol_rank(bank)
 
     def _bind(thetas):
         mv = bank.bind_matvec(thetas, dtype)

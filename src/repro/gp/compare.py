@@ -36,8 +36,9 @@ from ..core import laplace as _laplace
 from ..core import hyperlik as hl
 from ..core.model_compare import ModelReport, log_bayes_factors
 from ..core.reparam import flat_box, log_prior_volume
-from ..data.grid import classify_grid
+from ..data.grid import classify_grid, classify_grid_nd
 from ..kernels import kernel_matvec
+from ..kernels import ops as kops
 from . import batch as _batch
 from .session import GP
 from .spec import GPSpec, as_spec
@@ -51,11 +52,27 @@ def batchable(specs: Sequence[GPSpec], x) -> bool:
     """True when the candidate bank can train as one batched program."""
     if len(specs) < 2:
         return False
-    if classify_grid(x).kind not in ("exact", "near"):
+    xa = jnp.asarray(x)
+    d = int(xa.shape[1]) if xa.ndim == 2 else 1
+    if d >= 2:
+        # multi-axis bank: needs Kronecker/product structure (classify_grid_nd)
+        # and one registered factor per coordinate axis in every member
+        try:
+            if classify_grid_nd(xa).kind not in ("kron", "product"):
+                return False
+        except ValueError:
+            return False
+    elif classify_grid(x).kind not in ("exact", "near"):
         return False
     first = specs[0]
     for s in specs:
-        if s.name not in kernel_matvec.TILE_FNS:
+        try:
+            factors = kops.split_kind(s.name)
+        except ValueError:
+            return False
+        if len(factors) != d:
+            return False
+        if any(f not in kernel_matvec.TILE_FNS for f in factors):
             return False
         if s.noise != first.noise or s.solver != first.solver:
             return False

@@ -103,11 +103,15 @@ class GPSpec:
         if isinstance(self.noise, (int, float)):
             object.__setattr__(self, "noise",
                                NoiseModel(sigma_n=float(self.noise)))
-        if isinstance(self.kernel, str) and self.kernel not in C.REGISTRY:
-            raise ValueError(
-                f"unknown covariance kind {self.kernel!r}; registered "
-                f"kinds: {_registered_kinds()} (or pass a Covariance "
-                f"object)")
+        if isinstance(self.kernel, str):
+            try:
+                C.resolve(self.kernel)   # accepts composite "a*b" names too
+            except KeyError:
+                raise ValueError(
+                    f"unknown covariance kind {self.kernel!r}; registered "
+                    f"kinds: {_registered_kinds()}, '*'-joined for "
+                    f"separable multi-axis products (or pass a Covariance "
+                    f"object)") from None
         if self.solver.backend not in ("auto",) + BACKENDS:
             raise ValueError(
                 f"unknown backend {self.solver.backend!r}; choose from "
@@ -127,7 +131,7 @@ class GPSpec:
     # -- covariance resolution ------------------------------------------
     @property
     def cov(self) -> Covariance:
-        return (C.REGISTRY[self.kernel] if isinstance(self.kernel, str)
+        return (C.resolve(self.kernel) if isinstance(self.kernel, str)
                 else self.kernel)
 
     @property

@@ -92,6 +92,57 @@ TILE_FNS = {
 }
 
 
+def _product_tile(tile_fns, x1, x2t, p):
+    """Separable product tile  k = prod_a k_a(x1[:,a] - x2[:,a])  (R, C).
+
+    x1 is the (R, d) coordinate block and x2t the (d, C) transposed block:
+    per-axis separations stay rank-2 broadcasts ((R,1) - (1,C)) exactly like
+    the 1-D layout, with the transpose done once on the host, never in VMEM.
+    """
+    k = None
+    for a, fn in enumerate(tile_fns):
+        dt = x1[:, a:a + 1] - x2t[a:a + 1, :]
+        ka = fn(dt, p[a])
+        k = ka if k is None else k * ka
+    return k
+
+
+def _matvec_kernel_nd(tile_fns, params_ref, x1_ref, x2t_ref, v_ref, o_ref):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    k = _product_tile(tile_fns, x1_ref[...], x2t_ref[...], params_ref[...])
+    o_ref[...] += jnp.dot(k, v_ref[...],
+                          preferred_element_type=o_ref.dtype)
+
+
+def _matvec_stacked_tangent_kernel_nd(tile_fns, m, params_ref, pdots_ref,
+                                      x1_ref, x2t_ref, v_ref, o_ref):
+    """Product-kernel analogue of the stacked tangent kernel: linearise the
+    product tile around the full (d, N_PARAM_SLOTS) parameter block once,
+    then push all m flat-basis directions through the shared linearisation.
+    A direction living on axis a automatically picks up the other axes'
+    primal factors (the (x)-rule  d(K1 x K2) = dK1 x K2 + K1 x dK2  at the
+    tile level), so no per-axis special-casing is needed."""
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x1 = x1_ref[...]
+    x2t = x2t_ref[...]
+    _, k_lin = jax.linearize(
+        lambda pp: _product_tile(tile_fns, x1, x2t, pp), params_ref[...])
+    ktans = jax.vmap(k_lin)(pdots_ref[...])        # (m, R, C), shared primal
+    o_ref[...] += jax.lax.dot_general(
+        ktans, v_ref[...], (((2,), (0,)), ((), ())),
+        preferred_element_type=o_ref.dtype)
+
+
 def _matvec_kernel(tile_fn, params_ref, x1_ref, x2_ref, v_ref, o_ref):
     c = pl.program_id(1)
 
@@ -250,3 +301,70 @@ def matvec_pallas(kind: str, params, x1, x2, v,
         out_shape=jax.ShapeDtypeStruct((n1, b), v.dtype),
         interpret=interpret,
     )(params.reshape(1, N_PARAM_SLOTS), x1[:, None], x2[None, :], v)
+
+
+def matvec_pallas_nd(kinds, params, x1, x2t, v,
+                     tile_r: int = TILE_R, tile_c: int = TILE_C,
+                     interpret: bool = True):
+    """Separable-product K(x1, x2) @ v for (n, d) coordinates.
+
+    Args:
+      kinds: static tuple of per-axis family keys (one per coordinate axis).
+      params: (d, N_PARAM_SLOTS) per-axis natural-scale parameters.
+      x1: (n1, d) row coordinates.
+      x2t: (d, n2) column coordinates, pre-transposed on the host.
+      v:  (n2, b) right-hand sides.
+    """
+    n1, d = x1.shape
+    n2, b = v.shape
+    assert n1 % tile_r == 0 and n2 % tile_c == 0, (n1, n2, tile_r, tile_c)
+    assert x2t.shape == (d, n2) and len(kinds) == d
+    tile_fns = tuple(TILE_FNS[k] for k in kinds)
+    grid = (n1 // tile_r, n2 // tile_c)
+
+    return pl.pallas_call(
+        functools.partial(_matvec_kernel_nd, tile_fns),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, N_PARAM_SLOTS), lambda r, c: (0, 0)),
+            pl.BlockSpec((tile_r, d), lambda r, c: (r, 0)),
+            pl.BlockSpec((d, tile_c), lambda r, c: (0, c)),
+            pl.BlockSpec((tile_c, b), lambda r, c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_r, b), lambda r, c: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((n1, b), v.dtype),
+        interpret=interpret,
+    )(params, x1, x2t, v)
+
+
+def matvec_stacked_tangent_pallas_nd(kinds, params, pdots, x1, x2t, v,
+                                     tile_r: int = TILE_R,
+                                     tile_c: int = TILE_C,
+                                     interpret: bool = True):
+    """All m product-kernel tangent matvecs  dK/dp[pdot_i] @ V  in one launch.
+
+    pdots: (m, d, N_PARAM_SLOTS) per-direction per-axis natural tangents.
+    Returns (m, n1, b).
+    """
+    n1, d = x1.shape
+    n2, b = v.shape
+    assert n1 % tile_r == 0 and n2 % tile_c == 0, (n1, n2, tile_r, tile_c)
+    assert x2t.shape == (d, n2) and len(kinds) == d
+    m = pdots.shape[0]
+    tile_fns = tuple(TILE_FNS[k] for k in kinds)
+    grid = (n1 // tile_r, n2 // tile_c)
+
+    return pl.pallas_call(
+        functools.partial(_matvec_stacked_tangent_kernel_nd, tile_fns, m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, N_PARAM_SLOTS), lambda r, c: (0, 0)),
+            pl.BlockSpec((m, d, N_PARAM_SLOTS), lambda r, c: (0, 0, 0)),
+            pl.BlockSpec((tile_r, d), lambda r, c: (r, 0)),
+            pl.BlockSpec((d, tile_c), lambda r, c: (0, c)),
+            pl.BlockSpec((tile_c, b), lambda r, c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, tile_r, b), lambda r, c: (0, r, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n1, b), v.dtype),
+        interpret=interpret,
+    )(params, pdots, x1, x2t, v)

@@ -60,9 +60,12 @@ from typing import Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.scipy.linalg import cho_solve
 
-from ..data.grid import (GRID_RTOL, build_inducing_grid, classify_grid,
-                         interp_weights, is_regular_grid)
+from ..data.grid import (GRID_RTOL, _concrete, build_inducing_grid,
+                         classify_grid, classify_grid_nd, interp_weights,
+                         is_regular_grid)
 from . import kernel_matvec
 from . import ops as kops
 from . import ski_fused
@@ -113,7 +116,20 @@ def bound_gram_matvec(op, theta, dtype) -> "callable":
 # ---------------------------------------------------------------------------
 
 def _tile_column(kind: str, theta, dt):
-    """k(dt) for a separation vector dt — one closed-form tile evaluation."""
+    """k(dt) for a separation vector dt — one closed-form tile evaluation.
+
+    Composite kinds ("a*b") take (n, d) separations and return the product
+    of the per-axis factors on dt[..., a] (separable kernels, DESIGN.md §13).
+    """
+    kinds = kind.split("*")
+    if len(kinds) > 1:
+        blocks = kops.theta_blocks(kind, theta)
+        out = None
+        for a, (k, tb) in enumerate(zip(kinds, blocks)):
+            p = kops.natural_params(k, tb).astype(dt.dtype)
+            ka = kernel_matvec.TILE_FNS[k](dt[..., a], p)
+            out = ka if out is None else out * ka
+        return out
     p = kops.natural_params(kind, theta).astype(dt.dtype)
     return kernel_matvec.TILE_FNS[kind](dt, p)
 
@@ -148,11 +164,25 @@ class PallasTileOperator(_StationaryColumnAccess):
 
     def __init__(self, kind: str, x, sigma_n: float = 0.0,
                  jitter: float = 0.0):
-        if kind not in kernel_matvec.TILE_FNS:
-            raise KeyError(f"no Pallas tile for covariance {kind!r}; "
-                           f"registered: {sorted(kernel_matvec.TILE_FNS)}")
+        kinds = kind.split("*")
+        for k in kinds:
+            if k not in kernel_matvec.TILE_FNS:
+                raise KeyError(f"no Pallas tile for covariance {kind!r}; "
+                               f"registered: {sorted(kernel_matvec.TILE_FNS)}")
         self.kind = kind
+        self.kinds = tuple(kinds)
         self.x = jnp.asarray(x)
+        if len(kinds) > 1 and (self.x.ndim != 2
+                               or self.x.shape[1] != len(kinds)):
+            raise ValueError(
+                f"composite kind {kind!r} needs (n, {len(kinds)}) "
+                f"coordinates (one column per factor), got shape "
+                f"{self.x.shape}")
+        if len(kinds) == 1 and self.x.ndim != 1:
+            raise ValueError(
+                f"plain kind {kind!r} needs 1-D coordinates; got shape "
+                f"{self.x.shape} — use a composite 'a*b' kind with one "
+                f"factor per axis for multi-axis inputs")
         self.n = self.x.shape[0]
         self.sigma_n = float(sigma_n)
         self.jitter = float(jitter)
@@ -171,7 +201,13 @@ class PallasTileOperator(_StationaryColumnAccess):
     def circulant_precond(self, theta, floor: float = 1e-12):
         """Circulant apply from the mean-spacing stand-in column — a model
         of NEAR-uniform sampling; expect little from it on genuinely
-        scattered x (prefer pivchol there)."""
+        scattered x (prefer pivchol there).  Scattered MULTI-axis data has
+        no meaningful 1-D stand-in grid at all, so the composite-kind path
+        degrades to the Jacobi apply (exact diagonal: unit-scale kernels
+        give k(0) = 1)."""
+        if len(self.kinds) > 1:
+            scale = 1.0 + self.noise2
+            return lambda r: r / jnp.asarray(scale, r.dtype)
         return _circulant_inverse_apply(
             _mean_spacing_column(self.kind, theta, self.x, self.n),
             self.noise2, floor)
@@ -304,6 +340,121 @@ def _toeplitz_matvec_stacked(T, v):
     return w[:, :n].astype(v.dtype)
 
 
+def _axis_toeplitz_apply(lam, m: int, U, axis: int):
+    """Apply one symmetric Toeplitz factor along ``axis`` of a grid tensor.
+
+    ``lam`` is the rfft of the 2m-2 circulant embedding of the factor's
+    first column; every other axis of U (including the trailing batch axis)
+    is folded into the FFT's batch dimension, so one Kronecker gram matvec
+    is exactly d of these per-axis sweeps — the reshape-matmul-transpose
+    cycle of (K_1 (x) ... (x) K_d) v with the matmuls done by FFTs.
+    """
+    U = jnp.moveaxis(U, axis, 0)
+    sh = U.shape
+    L = 2 * m - 2
+    V = U.reshape(m, -1)
+    vp = jnp.zeros((L, V.shape[1]), V.dtype).at[:m].set(V)
+    out = jnp.fft.irfft(lam[:, None] * jnp.fft.rfft(vp, axis=0),
+                        n=L, axis=0)[:m]
+    return jnp.moveaxis(out.astype(U.dtype).reshape(sh), 0, axis)
+
+
+# Cap on the missing-cell block of the determinant-corrected gappy SLQ
+# preconditioner: the correction is a g x g Cholesky (g = dropped cells),
+# exact but cubic in g — past this it stops being "asymptotically free".
+_GAPPY_SLQ_MAX_MISS = 4096
+
+
+def masked_circulant_slq_precond(lam, occ,
+                                 max_miss: int = _GAPPY_SLQ_MAX_MISS
+                                 ) -> Optional[SLQPrecond]:
+    """Determinant-corrected SLQ preconditioner  P = M[occ, occ]  for gappy
+    grids (DESIGN.md §13): M is the (multi-level) circulant-plus-noise with
+    d-D spectrum ``lam`` (noise already folded in) over the FULL m-cell
+    grid, and ``occ`` the flat indices of the n occupied cells.
+
+    All three SLQ accessors are EXACT for this P via block-inverse
+    identities through the g = m - n missing cells:
+
+      * apply_inv:  with G = M^{-1}[miss, miss] (a gather of the circulant
+        inverse's first column, SPD), P^{-1} r = (M^{-1} r̃)[occ] minus the
+        correction (M^{-1} [0; G^{-1} (M^{-1} r̃)[miss]])[occ] — two FFT
+        solves + one g x g Cholesky backsolve;
+      * sample:     (M^{1/2} g)[occ] has covariance M[occ, occ] = P exactly
+        (marginal restriction of the circulant sample);
+      * logdet:     det P = det M · det G (Schur), so
+        ln det P = Σ ln λ + 2 Σ ln diag chol(G) — analytic.
+
+    ``occ = None`` means the full grid (no gaps: pure multi-level Strang,
+    as used by KroneckerOperator).  Returns None when g exceeds
+    ``max_miss`` or occ has duplicates (callers fall back to plain SLQ).
+    """
+    shape = lam.shape
+    m = int(np.prod(shape))
+    axes = tuple(range(lam.ndim))
+
+    def conv_inv(R):
+        """M^{-1} on the full grid: (m, b) -> (m, b) via d-D FFT solve."""
+        U = R.reshape(shape + (R.shape[1],))
+        out = jnp.fft.ifftn(jnp.fft.fftn(U, axes=axes) / lam[..., None],
+                            axes=axes).real
+        return out.reshape(m, -1)
+
+    sq = jnp.sqrt(lam)
+    logdet = jnp.sum(jnp.log(lam))
+    if occ is None:
+        occ_np = None
+        g = 0
+    else:
+        occ_np = np.asarray(occ, np.int64).ravel()
+        if np.unique(occ_np).size != occ_np.size:
+            return None
+        miss_np = np.setdiff1d(np.arange(m, dtype=np.int64), occ_np)
+        g = int(miss_np.size)
+        if g > max_miss:
+            return None
+    if g:
+        # G[i, j] = q[(miss_i - miss_j) mod shape], q the first column of
+        # M^{-1} (a circulant inverse is circulant) — host-side index math,
+        # one d-D FFT for q.
+        midx = np.unravel_index(miss_np, shape)
+        diff = tuple((mi[:, None] - mi[None, :]) % sa
+                     for mi, sa in zip(midx, shape))
+        flat_diff = np.ravel_multi_index(diff, shape)
+        q = jnp.fft.ifftn(1.0 / lam, axes=axes).real.reshape(-1)
+        G = q[jnp.asarray(flat_diff)]
+        Lg = jnp.linalg.cholesky(G)
+        logdet = logdet + 2.0 * jnp.sum(jnp.log(jnp.diag(Lg)))
+        miss_j = jnp.asarray(miss_np)
+    occ_j = None if occ_np is None else jnp.asarray(occ_np)
+
+    def apply_inv(r):
+        squeeze = r.ndim == 1
+        rb = r[:, None] if squeeze else r
+        if occ_j is None:
+            u = conv_inv(rb)
+        else:
+            rt = jnp.zeros((m, rb.shape[1]), lam.dtype).at[occ_j].set(rb)
+            u = conv_inv(rt)
+            if g:
+                s = u[miss_j]
+                tcor = cho_solve((Lg, True), s)
+                tt = jnp.zeros((m, rb.shape[1]),
+                               lam.dtype).at[miss_j].set(tcor)
+                u = u - conv_inv(tt)
+            u = u[occ_j]
+        out = u.astype(r.dtype)
+        return out[:, 0] if squeeze else out
+
+    def sample(key, p):
+        gg = jax.random.normal(key, shape + (p,), lam.dtype)
+        z = jnp.fft.ifftn(jnp.fft.fftn(gg, axes=axes) * sq[..., None],
+                          axes=axes).real.reshape(m, p)
+        return z if occ_j is None else z[occ_j]
+
+    return SLQPrecond(apply_inv, sample, logdet)
+
+
 class ToeplitzOperator(_StationaryColumnAccess):
     """O(n log n) gram/tangent matvecs for stationary kernels on a grid.
 
@@ -432,6 +583,27 @@ def interp_scatter(idx, w, m_grid: int, V):
     return jnp.zeros((m_grid,) + V.shape[1:], V.dtype).at[idx].add(
         w * V[:, None])
 
+def _selection_cells(idx, w) -> Optional[np.ndarray]:
+    """Flat grid cells of a selection-matrix W, or None if W is not one.
+
+    W is a selection matrix iff every row has exactly one nonzero weight,
+    that weight is exactly 1 (interp_weights snaps on-node rows to one-hot,
+    so this is an equality test, not a tolerance judgement), and the hit
+    cells are distinct.  Host-side numpy on the trace-time constants.
+    """
+    w_np = np.asarray(w)
+    idx_np = np.asarray(idx)
+    hot = w_np == 1.0
+    if not (np.count_nonzero(hot, axis=1) == 1).all():
+        return None
+    if not (np.count_nonzero(w_np, axis=1) == 1).all():
+        return None
+    cells = idx_np[np.arange(idx_np.shape[0]), np.argmax(hot, axis=1)]
+    if np.unique(cells).size != cells.size:
+        return None
+    return cells.astype(np.int64)
+
+
 class SKIOperator:
     """K ≈ W K_grid Wᵀ: the Toeplitz/FFT fast path for OFF-grid inputs.
 
@@ -491,6 +663,11 @@ class SKIOperator:
                                                          self.m_grid)
         self.fused = ski_fused.resolve_fused(fused, self.fused_geom,
                                              int(self.n))
+        # gappy-record detection (host-side, once): W is a SELECTION matrix
+        # when every row is one-hot on a distinct grid cell — the paper's
+        # footnote-7 case, which unlocks the determinant-corrected SLQ
+        # preconditioner (slq_precond below).  Jittered rows leave None.
+        self._sel_cells = _selection_cells(idx, w)
 
     # -- the sparse interpolation applications (trace-safe: idx/w constants)
 
@@ -655,6 +832,510 @@ class SKIOperator:
 
         return apply
 
+    def slq_precond(self, theta,
+                    floor: float = 1e-12) -> Optional[SLQPrecond]:
+        """Determinant-corrected SLQ preconditioner for GAPPY records.
+
+        When W is a selection matrix (every data point ON a distinct node
+        of the underlying grid — dropped samples, no jitter), the training
+        matrix is EXACTLY the occupied principal submatrix of the grid
+        Toeplitz-plus-noise system, and the Strang model of that submatrix
+        is P = M[occ, occ] with M the m-cell Strang circulant + noise.
+        :func:`masked_circulant_slq_precond` provides all three SLQ
+        accessors of this P exactly (FFT applies + a g x g correction
+        through the missing cells, analytic log-det), extending the
+        preconditioned-SLQ log-det path from exact grids to gappy ones
+        (DESIGN.md §13).  Jittered samplings (W not a selection matrix)
+        return None and ride plain SLQ.
+        """
+        if self._sel_cells is None:
+            return None
+        lam = _strang_spectrum(self._toep.first_column(theta), self.noise2,
+                               floor)
+        return masked_circulant_slq_precond(lam, self._sel_cells)
+
+
+# ---------------------------------------------------------------------------
+# Multi-axis fast paths: Kronecker product grids + product SKI (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+class KroneckerOperator:
+    """K = K_1 (x) ... (x) K_d for separable kernels on a full product grid.
+
+    A separable covariance k(x, x') = prod_a k_a(x_a, x'_a) evaluated on the
+    canonical row-major enumeration of an m_1 x ... x m_d product grid has
+    Gram matrix EXACTLY the Kronecker product of the per-axis symmetric
+    Toeplitz matrices.  The gram matvec is the standard reshape cycle —
+    view v as an (m_1, ..., m_d, b) tensor and apply each axis's Toeplitz
+    factor along its own axis via the circulant-embedding FFT
+    (:func:`_axis_toeplitz_apply`) — O(n log n) total work, O(n) memory,
+    never an (n, n) or even (m_a, m_a) intermediate.
+
+    Tangent matvecs use the product rule at the operator level:
+    dK/dθ_i for a direction living on axis a is (dK_a) (x) (K_other axes),
+    so each axis's stacked tangent spectra (jacfwd of the per-axis first
+    column, m_a scalars) ride between the OTHER axes' base sweeps — the
+    base spectra are computed once and reused across that axis's block.
+
+    The SLQ preconditioner is the Kronecker product of per-axis Strang
+    circulants + noise: its d-D spectrum is the outer product of the
+    per-axis Strang spectra, so apply/sample are d-D FFT pairs and
+    ln det P = Σ ln Λ is analytic (:func:`masked_circulant_slq_precond`
+    with no mask).
+    """
+
+    name = "kron"
+
+    def __init__(self, kind: str, x=None, sigma_n: float = 0.0,
+                 jitter: float = 0.0, rtol: float = GRID_RTOL, grids=None):
+        kinds = kops.split_kind(kind)
+        if len(kinds) < 2:
+            raise ValueError(
+                f"KroneckerOperator needs a composite kind 'a*b' with one "
+                f"factor per grid axis, got plain kind {kind!r}")
+        if grids is None:
+            info = classify_grid_nd(x, rtol=rtol)
+            if info.kind != "kron":
+                raise ValueError(
+                    "KroneckerOperator needs x to enumerate a FULL product "
+                    "grid in canonical row-major order (last axis fastest; "
+                    f"classify_grid_nd kind 'kron'), got {info.kind!r}; "
+                    "gappy/permuted/jittered product data rides "
+                    "ProductSKIOperator, scattered data the Pallas tiles")
+            grids = info.grids
+        if len(grids) != len(kinds):
+            raise ValueError(
+                f"kind {kind!r} has {len(kinds)} axis factors but "
+                f"{len(grids)} per-axis grids were given")
+        self.kind = kind
+        self.kinds = kinds
+        # per-axis Toeplitz operators carry the grids NOISE-FREE: the white
+        # noise lives on the joint data axis, not inside any single factor
+        self.axes_ops = tuple(ToeplitzOperator(k, g)
+                              for k, g in zip(kinds, grids))
+        self.shape = tuple(int(t.n) for t in self.axes_ops)
+        self.d = len(kinds)
+        self.n = int(np.prod(self.shape))
+        self.x = None if x is None else jnp.asarray(x)
+        self.sigma_n = float(sigma_n)
+        self.jitter = float(jitter)
+        self.noise2 = float(sigma_n) ** 2 + float(jitter)
+        sizes = [kops.FLAT_NPARAMS[k] for k in kinds]
+        offs = np.concatenate([[0], np.cumsum(sizes)])
+        self._slices = tuple(slice(int(offs[a]), int(offs[a + 1]))
+                             for a in range(self.d))
+
+    def first_columns(self, theta, dtype=None):
+        """Per-axis first columns — the Σ m_a numbers defining the matrix."""
+        theta = jnp.asarray(theta)
+        return tuple(t.first_column(theta[s], dtype)
+                     for t, s in zip(self.axes_ops, self._slices))
+
+    def _lams(self, theta, dtype):
+        return [jnp.fft.rfft(_embed(t))
+                for t in self.first_columns(theta, dtype)]
+
+    def _cycle(self, lams, v):
+        """(n, b) -> (n, b): the per-axis FFT sweep of the Kronecker matvec."""
+        b = v.shape[1]
+        U = v.reshape(self.shape + (b,))
+        for a, lam in enumerate(lams):
+            U = _axis_toeplitz_apply(lam, self.shape[a], U, a)
+        return U.reshape(self.n, b)
+
+    def matvec(self, theta, v):
+        squeeze = v.ndim == 1
+        if squeeze:
+            v = v[:, None]
+        out = self._cycle(self._lams(theta, v.dtype), v)
+        return out[:, 0] if squeeze else out
+
+    def gram_matvec(self, theta, v):
+        return self.matvec(theta, v) + jnp.asarray(self.noise2, v.dtype) * v
+
+    def bound_gram_matvec(self, theta, dtype):
+        """Per-θ bound apply: all d axis spectra hoisted; each call inside
+        the CG/Lanczos loop is d rfft/irfft pairs + the noise diagonal."""
+        lams = self._lams(theta, dtype)
+        noise2 = self.noise2
+
+        def mv(v):
+            squeeze = v.ndim == 1
+            if squeeze:
+                v = v[:, None]
+            out = self._cycle(lams, v)
+            out = out + jnp.asarray(noise2, v.dtype) * v
+            return out[:, 0] if squeeze else out
+
+        return mv
+
+    def tangent_matvecs(self, theta, V):
+        """Stacked dK/dθ @ V: axis a's parameter block gets
+        (dK_a/dθ) (x) (base elsewhere) — the per-direction work on top of
+        the shared base sweeps is ONE stacked Toeplitz tangent apply."""
+        squeeze = V.ndim == 1
+        if squeeze:
+            V = V[:, None]
+        dtype = V.dtype
+        theta = jnp.asarray(theta, dtype)
+        lams = self._lams(theta, dtype)
+        b = V.shape[1]
+        outs = []
+        for a in range(self.d):
+            ax = self.axes_ops[a]
+            rows = jax.jacfwd(
+                lambda th, ax=ax: ax.first_column(th, dtype)
+            )(theta[self._slices[a]])                       # (m_a, p_a)
+            U = V.reshape(self.shape + (b,))
+            for c in range(self.d):
+                if c != a:
+                    U = _axis_toeplitz_apply(lams[c], self.shape[c], U, c)
+            U = jnp.moveaxis(U, a, 0)
+            sh = U.shape
+            T = _toeplitz_matvec_stacked(rows.T,
+                                         U.reshape(sh[0], -1))  # (p_a, m_a, .)
+            T = T.reshape((T.shape[0],) + sh)
+            T = jnp.moveaxis(T, 1, a + 1)
+            outs.append(T.reshape(T.shape[0], self.n, b))
+        out = jnp.concatenate(outs, axis=0)
+        return out[:, :, 0] if squeeze else out
+
+    # -- preconditioner access hooks
+
+    def diag(self, theta):
+        """k(0) = prod_a k_a(0) on every grid point (unit kernels: ones)."""
+        ts = self.first_columns(theta)
+        d0 = ts[0][0]
+        for t in ts[1:]:
+            d0 = d0 * t[0]
+        return d0 * jnp.ones((self.n,), ts[0].dtype)
+
+    def matcol(self, theta, i):
+        """Column i of the Kronecker matrix: the outer product of per-axis
+        Toeplitz columns t_a[|· - i_a|], i unravelled row-major (traced-
+        index-safe: pure jnp arithmetic)."""
+        ts = self.first_columns(theta)
+        i = jnp.asarray(i)
+        idxs = []
+        rem = i
+        for m in reversed(self.shape):
+            idxs.append(rem % m)
+            rem = rem // m
+        idxs = idxs[::-1]
+        col = None
+        for a, (t, ia) in enumerate(zip(ts, idxs)):
+            ca = t[jnp.abs(jnp.arange(self.shape[a]) - ia)]
+            col = ca if col is None else (col[:, None]
+                                          * ca[None, :]).reshape(-1)
+        return col
+
+    def _strang_lam(self, theta, floor: float = 1e-12):
+        """d-D spectrum of (x)_a Strang(K_a) + noise2 I: the outer product
+        of per-axis Strang spectra plus the noise — shape ``self.shape``."""
+        ts = self.first_columns(theta)
+        lams = [_strang_spectrum(t, 0.0, floor) for t in ts]
+        Lam = lams[0]
+        for lb in lams[1:]:
+            Lam = Lam[..., None] * lb
+        return Lam + jnp.asarray(self.noise2, Lam.dtype)
+
+    def circulant_precond(self, theta, floor: float = 1e-12):
+        """CG preconditioner: the Kronecker-Strang spectral solve."""
+        return self.slq_precond(theta, floor).apply_inv
+
+    def slq_precond(self, theta, floor: float = 1e-12) -> SLQPrecond:
+        """Preconditioned-SLQ accessors of the Kronecker Strang circulant:
+        apply/sample are d-D FFT pairs, ln det P = Σ ln Λ analytic."""
+        return masked_circulant_slq_precond(self._strang_lam(theta, floor),
+                                            None)
+
+
+class ProductSKIOperator:
+    """K ≈ W K_kron Wᵀ: product SKI for gappy/jittered multi-axis data.
+
+    Structured kernel interpolation on a PRODUCT inducing grid ("Faster
+    Kernel Interpolation for Gaussian Processes", PAPERS.md): each axis
+    gets its own 1-D inducing grid and 1-D cubic/linear stencil
+    (``data.grid``), and a data point's joint interpolation row is the
+    OUTER PRODUCT of its per-axis rows — s^d taps with weights
+    prod_a w_a[i, j_a] on flat cells Σ_a idx_a[i, j_a]·stride_a, stored
+    CSR-style exactly like 1-D SKI.  Matvecs run gather → Kronecker FFT
+    cycle → scatter in O(n s^d + m log m), m = prod m_a.
+
+    Exactness mirrors 1-D SKI: points ON grid nodes (missing pixels,
+    station dropouts — gappy but unjittered records) make W a selection
+    matrix and the surrogate exact; jittered points incur the per-axis
+    cubic interpolation error.  Selection-matrix geometries additionally
+    unlock the determinant-corrected gappy SLQ preconditioner on the d-D
+    grid (:meth:`slq_precond`).
+    """
+
+    name = "product_ski"
+
+    def __init__(self, kind: str, x, sigma_n: float = 0.0,
+                 jitter: float = 0.0, spacings=None, n_grid=None,
+                 order: str = "cubic", fused="auto",
+                 rtol: float = GRID_RTOL):
+        kinds = kops.split_kind(kind)
+        if len(kinds) < 2:
+            raise ValueError(
+                f"ProductSKIOperator needs a composite kind 'a*b' with one "
+                f"factor per axis, got plain kind {kind!r}")
+        xc = _concrete(x)
+        if xc is None:
+            raise ValueError("ProductSKIOperator needs concrete x (SKI "
+                             "grids are built host-side at trace time)")
+        xc = np.asarray(xc, np.float64)
+        d = len(kinds)
+        if xc.ndim != 2 or xc.shape[1] != d:
+            raise ValueError(
+                f"composite kind {kind!r} needs (n, {d}) coordinates, got "
+                f"shape {xc.shape}")
+        n = xc.shape[0]
+        if spacings is None:
+            spacings = (None,) * d
+        if n_grid is None:
+            n_grid = (None,) * d
+        grids, axis_idx, axis_w = [], [], []
+        for a in range(d):
+            spacing_a = spacings[a]
+            if spacing_a is None and n_grid[a] is None:
+                # default per-axis spacing from the axis's OWN recovered
+                # 1-D grid (its distinct values), not from n: the joint
+                # grid must scale like prod m_a ~ n, not n^d
+                info_a = classify_grid(np.unique(xc[:, a]), rtol=rtol)
+                spacing_a = info_a.h
+            grid_a = build_inducing_grid(xc[:, a], spacing=spacing_a,
+                                         n_grid=n_grid[a])
+            idx_a, w_a = interp_weights(xc[:, a], grid_a, order=order)
+            grids.append(grid_a)
+            axis_idx.append(idx_a)
+            axis_w.append(w_a)
+        self.kind = kind
+        self.kinds = kinds
+        self.d = d
+        self.x = jnp.asarray(x)
+        self.n = n
+        self.order = order
+        self.sigma_n = float(sigma_n)
+        self.jitter = float(jitter)
+        self.noise2 = float(sigma_n) ** 2 + float(jitter)
+        self._kron = KroneckerOperator(kind, grids=tuple(grids))
+        self.grids = tuple(t.x for t in self._kron.axes_ops)
+        self.shape = self._kron.shape
+        self.m_grid = self._kron.n
+        strides = np.ones(d, np.int64)
+        for a in range(d - 2, -1, -1):
+            strides[a] = strides[a + 1] * self.shape[a + 1]
+        self._strides = strides
+        # combined outer-product taps: flat (n, s^d) index/weight arrays —
+        # after this, _W/_Wt are literally the 1-D SKI gather/scatter
+        IDX = np.zeros((n, 1), np.int64)
+        WW = np.ones((n, 1), np.float64)
+        for a in range(d):
+            IDX = (IDX[:, :, None]
+                   + idx_a_flat(axis_idx[a], strides[a])).reshape(n, -1)
+            WW = (WW[:, :, None] * axis_w[a][:, None, :]).reshape(n, -1)
+        self.idx = jnp.asarray(IDX.astype(np.int32))
+        self.w = jnp.asarray(WW, self.x.dtype)
+        self.axis_idx = tuple(jnp.asarray(ia) for ia in axis_idx)
+        self.axis_w = tuple(jnp.asarray(wa, self.x.dtype) for wa in axis_w)
+        self._sel_cells = _selection_cells(IDX, WW)
+        # fused 2-D Pallas sandwich (DESIGN.md §13): both axis FFT stages +
+        # the VMEM-resident transpose in one launch; d > 2 or unsupported
+        # geometry falls back to the unfused composition
+        self.fused_geom = (ski_fused.build_fused_geometry_nd(
+            axis_idx, axis_w, self.shape) if d == 2 else None)
+        self.fused = ski_fused.resolve_fused(fused, self.fused_geom,
+                                             int(self.n))
+
+    # -- sparse interpolation applications (trace-safe: idx/w constants)
+
+    def _W(self, u):
+        return interp_gather(self.idx, self.w, u)
+
+    def _Wt(self, v):
+        return interp_scatter(self.idx, self.w, self.m_grid, v)
+
+    def matvec(self, theta, v):
+        squeeze = v.ndim == 1
+        if squeeze:
+            v = v[:, None]
+        out = self._W(self._kron.matvec(theta, self._Wt(v)))
+        return out[:, 0] if squeeze else out
+
+    def gram_matvec(self, theta, v):
+        if self.fused:
+            squeeze = v.ndim == 1
+            if squeeze:
+                v = v[:, None]
+            out = self.bound_gram_matvec(theta, v.dtype)(v)
+            return out[:, 0] if squeeze else out
+        return self.matvec(theta, v) + jnp.asarray(self.noise2, v.dtype) * v
+
+    def bound_gram_matvec(self, theta, dtype):
+        """Per-θ bound training matvec.  Fused path: ONE Pallas launch for
+        the whole gather → axis-0 FFT → transpose → axis-1 FFT → spectrum →
+        inverse sandwich (DESIGN.md §13); unfused: hoisted per-axis spectra
+        around the gather/scatter."""
+        if self.fused:
+            ts = self._kron.first_columns(theta, dtype)
+            lams = ski_fused.spectrum_perm_nd(ts, self.fused_geom)
+            geom, noise2 = self.fused_geom, self.noise2
+
+            def mv(v):
+                return ski_fused.fused_gram_matvec_nd(geom, lams, noise2, v)
+
+            return mv
+        inner = self._kron.bound_gram_matvec(theta, dtype)
+        noise2 = self.noise2
+
+        def mv(v):
+            squeeze = v.ndim == 1
+            if squeeze:
+                v = v[:, None]
+            out = self._W(inner(self._Wt(v)))
+            out = out + jnp.asarray(noise2, v.dtype) * v
+            return out[:, 0] if squeeze else out
+
+        return mv
+
+    def tangent_matvecs(self, theta, V):
+        """dK/dθ_i @ V = W (d K_kron/dθ_i) Wᵀ V — W is θ-independent."""
+        squeeze = V.ndim == 1
+        if squeeze:
+            V = V[:, None]
+        if self.fused:
+            dtype = V.dtype
+            theta_j = jnp.asarray(theta, dtype)
+            lams = ski_fused.tangent_spectra_nd(
+                self._kron, theta_j, self.fused_geom, dtype)
+            out = ski_fused.fused_tangent_matvecs_nd(self.fused_geom, lams,
+                                                     0.0, V)
+        else:
+            T = self._kron.tangent_matvecs(theta, self._Wt(V))
+            out = jax.vmap(self._W)(T)                       # (m, n, b)
+        return out[:, :, 0] if squeeze else out
+
+    # -- cross-covariance on the SAME product grid (prediction fast path)
+
+    def cross_interp(self, xstar):
+        """Per-axis interpolation of TEST points onto the SAME product
+        grid; returns combined flat (idx*, w*) or None (traced xstar /
+        stencil leaves a grid — callers fall back to the exact cross)."""
+        xs = _concrete(xstar)
+        if xs is None:
+            return None
+        xs = np.asarray(xs, np.float64)
+        if xs.ndim != 2 or xs.shape[1] != self.d:
+            return None
+        try:
+            parts = [interp_weights(xs[:, a], np.asarray(self.grids[a]),
+                                    order=self.order)
+                     for a in range(self.d)]
+        except ValueError:
+            return None
+        ns = xs.shape[0]
+        IDX = np.zeros((ns, 1), np.int64)
+        WW = np.ones((ns, 1), np.float64)
+        for a in range(self.d):
+            IDX = (IDX[:, :, None]
+                   + idx_a_flat(parts[a][0], self._strides[a])
+                   ).reshape(ns, -1)
+            WW = (WW[:, :, None] * parts[a][1][:, None, :]).reshape(ns, -1)
+        return jnp.asarray(IDX.astype(np.int32)), jnp.asarray(WW,
+                                                              self.x.dtype)
+
+    def cross_matvec(self, theta, xstar_interp, v):
+        """k(x*, x) @ v ≈ W* K_kron (Wᵀ v): two sparse applications around
+        one Kronecker FFT cycle — the prediction-mean path."""
+        idx_s, w_s = xstar_interp
+        squeeze = v.ndim == 1
+        if squeeze:
+            v = v[:, None]
+        u = self._kron.matvec(theta, self._Wt(v))            # (m_grid, b)
+        out = interp_gather(idx_s, w_s, u)
+        return out[:, 0] if squeeze else out
+
+    def cross_columns(self, theta, xstar_interp):
+        """Cross block k(x, x*) ≈ W K_kron W*ᵀ for a CHUNK of test points,
+        scatter → Kronecker cycle → gather, no pairwise evaluations."""
+        idx_s, w_s = xstar_interp                            # (c, taps)
+        c = idx_s.shape[0]
+        wst = jnp.zeros((self.m_grid, c), self.x.dtype).at[
+            idx_s, jnp.arange(c)[:, None]].add(w_s)          # W*ᵀ, sparse
+        return self._W(self._kron.matvec(theta, wst))        # (n, c)
+
+    # -- preconditioner access hooks
+
+    def diag(self, theta):
+        """Surrogate diagonal: the quadratic form FACTORIZES per axis
+        (K_grid is a Kronecker product), so it is the product of d 1-D SKI
+        diagonal forms — O(n d s²), never touching the s^d joint taps."""
+        ts = self._kron.first_columns(theta, self.x.dtype)
+        out = None
+        for t, idx_a, w_a in zip(ts, self.axis_idx, self.axis_w):
+            G = t[jnp.abs(idx_a[:, :, None] - idx_a[:, None, :])]
+            qa = jnp.einsum("ns,nst,nt->n", w_a, G, w_a)
+            out = qa if out is None else out * qa
+        return out
+
+    def matcol(self, theta, i):
+        """Surrogate column W K_kron (Wᵀ e_i):  Wᵀ e_i is RANK-1 across
+        axes (outer product of per-axis s-tap vectors), so K_kron applies
+        per axis to s-sparse vectors — O(Σ m_a log m_a), i traced-safe."""
+        ts = self._kron.first_columns(theta, self.x.dtype)
+        col = None
+        for a, (t, idx_a, w_a) in enumerate(zip(ts, self.axis_idx,
+                                                self.axis_w)):
+            u = jnp.zeros((self.shape[a],), t.dtype).at[idx_a[i]].add(
+                w_a[i].astype(t.dtype))
+            ya = _toeplitz_matvec(t, u[:, None])[:, 0]
+            col = ya if col is None else (col[:, None]
+                                          * ya[None, :]).reshape(-1)
+        return self._W(col[:, None])[:, 0]
+
+    def circulant_precond(self, theta, floor: float = 1e-12):
+        """GRID-space Kronecker-Strang sandwich
+        M^{-1} = W (⊗ Strang_a + noise2 I)^{-1} Wᵀ — the d-D analogue of
+        the 1-D SKI grid-space circulant preconditioner."""
+        pc = self._kron.slq_precond(theta, floor)
+
+        def apply(r):
+            squeeze = r.ndim == 1
+            if squeeze:
+                r = r[:, None]
+            out = self._W(pc.apply_inv(self._Wt(r)))
+            return out[:, 0] if squeeze else out
+
+        return apply
+
+    def slq_precond(self, theta,
+                    floor: float = 1e-12) -> Optional[SLQPrecond]:
+        """Determinant-corrected SLQ preconditioner for gappy PRODUCT grids
+        (missing pixels/dropouts): P = M[occ, occ] with M the d-D Kronecker
+        Strang + noise — same block-inverse identities as the 1-D gappy
+        path, FFTs now d-dimensional.  None for jittered W (plain SLQ)."""
+        if self._sel_cells is None:
+            return None
+        return masked_circulant_slq_precond(
+            self._lam_with_noise(theta, floor), self._sel_cells)
+
+    def _lam_with_noise(self, theta, floor):
+        """d-D Strang spectrum of ⊗ Strang(K_a) + THIS operator's noise
+        (the inner Kronecker operator is noise-free by construction)."""
+        ts = self._kron.first_columns(theta)
+        lams = [_strang_spectrum(t, 0.0, floor) for t in ts]
+        Lam = lams[0]
+        for lb in lams[1:]:
+            Lam = Lam[..., None] * lb
+        return Lam + jnp.asarray(self.noise2, Lam.dtype)
+
+
+def idx_a_flat(idx_a: np.ndarray, stride: int) -> np.ndarray:
+    """(n, s) per-axis stencil indices -> flat contributions (n, 1, s)."""
+    return idx_a.astype(np.int64)[:, None, :] * int(stride)
+
 
 # ---------------------------------------------------------------------------
 # Low-rank surrogate: pivoted Cholesky + noise diagonal (Woodbury-solvable)
@@ -734,6 +1415,8 @@ OPERATORS = {
     PallasTileOperator.name: PallasTileOperator,
     ToeplitzOperator.name: ToeplitzOperator,
     SKIOperator.name: SKIOperator,
+    KroneckerOperator.name: KroneckerOperator,
+    ProductSKIOperator.name: ProductSKIOperator,
     LowRankPlusDiagOperator.name: LowRankPlusDiagOperator,
 }
 
@@ -766,21 +1449,57 @@ def select_operator(kind: str, x, sigma_n: float = 0.0, jitter: float = 0.0,
         remains one ``operator="ski"`` away for scattered data where the
         interpolation approximation is acceptable.
 
+    Composite '*'-joined kinds ("se*matern32") take the multi-axis route:
+    ``data.grid.classify_grid_nd`` probes the (n, d) coordinates and picks
+
+      * "kron"      -> :class:`KroneckerOperator` (full product grid in
+        canonical order: exact, O(n log n));
+      * "product"   -> :class:`ProductSKIOperator` (gappy / permuted /
+        jittered product data: outer-product stencils onto the recovered
+        per-axis grids);
+      * "irregular" -> :class:`PallasTileOperator` on the product tiles
+        (O(n^2 d), exact; also the trace-safe answer for traced x).
+
     The probe inspects concrete coordinates host-side; traced x always
     classifies "irregular".  Unknown covariance kinds raise a clear
     ``ValueError`` naming the registered kinds (previously they fell
     through to the Pallas constructor's bare KeyError).
     """
-    if kind not in kernel_matvec.TILE_FNS:
-        raise ValueError(
-            f"no covariance tile registered for kind {kind!r}; the "
-            f"matrix-free operators support {sorted(kernel_matvec.TILE_FNS)}")
+    if "*" in kind:
+        kinds = kops.split_kind(kind)        # ValueError on unknown factors
+    else:
+        if kind not in kernel_matvec.TILE_FNS:
+            raise ValueError(
+                f"no covariance tile registered for kind {kind!r}; the "
+                f"matrix-free operators support "
+                f"{sorted(kernel_matvec.TILE_FNS)}")
+        kinds = (kind,)
     if fused not in ski_fused.FUSED_CHOICES:
         raise ValueError(f"unknown fused mode {fused!r}; choose from "
                          f"{ski_fused.FUSED_CHOICES}")
     if operator is not None:
-        kwargs = {"fused": fused} if operator == SKIOperator.name else {}
+        kwargs = ({"fused": fused}
+                  if operator in (SKIOperator.name, ProductSKIOperator.name)
+                  else {})
         return make_operator(operator, kind, x, sigma_n, jitter, **kwargs)
+    if len(kinds) > 1:
+        info = classify_grid_nd(x, rtol=rtol)   # tracers -> "irregular"
+        if info.kind == "kron":
+            return KroneckerOperator(kind, x, sigma_n, jitter,
+                                     grids=info.grids)
+        if info.kind == "product":
+            return ProductSKIOperator(
+                kind, x, sigma_n, jitter,
+                spacings=tuple(a.h for a in info.axes), fused=fused)
+        return PallasTileOperator(kind, x, sigma_n, jitter)
+    xc = _concrete(x)
+    if xc is not None and np.asarray(xc).ndim >= 2 \
+            and np.asarray(xc).shape[-1] >= 2:
+        raise ValueError(
+            f"plain kind {kind!r} cannot cover (n, d>=2) coordinates of "
+            f"shape {np.asarray(xc).shape}; join one factor per axis with "
+            "'*' (e.g. 'se*matern32') for separable multi-axis products, "
+            "or flatten to a 1-D (n,) series")
     info = classify_grid(x, rtol=rtol)
     if info.kind == "exact":
         return ToeplitzOperator(kind, x, sigma_n, jitter, rtol=rtol)

@@ -39,11 +39,60 @@ _FLAT_TO_NATURAL = {
 }
 
 
+# Flat-parameter count per family (theta block width for composite kinds).
+FLAT_NPARAMS = {"k1": 3, "k2": 5, "se": 1, "matern12": 1, "matern32": 1,
+                "matern52": 1}
+
+
+def split_kind(kind: str):
+    """"se*matern32" -> ("se", "matern32"); plain kinds -> 1-tuple.
+
+    Composite names denote separable product kernels over (n, d) inputs,
+    one registered factor per coordinate axis (DESIGN.md §13).  Raises
+    ValueError naming the supported factors for unknown pieces.
+    """
+    parts = tuple(kind.split("*"))
+    bad = [p for p in parts if p not in _FLAT_TO_NATURAL]
+    if bad:
+        raise ValueError(
+            f"unknown kernel factor(s) {bad} in kind '{kind}'; Pallas "
+            f"families: {sorted(_FLAT_TO_NATURAL)}")
+    return parts
+
+
+def theta_blocks(kind: str, theta):
+    """Split a composite kind's flat theta into per-axis blocks."""
+    kinds = split_kind(kind)
+    theta = jnp.asarray(theta)
+    out, o = [], 0
+    for k in kinds:
+        nk = FLAT_NPARAMS[k]
+        out.append(theta[o:o + nk])
+        o += nk
+    return out
+
+
 def natural_params(kind: str, theta):
     """Flat hyperparameters -> padded natural-scale kernel parameters."""
     vals = jnp.stack(_FLAT_TO_NATURAL[kind](jnp.asarray(theta)))
     out = jnp.ones((N_PARAM_SLOTS,), vals.dtype)
     return out.at[: vals.shape[0]].set(vals)
+
+
+def natural_params_nd(kind: str, theta):
+    """Composite kind -> (d, N_PARAM_SLOTS) per-axis natural parameters."""
+    kinds = split_kind(kind)
+    blocks = theta_blocks(kind, theta)
+    return jnp.stack([natural_params(k, tb) for k, tb in zip(kinds, blocks)])
+
+
+def natural_tangents_nd(kind: str, theta):
+    """(m, d, N_PARAM_SLOTS) natural tangents of the m flat directions for a
+    composite kind — direction i only perturbs the axis owning theta[i], so
+    each row is zero outside that axis's parameter slab."""
+    theta = jnp.asarray(theta)
+    jac = jax.jacfwd(lambda th: natural_params_nd(kind, th))(theta)
+    return jnp.moveaxis(jac, -1, 0)  # (m, d, N_PARAM_SLOTS)
 
 
 def natural_tangents(kind: str, theta):
@@ -110,17 +159,70 @@ def _matvec_core_jvp(kind, tile_r, tile_c, primals, tangents):
     return out, tan
 
 
+@functools.partial(jax.custom_jvp, nondiff_argnums=(0, 5, 6))
+def _matvec_core_nd(kinds, p_nat, x1p, x2tp, vp, tile_r, tile_c):
+    """Product-kernel padded-core matvec; differentiable in (p_nat, vp).
+
+    The parameter tangent reuses the stacked product tangent kernel with a
+    single direction (the (x)-rule is applied inside the tile linearisation,
+    see kernel_matvec._matvec_stacked_tangent_kernel_nd); the v tangent is
+    the primal kernel by linearity.
+    """
+    return kernel_matvec.matvec_pallas_nd(kinds, p_nat, x1p, x2tp, vp,
+                                          tile_r=tile_r, tile_c=tile_c,
+                                          interpret=_use_interpret())
+
+
+@_matvec_core_nd.defjvp
+def _matvec_core_nd_jvp(kinds, tile_r, tile_c, primals, tangents):
+    p_nat, x1p, x2tp, vp = primals
+    dp, _, _, dv = tangents
+    interp = _use_interpret()
+    out = kernel_matvec.matvec_pallas_nd(kinds, p_nat, x1p, x2tp, vp,
+                                         tile_r=tile_r, tile_c=tile_c,
+                                         interpret=interp)
+    tan = kernel_matvec.matvec_stacked_tangent_pallas_nd(
+        kinds, p_nat, _instantiate(dp, p_nat)[None], x1p, x2tp, vp,
+        tile_r=tile_r, tile_c=tile_c, interpret=interp)[0]
+    tan = tan + kernel_matvec.matvec_pallas_nd(
+        kinds, p_nat, x1p, x2tp, _instantiate(dv, vp), tile_r=tile_r,
+        tile_c=tile_c, interpret=interp)
+    return out, tan
+
+
+def _check_nd_coords(kind, kinds, x1, x2):
+    d = len(kinds)
+    for name, x in (("x1", x1), ("x2", x2)):
+        if x.ndim != 2 or x.shape[1] != d:
+            raise ValueError(
+                f"composite kind '{kind}' needs (n, {d}) {name} coordinates "
+                f"(one column per '*'-joined factor), got shape {x.shape}")
+
+
 @functools.partial(jax.jit, static_argnums=(0, 5, 6))
 def matvec(kind: str, theta, x1, x2, v, tile_r: int = kernel_matvec.TILE_R,
            tile_c: int = kernel_matvec.TILE_C):
     """K(x1, x2) @ v, matrix-free (no noise diagonal).
 
     v may be (n2,) or (n2, b). Forward-mode differentiable in (theta, v).
+    Composite kinds ("a*b") take (n, d) coordinates, one column per factor.
     """
     squeeze = v.ndim == 1
     if squeeze:
         v = v[:, None]
     n1 = x1.shape[0]
+    kinds = split_kind(kind)
+    if len(kinds) > 1:
+        x1 = jnp.asarray(x1)
+        x2 = jnp.asarray(x2)
+        _check_nd_coords(kind, kinds, x1, x2)
+        p = natural_params_nd(kind, theta).astype(v.dtype)
+        x1p = _pad_to(x1.astype(v.dtype), tile_r, _SENTINEL)
+        x2tp = _pad_to(x2.astype(v.dtype), tile_c, 2.0 * _SENTINEL).T
+        vp = _pad_to(v, tile_c, 0.0)
+        out = _matvec_core_nd(kinds, p, x1p, x2tp, vp, tile_r, tile_c)
+        out = out[:n1]
+        return out[:, 0] if squeeze else out
     p = natural_params(kind, theta).astype(v.dtype)
     x1p = _pad_to(jnp.asarray(x1, v.dtype), tile_r, _SENTINEL)
     x2p = _pad_to(jnp.asarray(x2, v.dtype), tile_c, 2.0 * _SENTINEL)
@@ -156,6 +258,21 @@ def matvec_tangents(kind: str, theta, x1, x2, v,
     if squeeze:
         v = v[:, None]
     n1 = x1.shape[0]
+    kinds = split_kind(kind)
+    if len(kinds) > 1:
+        x1 = jnp.asarray(x1)
+        x2 = jnp.asarray(x2)
+        _check_nd_coords(kind, kinds, x1, x2)
+        p = natural_params_nd(kind, theta).astype(v.dtype)
+        pdots = natural_tangents_nd(kind, theta).astype(v.dtype)
+        x1p = _pad_to(x1.astype(v.dtype), tile_r, _SENTINEL)
+        x2tp = _pad_to(x2.astype(v.dtype), tile_c, 2.0 * _SENTINEL).T
+        vp = _pad_to(v, tile_c, 0.0)
+        out = kernel_matvec.matvec_stacked_tangent_pallas_nd(
+            kinds, p, pdots, x1p, x2tp, vp, tile_r=tile_r, tile_c=tile_c,
+            interpret=_use_interpret())
+        out = out[:, :n1]
+        return out[:, :, 0] if squeeze else out
     p = natural_params(kind, theta).astype(v.dtype)
     pdots = natural_tangents(kind, theta).astype(v.dtype)
     x1p = _pad_to(jnp.asarray(x1, v.dtype), tile_r, _SENTINEL)
@@ -170,7 +287,21 @@ def matvec_tangents(kind: str, theta, x1, x2, v,
 
 @functools.partial(jax.jit, static_argnums=(0, 4))
 def matrix(kind: str, theta, x1, x2, tile: int = kernel_tile.TILE):
-    """Dense K(x1, x2) assembled tile-by-tile (no noise diagonal)."""
+    """Dense K(x1, x2) assembled tile-by-tile (no noise diagonal).
+
+    Composite kinds build the product densely per factor (used only for
+    chunked cross-covariance blocks in predict, never (n, n))."""
+    kinds = split_kind(kind)
+    if len(kinds) > 1:
+        x1 = jnp.asarray(x1)
+        x2 = jnp.asarray(x2)
+        _check_nd_coords(kind, kinds, x1, x2)
+        blocks = theta_blocks(kind, theta)
+        out = None
+        for a, (k, tb) in enumerate(zip(kinds, blocks)):
+            ka = matrix(k, tb, x1[:, a], x2[:, a], tile)
+            out = ka if out is None else out * ka
+        return out
     n1, n2 = x1.shape[0], x2.shape[0]
     dtype = jnp.result_type(x1, x2)
     p = natural_params(kind, theta).astype(dtype)

@@ -63,6 +63,8 @@ __all__ = [
     "FUSED_CHOICES", "FUSED_AUTO_MIN_N", "FusedSKIGeometry",
     "build_fused_geometry", "resolve_fused", "spectrum_perm",
     "fused_gram_matvec", "fused_tangent_matvecs", "fused_bank_matvec",
+    "FusedSKIGeometryND", "build_fused_geometry_nd", "spectrum_perm_nd",
+    "tangent_spectra_nd", "fused_gram_matvec_nd", "fused_tangent_matvecs_nd",
 ]
 
 # Accepted SolverOpts(fused=...) values (validated in gp.spec too).
@@ -341,11 +343,14 @@ def spectrum_perm(first_column, geom: FusedSKIGeometry):
     frequency multiply is position-wise.  Runs OUTSIDE the kernel, once
     per (θ, solve) — O(m log m), hoisted out of every solver loop.
     """
+    return _spectrum_perm_core(first_column, geom.m_grid, geom.L, geom.perm)
+
+
+def _spectrum_perm_core(first_column, m: int, L: int, perm):
     t = jnp.asarray(first_column)
-    m, L = geom.m_grid, geom.L
     c = jnp.zeros(L, t.dtype).at[:m].set(t).at[L - m + 1:].set(t[1:][::-1])
     lam = jnp.fft.fft(c).real.astype(t.dtype)
-    return lam[jnp.asarray(geom.perm)] / L      # fold the ifft 1/L here
+    return lam[jnp.asarray(perm)] / L           # fold the ifft 1/L here
 
 
 # ---------------------------------------------------------------------------
@@ -584,3 +589,266 @@ def fused_bank_matvec(geom: FusedSKIGeometry, lams_perm, noise2: float, V):
         interpret=_use_interpret(),
     )(*ins)
     return out[:, :, :c0]
+
+
+# ---------------------------------------------------------------------------
+# 2-D product SKI: the fused sandwich with per-axis FFT stages (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+#
+# The product-SKI training matvec (W K_kron Wᵀ + σ² I) v runs the SAME
+# banded-W trick in the FLAT (row-major) cell space — a product grid's
+# outer-product stencil is again a band, now with joint offsets
+# d₁·m₂ + d₂ — and replaces the single circulant convolution with the
+# Kronecker cycle: axis-0 DIF → VMEM-resident transpose (a reshape /
+# swapaxes pair on the (L₁, m₂, bc) block — no HBM round-trip) → axis-1
+# DIF → pointwise multiply by the OUTER PRODUCT of the two pre-permuted
+# axis spectra → inverse stages mirrored.  Everything between the two row
+# gathers is one Pallas launch; the largest live intermediate is
+# (L₂, L₁·bc) ≈ 4·m_grid·bc — still O(n), never (n, n) or (m_a², ·).
+#
+# Flat-shift exactness: the uniform-offset check below guarantees every
+# occupied cell's full stencil stays inside the per-axis ranges, so a
+# flat shift by d₁·m₂ + d₂ never wraps an OCCUPIED contribution across an
+# axis-1 row boundary (unoccupied cells carry zero weight rows).
+
+
+class FusedSKIGeometryND(NamedTuple):
+    """Trace-time constants of the fused 2-D product-SKI sandwich.
+
+    occ/wcell/cell are the banded-W constants of the 1-D geometry, now in
+    the flat row-major cell space with joint outer-product stencils
+    (s₁·s₂ taps); Ls/perms/metas/coss/sins hold ONE FFT plan per axis.
+    """
+
+    n: int
+    shape: tuple
+    m_grid: int
+    occ: np.ndarray
+    wcell: np.ndarray
+    cell: np.ndarray
+    offs: tuple
+    Ls: tuple
+    perms: tuple
+    metas: tuple
+    coss: tuple
+    sins: tuple
+
+
+def _axis_band(idx_a: np.ndarray):
+    """(cell_a, offs_a) of one axis's stencil rows, or None if the rows
+    are not a uniform band (boundary-clamped stencils etc.)."""
+    s = idx_a.shape[1]
+    center = 1 if s == 4 else 0
+    cell = idx_a[:, center].astype(np.int64)
+    offs = idx_a[0] - cell[0]
+    if not np.all(idx_a == cell[:, None] + offs[None, :]):
+        return None
+    return cell, offs
+
+
+def build_fused_geometry_nd(axis_idx, axis_w,
+                            shape) -> Optional[FusedSKIGeometryND]:
+    """Fused constants from per-axis CSR stencils — or None when any axis
+    is not uniformly banded, points share flat cells, or d != 2."""
+    if len(shape) != 2:
+        return None
+    bands = [_axis_band(np.asarray(ia)) for ia in axis_idx]
+    if any(b is None for b in bands):
+        return None
+    m1, m2 = int(shape[0]), int(shape[1])
+    m_grid = m1 * m2
+    (c1, o1), (c2, o2) = bands
+    n = c1.shape[0]
+    cell = c1 * m2 + c2
+    if np.unique(cell).shape[0] != n:
+        return None                        # duplicate flat cells
+    offs = tuple(int(d1) * m2 + int(d2) for d1 in o1 for d2 in o2)
+    w1 = np.asarray(axis_w[0], np.float64)
+    w2 = np.asarray(axis_w[1], np.float64)
+    wjoint = (w1[:, :, None] * w2[:, None, :]).reshape(n, -1)
+    occ = np.full(m_grid, n, np.int32)
+    occ[cell] = np.arange(n, dtype=np.int32)
+    wcell = np.zeros((m_grid, wjoint.shape[1]), np.float64)
+    wcell[cell] = wjoint
+    Ls, perms, metas, coss, sins = [], [], [], [], []
+    for m in (m1, m2):
+        L = _embed_length(m)
+        radices = _factor_stages(L)
+        cos, sin, meta = _twiddle_tables(L, radices)
+        Ls.append(L)
+        perms.append(_perm_build(L, radices))
+        metas.append(meta)
+        coss.append(tuple(cos))
+        sins.append(tuple(sin))
+    return FusedSKIGeometryND(
+        n=n, shape=(m1, m2), m_grid=m_grid, occ=occ, wcell=wcell,
+        cell=cell.astype(np.int32), offs=offs, Ls=tuple(Ls),
+        perms=tuple(perms), metas=tuple(metas), coss=tuple(coss),
+        sins=tuple(sins))
+
+
+def spectrum_perm_nd(first_columns, geom: FusedSKIGeometryND):
+    """Per-axis permuted 1/L-normalised spectra (λ₁_perm, λ₂_perm): the
+    kernel multiplies by their outer product, which carries the combined
+    1/(L₁L₂) of the two unnormalised inverse stages."""
+    return tuple(
+        _spectrum_perm_core(t, geom.shape[a], geom.Ls[a], geom.perms[a])
+        for a, t in enumerate(first_columns))
+
+
+def tangent_spectra_nd(kron, theta, geom: FusedSKIGeometryND, dtype):
+    """Stacked per-direction spectrum PAIRS for the fused tangents.
+
+    Direction i in axis a's parameter block multiplies by
+    (dλ_a^i) ⊗ (λ_other base) — each axis's tangent spectra reuse the
+    other axis's base spectrum, the operator-level product rule.  Returns
+    ((m, L₁), (m, L₂)) stacked pairs, m = total flat directions.
+    """
+    ts = kron.first_columns(theta, dtype)
+    bases = spectrum_perm_nd(ts, geom)
+    pairs = []
+    for a in range(2):
+        ax = kron.axes_ops[a]
+        rows = jax.jacfwd(
+            lambda th, ax=ax: ax.first_column(th, dtype)
+        )(theta[kron._slices[a]])                       # (m_a, p_a)
+        for j in range(rows.shape[1]):
+            lam_t = _spectrum_perm_core(rows[:, j], geom.shape[a],
+                                        geom.Ls[a], geom.perms[a])
+            pair = [bases[0], bases[1]]
+            pair[a] = lam_t
+            pairs.append(pair)
+    return (jnp.stack([p[0] for p in pairs]),
+            jnp.stack([p[1] for p in pairs]))
+
+
+def _fwd2(re, im, geom, tabs1, tabs2):
+    """Both forward DIF stages + the in-register transpose:
+    (m_grid, bc) packed pair → (L₂, L₁·bc) doubly digit-reversed."""
+    (m1, m2), (L1, L2) = geom.shape, geom.Ls
+    bc = re.shape[1]
+    r = jnp.zeros((L1, m2 * bc), re.dtype).at[:m1].set(
+        re.reshape(m1, m2 * bc))
+    i = jnp.zeros((L1, m2 * bc), im.dtype).at[:m1].set(
+        im.reshape(m1, m2 * bc))
+    r, i = _dif_fft(r, i, geom.metas[0], *tabs1, first_nonzero=m1)
+    r = r.reshape(L1, m2, bc).swapaxes(0, 1).reshape(m2, L1 * bc)
+    i = i.reshape(L1, m2, bc).swapaxes(0, 1).reshape(m2, L1 * bc)
+    r2 = jnp.zeros((L2, L1 * bc), re.dtype).at[:m2].set(r)
+    i2 = jnp.zeros((L2, L1 * bc), im.dtype).at[:m2].set(i)
+    return _dif_fft(r2, i2, geom.metas[1], *tabs2, first_nonzero=m2)
+
+
+def _inv2(R, I, lam1, lam2, geom, tabs1, tabs2, bc):
+    """Spectrum multiply (outer product of permuted axis spectra) + both
+    inverse DIT stages: (L₂, L₁·bc) → (m_grid, bc) packed pair."""
+    (m1, m2), (L1, L2) = geom.shape, geom.Ls
+    lam = lam2[:, None, None] * lam1[None, :, None]     # (L2, L1, 1)
+    R = (R.reshape(L2, L1, bc) * lam).reshape(L2, -1)
+    I = (I.reshape(L2, L1, bc) * lam).reshape(L2, -1)
+    R, I = _dit_ifft(R, I, geom.metas[1], *tabs2, m_keep=m2)
+    R = R[:m2].reshape(m2, L1, bc).swapaxes(0, 1).reshape(L1, m2 * bc)
+    I = I[:m2].reshape(m2, L1, bc).swapaxes(0, 1).reshape(L1, m2 * bc)
+    R, I = _dit_ifft(R, I, geom.metas[0], *tabs1, m_keep=m1)
+    return (R[:m1].reshape(m1 * m2, bc), I[:m1].reshape(m1 * m2, bc))
+
+
+def _const_inputs_nd(geom: FusedSKIGeometryND, dtype):
+    ins = [jnp.asarray(geom.occ), jnp.asarray(geom.wcell, dtype),
+           jnp.asarray(geom.cell)]
+    for a in range(2):
+        for c in geom.coss[a]:
+            ins.append(jnp.asarray(c, dtype))
+        for s in geom.sins[a]:
+            ins.append(jnp.asarray(s, dtype))
+    return ins
+
+
+def _split_tabs_nd(refs, geom):
+    """Per-axis (cos, sin) table lists from the flat kernel ref tail."""
+    tabs, k = [], 0
+    for a in range(2):
+        n_st = len(geom.metas[a])
+        cos = [refs[k + i][...] for i in range(n_st)]
+        sin = [refs[k + n_st + i][...] for i in range(n_st)]
+        tabs.append((cos, sin))
+        k += 2 * n_st
+    return tabs, k
+
+
+def fused_gram_matvec_nd(geom: FusedSKIGeometryND, lams, noise2: float, v):
+    """(W K_kron Wᵀ + noise2 I) v in ONE fused launch (2-D product SKI).
+
+    lams: (λ₁_perm, λ₂_perm) from :func:`spectrum_perm_nd`; v: (n, b).
+    """
+    lam1, lam2 = lams
+    v, b = _pad_cols(v)
+    n, bp = v.shape
+
+    def kernel(*refs):
+        v_ref, l1_ref, l2_ref, occ_ref, wcell_ref, cell_ref = refs[:6]
+        tabs, used = _split_tabs_nd(refs[6:], geom)
+        o_ref = refs[6 + used]
+        vv = v_ref[...]
+        wcell = wcell_ref[...]
+        u = _wt_apply(vv, occ_ref[...], wcell, geom.offs, geom.m_grid)
+        R, I = _fwd2(u[:, 0::2], u[:, 1::2], geom, tabs[0], tabs[1])
+        Ro, Io = _inv2(R, I, l1_ref[...], l2_ref[...], geom, tabs[0],
+                       tabs[1], bp // 2)
+        ku = jnp.stack([Ro, Io], axis=-1).reshape(geom.m_grid, -1)
+        o_ref[...] = _w_apply(ku, wcell, cell_ref[...], geom.offs,
+                              noise2, vv)
+
+    ins = [v, lam1.astype(v.dtype), lam2.astype(v.dtype)] \
+        + _const_inputs_nd(geom, v.dtype)
+    out = pl.pallas_call(
+        kernel, grid=(1,),
+        in_specs=_full_specs(ins),
+        out_specs=pl.BlockSpec((n, bp), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, bp), v.dtype),
+        interpret=_use_interpret(),
+    )(*ins)
+    return out[:, :b]
+
+
+def fused_tangent_matvecs_nd(geom: FusedSKIGeometryND, lam_pairs,
+                             noise2: float, v):
+    """All m stacked tangents W (dK_kron/dθ_i) Wᵀ V in ONE fused launch.
+
+    The banded Wᵀ and BOTH forward FFT stages are direction-independent
+    and shared; each direction pays one outer-product multiply + the two
+    inverse stages + the banded gather.  lam_pairs: the ((m, L₁), (m, L₂))
+    stacks from :func:`tangent_spectra_nd`.  Returns (m, n, b).
+    """
+    del noise2
+    lams1, lams2 = lam_pairs
+    v, b = _pad_cols(v)
+    n, bp = v.shape
+    m_dirs = lams1.shape[0]
+
+    def kernel(*refs):
+        v_ref, l1_ref, l2_ref, occ_ref, wcell_ref, cell_ref = refs[:6]
+        tabs, used = _split_tabs_nd(refs[6:], geom)
+        o_ref = refs[6 + used]
+        vv = v_ref[...]
+        wcell = wcell_ref[...]
+        cell = cell_ref[...]
+        u = _wt_apply(vv, occ_ref[...], wcell, geom.offs, geom.m_grid)
+        R0, I0 = _fwd2(u[:, 0::2], u[:, 1::2], geom, tabs[0], tabs[1])
+        zero = jnp.zeros_like(vv)
+        for i in range(m_dirs):
+            Ro, Io = _inv2(R0, I0, l1_ref[i], l2_ref[i], geom, tabs[0],
+                           tabs[1], bp // 2)
+            ku = jnp.stack([Ro, Io], axis=-1).reshape(geom.m_grid, -1)
+            o_ref[i] = _w_apply(ku, wcell, cell, geom.offs, 0.0, zero)
+
+    ins = [v, lams1.astype(v.dtype), lams2.astype(v.dtype)] \
+        + _const_inputs_nd(geom, v.dtype)
+    out = pl.pallas_call(
+        kernel, grid=(1,),
+        in_specs=_full_specs(ins),
+        out_specs=pl.BlockSpec((m_dirs, n, bp), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_dirs, n, bp), v.dtype),
+        interpret=_use_interpret(),
+    )(*ins)
+    return out[:, :, :b]

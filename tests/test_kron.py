@@ -1,0 +1,407 @@
+"""N-D Kronecker-grid operators + product SKI (DESIGN.md §13).
+
+Covers: ``classify_grid_nd`` product-structure detection (canonical kron
+enumeration, gappy/permuted product data, per-axis near/irregular edge
+cases, trace-safety, the pinned (n, d>=2) layout errors), Kronecker
+matvec/tangent exactness against the dense separable covariance for every
+registered factor kind, ProductSKI exactness on gappy 2-D records, fused
+2-D sandwich parity, the O(n log n) memory contract (jaxpr walk: no
+(n, n) or grid-squared buffer at n = 4096), engine dispatch through
+``GP.bind`` with no API change, and posterior parity against the dense
+backend on a small gappy 2-D set.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import gp
+from repro.core import covariances as C
+from repro.core import engine as E
+from repro.core import iterative as I
+from repro.data.grid import classify_grid_nd
+from repro.kernels import kernel_matvec as km
+from repro.kernels import operators as OPS
+from repro.kernels import ops as kops
+
+from test_engine import _all_avals
+
+SIGMA, JITTER = 0.1, 1e-10
+
+# one natural-parameter block per registered factor (modest timescales so
+# the per-axis Toeplitz columns are well away from both 0 and 1)
+_FACTOR_THETA = {
+    "se": [2.0],
+    "matern12": [1.5],
+    "matern32": [2.0],
+    "matern52": [2.5],
+    "k1": [5.0, 2.5, 0.05],
+    "k2": [3.2, 1.5, 0.05, 2.8, -0.1],
+}
+
+
+def _theta_for(kind):
+    return jnp.asarray([v for f in kops.split_kind(kind)
+                        for v in _FACTOR_THETA[f]])
+
+
+def _product_x(shape=(12, 10), hs=(0.5, 0.3), origins=None):
+    origins = origins or (0.0,) * len(shape)
+    axes = [o + h * np.arange(m, dtype=np.float64)
+            for m, h, o in zip(shape, hs, origins)]
+    return np.stack(np.meshgrid(*axes, indexing="ij"), -1).reshape(
+        -1, len(shape))
+
+
+def _gappy_x(shape=(12, 10), drop=0.15, seed=0, jitter_frac=0.0):
+    X = _product_x(shape)
+    rng = np.random.default_rng(seed)
+    keep = rng.uniform(size=X.shape[0]) > drop
+    X = X[keep]
+    if jitter_frac:
+        X = X + jitter_frac * np.array([0.5, 0.3]) * rng.uniform(
+            -1, 1, size=X.shape)
+    return X
+
+
+# ---------------------------------------------------------------------------
+# classify_grid_nd: product-structure detection
+# ---------------------------------------------------------------------------
+
+def test_classify_kron_canonical_row_major():
+    X = _product_x((12, 10))
+    info = classify_grid_nd(X)
+    assert info.kind == "kron"
+    assert info.shape == (12, 10)
+    assert len(info.grids) == 2
+    np.testing.assert_allclose(np.asarray(info.grids[0]),
+                               0.5 * np.arange(12), atol=1e-12)
+    assert all(a.kind == "exact" for a in info.axes)
+    # 3-D products classify too
+    info3 = classify_grid_nd(_product_x((5, 4, 3), hs=(1.0, 0.7, 0.3),
+                                        origins=(0.0, 1.0, -2.0)))
+    assert info3.kind == "kron" and info3.shape == (5, 4, 3)
+
+
+def test_classify_product_gappy_and_permuted():
+    # gappy: full product grid with rows dropped -> "product", axes exact
+    Xg = _gappy_x((12, 10), drop=0.2, seed=1)
+    info = classify_grid_nd(Xg)
+    assert info.kind == "product"
+    assert all(a.kind == "exact" for a in info.axes)
+    # permuted: ALL cells present but rows shuffled out of canonical
+    # row-major order -> NOT kron (the reshape cycle would silently
+    # permute), rides the product/SKI route instead
+    X = _product_x((12, 10))
+    rng = np.random.default_rng(2)
+    info_p = classify_grid_nd(X[rng.permutation(X.shape[0])])
+    assert info_p.kind == "product"
+
+
+def test_classify_one_axis_near_or_irregular():
+    # a jittered sampling CADENCE on one axis (each axis value slightly
+    # off its cell, footnote-7 style) -> that axis classifies "near" and
+    # the product structure survives
+    rng = np.random.default_rng(3)
+    t1 = 0.5 * np.arange(12)
+    t2 = 0.3 * (np.arange(10) + 1e-3 * rng.uniform(-1, 1, size=10))
+    Xj = np.stack(np.meshgrid(t1, t2, indexing="ij"), -1).reshape(-1, 2)
+    Xj = Xj[rng.uniform(size=Xj.shape[0]) > 0.15]        # gappy too
+    info = classify_grid_nd(Xj)
+    assert info.kind == "product"
+    assert info.axes[0].kind == "exact"
+    assert info.axes[1].kind == "near"
+    # PER-POINT jitter (every record's coordinate its own value) destroys
+    # the per-axis unique recovery -> irregular, never a silent bad fit
+    Xp = _gappy_x((12, 10), drop=0.15, seed=3, jitter_frac=1e-3)
+    assert classify_grid_nd(Xp).kind == "irregular"
+    # one genuinely scattered axis -> irregular (no product structure)
+    rng = np.random.default_rng(4)
+    t1 = np.sort(rng.uniform(0, 10, 12))
+    t2 = 0.3 * np.arange(10)
+    Xi = np.stack(np.meshgrid(t1, t2, indexing="ij"), -1).reshape(-1, 2)
+    assert classify_grid_nd(Xi).kind == "irregular"
+
+
+def test_classify_duplicate_cells_are_irregular():
+    X = _product_x((8, 6))
+    Xd = np.concatenate([X, X[:3]], axis=0)      # repeated grid cells
+    assert classify_grid_nd(Xd).kind == "irregular"
+
+
+def test_classify_nd_is_trace_safe():
+    X = jnp.asarray(_product_x((8, 6)))
+
+    def f(xt):
+        info = classify_grid_nd(xt)     # tracer: must NOT raise or probe
+        assert info.kind == "irregular"
+        return xt.sum()
+
+    jax.make_jaxpr(f)(X)                # tracing succeeds
+
+
+def test_classify_nd_layout_errors_are_pinned():
+    # a flattened 1-D series is NOT multi-axis data: both the (n,) and the
+    # (n, 1) spellings raise, naming the supported layouts
+    with pytest.raises(ValueError, match=r"supported input layouts"):
+        classify_grid_nd(np.arange(24.0))
+    with pytest.raises(ValueError, match=r"\(n, d>=2\)"):
+        classify_grid_nd(np.arange(24.0)[:, None])
+
+
+# ---------------------------------------------------------------------------
+# select_operator dispatch + pinned multi-axis errors
+# ---------------------------------------------------------------------------
+
+def test_select_operator_dispatches_by_product_structure():
+    Xk = jnp.asarray(_product_x((12, 10)))
+    assert OPS.select_operator("se*matern32", Xk, SIGMA,
+                               JITTER).name == "kron"
+    Xg = jnp.asarray(_gappy_x((12, 10), drop=0.2, seed=1))
+    assert OPS.select_operator("se*matern32", Xg, SIGMA,
+                               JITTER).name == "product_ski"
+    rng = np.random.default_rng(5)
+    Xi = jnp.asarray(rng.uniform(0, 10, size=(60, 2)))
+    assert OPS.select_operator("se*matern32", Xi, SIGMA,
+                               JITTER).name == "pallas"
+    # traced coordinates take the trace-safe Pallas route
+    jax.make_jaxpr(lambda x: OPS.select_operator(
+        "se*se", x, SIGMA, JITTER).gram_matvec(
+            jnp.asarray([2.0, 2.0]), jnp.zeros(x.shape[0])))(Xk)
+
+
+def test_select_operator_multi_axis_errors_are_pinned():
+    Xk = jnp.asarray(_product_x((12, 10)))
+    # plain kind on (n, d>=2) coordinates: actionable error, not a bad fit
+    with pytest.raises(ValueError, match=r"plain kind 'se' cannot cover"):
+        OPS.select_operator("se", Xk, SIGMA, JITTER)
+    with pytest.raises(ValueError, match=r"join one factor per axis"):
+        OPS.select_operator("matern32", Xk, SIGMA, JITTER)
+    # composite kind on a 1-D series: classify_grid_nd's layout error
+    with pytest.raises(ValueError, match=r"\(n, d>=2\)"):
+        OPS.select_operator("se*se", jnp.arange(24.0), SIGMA, JITTER)
+    # unknown factor inside a composite name
+    with pytest.raises(ValueError, match="unknown kernel factor"):
+        OPS.select_operator("se*nope", Xk, SIGMA, JITTER)
+    # Kronecker demands the canonical full-grid enumeration
+    Xg = jnp.asarray(_gappy_x((12, 10), drop=0.2, seed=1))
+    with pytest.raises(ValueError, match="ProductSKIOperator"):
+        OPS.KroneckerOperator("se*se", Xg)
+    # factor count must match the number of grid axes
+    with pytest.raises(ValueError, match="axis factors"):
+        OPS.KroneckerOperator("se*se", grids=(jnp.arange(4.0),
+                                              jnp.arange(5.0),
+                                              jnp.arange(6.0)))
+
+
+# ---------------------------------------------------------------------------
+# Kronecker exactness: every registered separable kind vs dense
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", [f"{f}*se" for f in sorted(km.TILE_FNS)]
+                         + ["se*matern32"])
+def test_kron_gram_matvec_matches_dense(kind):
+    X = jnp.asarray(_product_x((9, 7), hs=(0.7, 0.4)))
+    theta = _theta_for(kind)
+    op = OPS.select_operator(kind, X, SIGMA, JITTER)
+    assert op.name == "kron"
+    K = C.build_K(C.resolve(kind), theta, X, SIGMA, JITTER)
+    assert np.all(np.isfinite(np.asarray(K)))    # guard: NaN==NaN passes
+    rng = np.random.default_rng(0)
+    V = jnp.asarray(rng.standard_normal((63, 3)))
+    np.testing.assert_allclose(np.asarray(op.gram_matvec(theta, V)),
+                               np.asarray(K @ V), rtol=0, atol=1e-10)
+    mv = op.bound_gram_matvec(theta, jnp.float64)
+    np.testing.assert_allclose(np.asarray(mv(V)), np.asarray(K @ V),
+                               rtol=0, atol=1e-10)
+    # diag + matcol follow the operator contract: NOISE-FREE kernel values
+    K0 = C.build_K(C.resolve(kind), theta, X, 0.0, 0.0)
+    np.testing.assert_allclose(np.asarray(op.diag(theta)),
+                               np.asarray(jnp.diagonal(K0)), atol=1e-10)
+    np.testing.assert_allclose(np.asarray(op.matcol(theta, 17)),
+                               np.asarray(K0[:, 17]), atol=1e-10)
+
+
+def test_kron_tangent_matvecs_match_dense_jacfwd():
+    kind = "k1*matern32"
+    X = jnp.asarray(_product_x((8, 6), hs=(0.7, 0.4)))
+    theta = _theta_for(kind)
+    op = OPS.select_operator(kind, X, SIGMA, JITTER)
+    rng = np.random.default_rng(1)
+    V = jnp.asarray(rng.standard_normal((48, 2)))
+    cov = C.resolve(kind)
+    dK = jax.jacfwd(lambda th: C.build_K(cov, th, X, SIGMA, JITTER))(theta)
+    want = jnp.einsum("ijm,jb->mib", dK, V)
+    assert np.all(np.isfinite(np.asarray(want)))
+    got = op.tangent_matvecs(theta, V)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=1e-9)
+
+
+def test_kron_3d_matches_dense():
+    kind = "se*matern32*matern12"
+    X = jnp.asarray(_product_x((5, 4, 3), hs=(1.0, 0.7, 0.3)))
+    theta = _theta_for(kind)
+    op = OPS.select_operator(kind, X, SIGMA, JITTER)
+    assert op.name == "kron" and op.shape == (5, 4, 3)
+    K = C.build_K(C.resolve(kind), theta, X, SIGMA, JITTER)
+    v = jnp.asarray(np.random.default_rng(2).standard_normal(60))
+    np.testing.assert_allclose(np.asarray(op.gram_matvec(theta, v)),
+                               np.asarray(K @ v), rtol=0, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# ProductSKI on gappy 2-D records (selection W: exact)
+# ---------------------------------------------------------------------------
+
+def test_product_ski_gappy_matches_dense():
+    kind = "se*matern32"
+    X = jnp.asarray(_gappy_x((12, 10), drop=0.2, seed=1))
+    theta = _theta_for(kind)
+    op = OPS.select_operator(kind, X, SIGMA, JITTER)
+    assert op.name == "product_ski"
+    K = C.build_K(C.resolve(kind), theta, X, SIGMA, JITTER)
+    rng = np.random.default_rng(3)
+    V = jnp.asarray(rng.standard_normal((X.shape[0], 3)))
+    np.testing.assert_allclose(np.asarray(op.gram_matvec(theta, V)),
+                               np.asarray(K @ V), rtol=0, atol=1e-10)
+    cov = C.resolve(kind)
+    dK = jax.jacfwd(lambda th: C.build_K(cov, th, X, SIGMA, JITTER))(theta)
+    want = jnp.einsum("ijm,jb->mib", dK, V)
+    np.testing.assert_allclose(np.asarray(op.tangent_matvecs(theta, V)),
+                               np.asarray(want), rtol=0, atol=1e-9)
+    K0 = C.build_K(cov, theta, X, 0.0, 0.0)
+    np.testing.assert_allclose(np.asarray(op.diag(theta)),
+                               np.asarray(jnp.diagonal(K0)), atol=1e-10)
+    np.testing.assert_allclose(np.asarray(op.matcol(theta, 11)),
+                               np.asarray(K0[:, 11]), atol=1e-10)
+
+
+def test_product_ski_fused_matches_unfused():
+    kind = "se*se"
+    # dyadic spacings: every point's stencil centre rounds to its own
+    # cell, so the fused geometry's one-row-per-cell scatter applies
+    X = _product_x((16, 12), hs=(0.5, 0.25))
+    rng = np.random.default_rng(6)
+    X = jnp.asarray(X[rng.uniform(size=X.shape[0]) > 0.15])
+    theta = _theta_for(kind)
+    op_off = OPS.ProductSKIOperator(kind, X, SIGMA, JITTER, fused=False)
+    op_on = OPS.ProductSKIOperator(kind, X, SIGMA, JITTER, fused=True)
+    assert op_on.fused and not op_off.fused
+    rng = np.random.default_rng(7)
+    V = jnp.asarray(rng.standard_normal((X.shape[0], 3)))
+    np.testing.assert_allclose(np.asarray(op_on.gram_matvec(theta, V)),
+                               np.asarray(op_off.gram_matvec(theta, V)),
+                               rtol=0, atol=1e-11)
+    np.testing.assert_allclose(
+        np.asarray(op_on.tangent_matvecs(theta, V)),
+        np.asarray(op_off.tangent_matvecs(theta, V)), rtol=0, atol=1e-11)
+
+
+# ---------------------------------------------------------------------------
+# The memory contract: no (n, n) / grid-squared buffer at n = 4096
+# ---------------------------------------------------------------------------
+
+def _assert_subquadratic(jaxpr, n, m_grid):
+    """No intermediate holds an (n, n), (m, m) or otherwise ~n^2 buffer."""
+    avals = [a for a in _all_avals(jaxpr.jaxpr) if hasattr(a, "shape")]
+    big = [a for a in avals if int(np.prod(a.shape or (1,))) >= n * n // 4]
+    assert not big, sorted({tuple(a.shape) for a in big})
+    sq = [a for a in avals if a.shape
+          and (a.shape.count(n) >= 2 or a.shape.count(m_grid) >= 2)]
+    assert not sq, sorted({tuple(a.shape) for a in sq})
+
+
+def test_kron_matvec_has_no_quadratic_buffer_at_4096():
+    n = 4096
+    X = jnp.asarray(_product_x((64, 64), hs=(0.5, 0.3)))
+    theta = _theta_for("se*se")
+    op = OPS.select_operator("se*se", X, SIGMA, JITTER)
+    assert op.name == "kron" and op.n == n
+    v = jnp.zeros((n,))
+    jaxpr = jax.make_jaxpr(lambda vv: op.gram_matvec(theta, vv))(v)
+    _assert_subquadratic(jaxpr, n, op.n)
+    # the stacked tangent sweep stays sub-quadratic per direction too
+    V = jnp.zeros((n, 2))
+    jaxpr_t = jax.make_jaxpr(lambda vv: op.tangent_matvecs(theta, vv))(V)
+    avals = [a for a in _all_avals(jaxpr_t.jaxpr) if hasattr(a, "shape")]
+    big = [a for a in avals
+           if int(np.prod(a.shape or (1,))) >= n * n // 4]
+    assert not big, sorted({tuple(a.shape) for a in big})
+
+
+def test_product_ski_matvec_has_no_quadratic_buffer_at_4096():
+    Xg = jnp.asarray(_gappy_x((72, 64), drop=0.08, seed=8))
+    n = Xg.shape[0]
+    assert n >= 4096
+    theta = _theta_for("se*se")
+    op = OPS.select_operator("se*se", Xg, SIGMA, JITTER, fused=False)
+    assert op.name == "product_ski"
+    v = jnp.zeros((n,))
+    jaxpr = jax.make_jaxpr(lambda vv: op.gram_matvec(theta, vv))(v)
+    m_grid = int(np.prod(op.shape))
+    _assert_subquadratic(jaxpr, n, m_grid)
+
+
+# ---------------------------------------------------------------------------
+# Engine threading: GP.bind dispatch + posterior parity vs dense
+# ---------------------------------------------------------------------------
+
+def _bound_op(kind, X, y):
+    theta = _theta_for(kind)
+    s = E.make_solver("iterative", C.resolve(kind), theta, X, y, SIGMA,
+                      jitter=JITTER)
+    return s.op
+
+
+def test_engine_binds_multi_axis_operators():
+    Xk = jnp.asarray(_product_x((12, 10)))
+    yk = jnp.asarray(np.random.default_rng(9).standard_normal(120))
+    assert _bound_op("se*se", Xk, yk).name == "kron"
+    Xg = jnp.asarray(_gappy_x((12, 10), drop=0.2, seed=1))
+    yg = jnp.asarray(np.random.default_rng(9).standard_normal(
+        Xg.shape[0]))
+    assert _bound_op("se*se", Xg, yg).name == "product_ski"
+
+
+def test_posterior_parity_vs_dense_on_gappy_2d():
+    kind = "se*matern32"
+    X = jnp.asarray(_gappy_x((10, 8), drop=0.15, seed=10))
+    theta = _theta_for(kind)
+    rng = np.random.default_rng(11)
+    y = jnp.asarray(np.sin(X[:, 0]) * np.cos(2.0 * X[:, 1])
+                    + 0.1 * rng.standard_normal(X.shape[0]))
+    xstar = jnp.asarray(rng.uniform([0.2, 0.2], [4.0, 2.0], size=(9, 2)))
+
+    spec_it = gp.GPSpec(kernel=kind, noise=gp.NoiseModel(sigma_n=SIGMA),
+                        solver=gp.SolverPolicy(backend="iterative"))
+    spec_de = gp.GPSpec(kernel=kind, noise=gp.NoiseModel(sigma_n=SIGMA),
+                        solver=gp.SolverPolicy(backend="dense"))
+    post_it = gp.GP.bind(spec_it, X, y).predict(xstar, theta=theta,
+                                                cross="exact")
+    post_de = gp.GP.bind(spec_de, X, y).predict(xstar, theta=theta)
+    np.testing.assert_allclose(np.asarray(post_it.mean),
+                               np.asarray(post_de.mean), atol=1e-7)
+    np.testing.assert_allclose(np.asarray(post_it.var),
+                               np.asarray(post_de.var), rtol=1e-5)
+    np.testing.assert_allclose(float(post_it.sigma_f_hat),
+                               float(post_de.sigma_f_hat), rtol=1e-5)
+
+
+def test_kron_slq_precond_logdet_is_exact():
+    kind = "se*matern32"
+    X = jnp.asarray(_product_x((12, 10)))
+    theta = _theta_for(kind)
+    op = OPS.select_operator(kind, X, SIGMA, JITTER)
+    sp = op.slq_precond(theta)
+    lam = np.asarray(op._strang_lam(theta))
+    want = float(np.sum(np.log(lam)))
+    np.testing.assert_allclose(float(sp.logdet), want, rtol=1e-12)
+    # apply_inv really inverts the matrix the sampler draws from
+    rng = np.random.default_rng(12)
+    v = jnp.asarray(rng.standard_normal(op.n))
+    lam_t = jnp.asarray(lam)
+    Pv = jnp.fft.ifftn(jnp.fft.fftn(v.reshape(op.shape)) * lam_t).real
+    np.testing.assert_allclose(np.asarray(sp.apply_inv(
+        Pv.reshape(-1))), np.asarray(v), atol=1e-9)
