@@ -1,13 +1,16 @@
-"""Nightly bench-regression gate over BENCH_fused.json / BENCH_kron.json.
+"""Nightly bench-regression gate over BENCH_fused.json / BENCH_kron.json /
+BENCH_stochastic.json.
 
 Fails (exit 1) when a headline speedup of the performance work drops
 below the floor at n >= 4096 — the payload keys select the gate:
 
   * fused-vs-unfused SKI gram matvec (``fused_matvec`` rows),
   * preconditioned-vs-plain CG at matched tolerance
-    (``precond_cg_large``), and
+    (``precond_cg_large``),
   * multi-axis Kronecker / ProductSKI vs the O(n^2) Pallas product tile
-    (``kron_matvec`` rows + the ``product_ski`` row, DESIGN.md §13).
+    (``kron_matvec`` rows + the ``product_ski`` row, DESIGN.md §13), and
+  * the stochastic mini-batch backend vs plain Pallas-tile CG at matched
+    residual on irregular data (``stochastic`` rows, DESIGN.md §14).
 
 Run by the nightly CI lane right after ``kernel_bench.py`` writes the
 artifact, so a regression turns the scheduled job red instead of silently
@@ -28,6 +31,8 @@ def check(payload: dict, min_speedup: float = 1.0,
           min_n: int = 4096) -> list:
     if "kron_matvec" in payload or "product_ski" in payload:
         return check_kron(payload, min_speedup, min_n)
+    if "stochastic" in payload:
+        return check_stochastic(payload, min_speedup, min_n)
     failures = []
     rows = payload.get("fused_matvec", [])
     gated = [r for r in rows if r["n"] >= min_n]
@@ -79,6 +84,29 @@ def check_kron(payload: dict, min_speedup: float = 1.0,
                 f"ProductSKI-vs-tile speedup "
                 f"x{ps['speedup_vs_pallas']:.2f} < x{min_speedup} at "
                 f"n={ps['n']}")
+    return failures
+
+
+def check_stochastic(payload: dict, min_speedup: float = 1.0,
+                     min_n: int = 4096) -> list:
+    """BENCH_stochastic.json gate: the EigenPro-style stochastic backend
+    must beat plain Pallas-tile CG to MATCHED residual on irregular data
+    at n >= 4096 (floor 1.0 = parity; the measured interpret-mode margin
+    is >= 3x, so a trip means the mini-batch path stopped being the fast
+    path for structure-free data).  ``cg_capped`` rows record a LOWER
+    bound on the speedup — CG never reached the stochastic residual — so
+    the same floor applies to them unchanged."""
+    failures = []
+    rows = payload.get("stochastic", [])
+    gated = [r for r in rows if r["n"] >= min_n]
+    if not gated:
+        failures.append(f"no stochastic rows with n >= {min_n}")
+    for r in gated:
+        if r["speedup"] < min_speedup:
+            bound = " (capped lower bound)" if r.get("cg_capped") else ""
+            failures.append(
+                f"stochastic-vs-tile-CG speedup x{r['speedup']:.2f} < "
+                f"x{min_speedup} at n={r['n']}{bound}")
     return failures
 
 

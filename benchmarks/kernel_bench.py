@@ -578,6 +578,81 @@ def run_policy_tidal(verbose=True):
     return rows
 
 
+def run_stochastic(sizes=(4096, 8192), rank=128, cg_max_iter=400,
+                   verbose=True):
+    """EigenPro-style stochastic backend vs plain Pallas-tile CG on
+    IRREGULAR (structure-free) data — the DESIGN.md §14 contest,
+    regression-gated by check_bench.py.
+
+    Contest at each n: solve (K + σ²I) α = y on scattered 1-D inputs (no
+    grid, so neither side has a Toeplitz/SKI/Kronecker fast path).  The
+    stochastic solve is timed END TO END — deflation eigensystem, warm
+    start + guard sweep, epochs of row-slab SGD — and its achieved
+    relative residual becomes CG's target tolerance, so both sides are
+    timed to MATCHED accuracy.  CG runs the exact same gram matvec (one
+    O(n²) Pallas tile sweep per iteration); if it exhausts
+    ``cg_max_iter`` above the target, the row records ``cg_capped`` and
+    the speedup is a LOWER bound on CG's time-to-matched-residual.
+
+    Sizes are interpret-mode-calibrated: one full tile sweep at
+    n = 65536 costs ~10³ s on this CPU container, so the nightly contest
+    runs at the largest tractable sizes; the n ≥ 65536 claims of the
+    stochastic backend (auto-dispatch threshold, no-(n, n) buffer at
+    n = 2¹⁹) are certified structurally in tests/test_stochastic.py.
+    The deflation rank is pinned to the top of the 32/64/128 ladder:
+    the bench measures the matched-accuracy contest, and the rank-32
+    auto plan's looser residual would let CG stop after a handful of
+    iterations, gating nothing.
+    """
+    from repro.core import enable_x64
+    from repro.core import iterative as I
+    from repro.core.engine import SolverOpts
+    from repro.core.stochastic import StochasticSolver
+
+    enable_x64()
+    rows = []
+    theta = jnp.asarray([0.0])
+    sigma_n = 0.1
+    opts = SolverOpts(mem_budget_mb=1024, nystrom_rank=rank)
+    for n in sizes:
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(np.sort(rng.uniform(0, 100.0, n)))
+        y = jnp.asarray(np.sin(2.1 * np.asarray(x))
+                        + 0.3 * np.sin(0.37 * np.asarray(x))
+                        + 0.1 * rng.normal(size=n))
+        t0 = time.time()
+        sol = StochasticSolver("se", theta, x, y, sigma_n,
+                               jax.random.key(0), opts=opts)
+        alpha = sol.solve(y)
+        alpha.block_until_ready()
+        t_sto = time.time() - t0
+        mv = jax.jit(lambda v, sol=sol: sol.op.gram_matvec(theta, v))
+        resid = float(jnp.linalg.norm(mv(alpha[:, None])[:, 0] - y)
+                      / jnp.linalg.norm(y))
+        tol = max(resid, 1e-6)
+        f = jax.jit(lambda b, tol=tol, mv=mv: I.cg_solve(
+            mv, b, tol=tol, max_iter=cg_max_iter))
+        t0 = time.time()
+        res = f(y[:, None])
+        res.x.block_until_ready()
+        t_cg = time.time() - t0
+        cg_resid = float(res.resnorm.max())
+        capped = bool(cg_resid > tol)
+        rows.append({
+            "n": n, "batch": sol.plan.batch, "rank": sol.plan.rank,
+            "epochs": sol.plan.epochs, "resid_sto": resid,
+            "t_sto_s": t_sto, "cg_iters": int(res.iters),
+            "cg_resid": cg_resid, "t_cg_s": t_cg, "cg_capped": capped,
+            "speedup": t_cg / t_sto})
+        if verbose:
+            r = rows[-1]
+            print(f"stochastic n={n:6d}: resid={resid:.1e} "
+                  f"sto={t_sto:.1f}s cg={t_cg:.1f}s ({r['cg_iters']} its"
+                  f"{', CAPPED' if capped else ''}) x{r['speedup']:.2f}",
+                  flush=True)
+    return rows
+
+
 def run_compare_batched(n=4096, kernels=("k1", "se", "matern32",
                                          "matern52"),
                         n_starts=2, max_iters=2, verbose=True):
@@ -635,7 +710,8 @@ def run_compare_batched(n=4096, kernels=("k1", "se", "matern32",
 def main(json_path="BENCH_operators.json", ski_json_path="BENCH_ski.json",
          api_json_path="BENCH_api.json",
          fused_json_path="BENCH_fused.json",
-         kron_json_path="BENCH_kron.json"):
+         kron_json_path="BENCH_kron.json",
+         stochastic_json_path="BENCH_stochastic.json"):
     rows = run()
     tang = run_stacked_tangent()
     op_rows = run_operators()
@@ -649,6 +725,7 @@ def main(json_path="BENCH_operators.json", ski_json_path="BENCH_ski.json",
     slq_row = run_precond_slq()
     cg_row = run_precond_cg_large()
     policy_rows = run_policy_tidal()
+    sto_rows = run_stochastic()
     print("name,us_per_call,derived")
     for r in rows:
         print(f"kernel_matvec_n{r['n']},{r['t_s']*1e6:.0f},"
@@ -716,6 +793,26 @@ def main(json_path="BENCH_operators.json", ski_json_path="BENCH_ski.json",
         with open(kron_json_path, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {kron_json_path}")
+    if stochastic_json_path:
+        payload = {"stochastic": sto_rows,
+                   "note": "EigenPro-style stochastic backend (DESIGN.md "
+                           "§14) vs plain CG on the exact Pallas tile "
+                           "matvec, irregular 1-D data, timed to MATCHED "
+                           "relative residual (the stochastic solve's "
+                           "achieved residual is CG's tolerance; "
+                           "cg_capped rows are lower-bound speedups).  "
+                           "Interpret-mode wall-clock: a full tile sweep "
+                           "at n = 65536 costs ~1e3 s on this container, "
+                           "so the contest runs at the largest tractable "
+                           "sizes — the n >= 65536 regime itself is "
+                           "certified structurally (no-(n,n) jaxpr at "
+                           "n = 2^19, auto-dispatch threshold) in "
+                           "tests/test_stochastic.py.  Rows at n >= 4096 "
+                           "are regression-gated by benchmarks/"
+                           "check_bench.py (speedup >= 1.0)."}
+        with open(stochastic_json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {stochastic_json_path}")
     if api_json_path:
         payload = {"compare_batched": api_row,
                    "note": "gp.compare batched bank vs sequential "
@@ -730,7 +827,7 @@ def main(json_path="BENCH_operators.json", ski_json_path="BENCH_ski.json",
             json.dump(payload, f, indent=2)
         print(f"wrote {api_json_path}")
     return rows + [tang] + op_rows + tidal_rows + ski_rows + fused_rows \
-        + kron_rows + ski_tidal_rows \
+        + kron_rows + ski_tidal_rows + sto_rows \
         + [prod_ski_row, api_row, slq_row, cg_row] + policy_rows
 
 
@@ -749,7 +846,11 @@ if __name__ == "__main__":
     ap.add_argument("--kron-json", default="BENCH_kron.json",
                     help="output path for the multi-axis Kronecker / "
                          "product-SKI record")
+    ap.add_argument("--stochastic-json", default="BENCH_stochastic.json",
+                    help="output path for the stochastic-backend-vs-"
+                         "tile-CG record")
     args = ap.parse_args()
     main(json_path=args.json, ski_json_path=args.ski_json,
          api_json_path=args.api_json, fused_json_path=args.fused_json,
-         kron_json_path=args.kron_json)
+         kron_json_path=args.kron_json,
+         stochastic_json_path=args.stochastic_json)

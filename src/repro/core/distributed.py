@@ -66,6 +66,46 @@ def pad_for_mesh(x, y, mesh: Mesh):
     return x, y, n
 
 
+def sharded_rows_matvec(kind: str, mesh: Mesh) -> Callable:
+    """Per-device row-slab matvec for the stochastic backend (DESIGN.md §14).
+
+    Returns ``apply(theta, rows_x, x, v) -> (b, k)`` computing
+    K(rows_x, x) @ v with the COLUMN axis n split over the mesh's row
+    axes: each device holds an (n/shards,) shard of the coordinates and
+    of v, generates its K(batch, x_shard) slab through the row-slab
+    Pallas kernel, and the (b, k) partial products are psum-reduced —
+    the parallel low-rank recipe of Chen et al. (PAPERS.md).  The small
+    mini-batch coordinates and the result are replicated; per-device
+    work is O(b · n / shards), wire traffic O(b · k) per step.
+
+    n is padded to the shard multiple with zero v rows (zero
+    contribution regardless of the pad coordinates).
+    """
+    axes = _row_axes(mesh)
+    shards = int(np.prod([mesh.shape[a] for a in axes]))
+    colspec = P(axes if len(axes) > 1 else axes[0])
+
+    def local_fn(theta, rows_x, x_loc, v_loc):
+        part = kops.matvec_rows(kind, theta, rows_x, x_loc, v_loc)
+        return jax.lax.psum(part, axes)
+
+    fn = shard_map(local_fn, mesh=mesh,
+                   in_specs=(P(), P(), colspec, colspec),
+                   out_specs=P(), check_rep=False)
+
+    def apply(theta, rows_x, x, v):
+        n = x.shape[0]
+        pad = (-n) % shards
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.full((pad,) + x.shape[1:], _SENTINEL, x.dtype)])
+            v = jnp.concatenate(
+                [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)])
+        return fn(theta, rows_x, x, v)
+
+    return apply
+
+
 def distributed_profiled_loglik(kind: str, theta, x, y, sigma_n: float,
                                 mesh: Mesh, key, n_probes: int = 16,
                                 lanczos_k: int = 64, cg_tol: float = 1e-8,

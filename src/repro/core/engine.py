@@ -37,7 +37,7 @@ from ..kernels import ops as kops
 
 LOG2PI = jnp.log(2.0 * jnp.pi)
 
-BACKENDS = ("dense", "iterative")
+BACKENDS = ("dense", "iterative", "stochastic")
 
 
 @runtime_checkable
@@ -93,6 +93,15 @@ class SolverOpts(NamedTuple):
     # False | "auto"); "auto" enables the one-launch gather-FFT-scatter
     # kernel on supported geometries at n >= ski_fused.FUSED_AUTO_MIN_N
     # (DESIGN.md §12)
+    batch_size: int = 0         # stochastic backend: rows per mini-batch
+    # update (0 = memory-budgeted auto, stochastic.resolve_stochastic)
+    n_epochs: int = 0           # stochastic backend: data sweeps per solve
+    # (0 = auto default)
+    nystrom_rank: int = 0       # stochastic backend: Nyström deflation
+    # rank (0 = the shared iterative.resolve_rank noise-to-signal ladder)
+    mem_budget_mb: int = 1024   # stochastic backend: per-solve memory
+    # budget bounding batch·n row-slab entries and the (n, rank) factor
+    # (DESIGN.md §14)
 
 
 # ---------------------------------------------------------------------------
@@ -290,6 +299,16 @@ def select_precond(op, opts: SolverOpts = SolverOpts()) -> Optional[str]:
     return it.resolve_precond(opts.precond, op, opts.precond_rank)
 
 
+def select_stochastic(op, opts: SolverOpts = SolverOpts()):
+    """Resolved stochastic batch/rank/epoch plan for one bound operator —
+    the memory-budgeted policy front (same shape as :func:`select_precond`
+    / :func:`select_fused`; delegates to
+    :func:`repro.core.stochastic.resolve_stochastic`, DESIGN.md §14)."""
+    from .stochastic import resolve_stochastic
+    return resolve_stochastic(opts, int(op.n),
+                              float(getattr(op, "noise2", 0.0)))
+
+
 def select_fused(op, opts: SolverOpts = SolverOpts()) -> bool:
     """Resolved fused-kernel decision for one bound operator — the
     ``fused="auto"`` policy front.  Operators resolve the flag at
@@ -341,6 +360,14 @@ def make_solver(backend: str, cov: Covariance, theta, x, y, sigma_n: float,
         return IterativeSolver(resolve_kind(cov), theta, x, y, sigma_n, key,
                                1e-8 if jitter is None else jitter, opts,
                                op=op)
+    if backend == "stochastic":
+        from .stochastic import StochasticSolver   # lazy: avoids cycle
+
+        if key is None:
+            key = jax.random.key(0)
+        return StochasticSolver(resolve_kind(cov), theta, x, y, sigma_n,
+                                key, 1e-8 if jitter is None else jitter,
+                                opts, op=op)
     raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
 
 

@@ -496,16 +496,27 @@ _DEFAULT_PIVCHOL_RANK = 32
 _PIVCHOL_RANK_LADDER = ((1e5, 128), (1e3, 64))
 
 
-def _auto_pivchol_rank(op) -> int:
-    """Noise-to-signal pivoted-Cholesky rank policy (host-side, per bind)."""
-    noise2 = float(getattr(op, "noise2", 0.0))
-    snr = 1.0 / max(noise2, 1e-300)
+def resolve_rank(noise2: float, n: int) -> int:
+    """Noise-to-signal low-rank-factor size policy (host-side, per bind).
+
+    The ONE rank ladder shared by the pivoted-Cholesky preconditioner and
+    the stochastic backend's Nyström deflation (DESIGN.md §14): unit-scale
+    kernels make snr = 1 / noise2 the conditioning probe, and the ladder
+    escalates 32 → 64 → 128 as the fit gets more ill-conditioned.  The
+    result is clamped to [1, n].
+    """
+    snr = 1.0 / max(float(noise2), 1e-300)
     rank = _DEFAULT_PIVCHOL_RANK
     for thresh, r in _PIVCHOL_RANK_LADDER:
         if snr >= thresh:
             rank = r
             break
-    return max(1, min(rank, int(op.n)))
+    return max(1, min(rank, int(n)))
+
+
+def _auto_pivchol_rank(op) -> int:
+    """Rank ladder applied to one bound operator (delegates resolve_rank)."""
+    return resolve_rank(float(getattr(op, "noise2", 0.0)), int(op.n))
 
 # Minimum pivoted-Cholesky rank before its SLQ accessors are attached:
 # below this the rank-r P describes quasi-periodic (comb-spectrum)

@@ -89,11 +89,12 @@ def _predict_impl(cov: Covariance, theta, x, y, xstar, sigma_n: float,
     if cross not in ("exact", "interp"):    # validated for BOTH backends
         raise ValueError(f"unknown cross mode {cross!r}; choose "
                          f"'exact' or 'interp'")
-    if backend == "iterative":
+    if backend in ("iterative", "stochastic"):
         return _predict_iterative(cov, theta, x, y, xstar, sigma_n,
                                   include_noise, jitter, solver_opts,
                                   compute_var, key=key, op=op,
-                                  var_chunk=var_chunk, cross=cross)
+                                  var_chunk=var_chunk, cross=cross,
+                                  backend=backend)
     K = build_K(cov, theta, x, sigma_n, jitter)
     cache = hl.factorize(K, y)
     ks = cov(theta, x, xstar)                    # (n, n*)
@@ -114,7 +115,8 @@ def _predict_iterative(cov: Covariance, theta, x, y, xstar, sigma_n: float,
                        include_noise: bool, jitter: float,
                        opts: eng.SolverOpts, compute_var: bool,
                        key=None, op=None, var_chunk: int = 256,
-                       cross: str = "exact") -> Posterior:
+                       cross: str = "exact",
+                       backend: str = "iterative") -> Posterior:
     """Matrix-free posterior (DESIGN.md §2.5, §11).
 
     All solves go through the engine's IterativeSolver, so SolverOpts —
@@ -137,7 +139,7 @@ def _predict_iterative(cov: Covariance, theta, x, y, xstar, sigma_n: float,
     y = jnp.asarray(y)
     xstar = jnp.asarray(xstar)
     theta = jnp.asarray(theta)
-    solver = eng.make_solver("iterative", cov, theta, x, y, sigma_n,
+    solver = eng.make_solver(backend, cov, theta, x, y, sigma_n,
                              key=key, jitter=jitter, opts=opts, op=op)
     s2 = solver.sigma2_hat()               # triggers the K^{-1} y solve
     alpha = solver.alpha

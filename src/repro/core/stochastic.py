@@ -1,0 +1,308 @@
+"""EigenPro-style stochastic solver backend (DESIGN.md §14).
+
+The third :class:`~repro.core.engine.GPSolver` backend, for STRUCTURE-FREE
+data at large n: truly irregular inputs have no Toeplitz/SKI/Kronecker
+structure, so the iterative backend falls back to O(n²) Pallas tile sweeps
+per CG iteration — hundreds of full sweeps per objective evaluation.  This
+backend replaces the CG inner loop with mini-batch preconditioned-gradient
+iteration on (K + σ²I) α = rhs:
+
+  * one update samples a batch m of b rows and computes the batch gradient
+    g = K[m, :] α + σ² α[m] − rhs[m] through the ROW-SLAB Pallas kernel
+    (:func:`repro.kernels.ops.matvec_rows`): b·n kernel entries per step,
+    never n² — an epoch of n/b steps costs one full-matvec equivalent;
+  * the preconditioner DEFLATES the top-r eigendirections of a Nyström
+    approximation of K: the greedy pivoted Cholesky L (n, q) — the same
+    factor machinery as the "pivchol" CG preconditioner, built from the
+    operator's diag/matcol oracles — is an adaptively-pivoted Nyström
+    approximation K ≈ L Lᵀ, and eigh(LᵀL) = W S² Wᵀ gives the EXACTLY
+    orthonormal eigenbasis U = L W S⁻¹ with eigenvalue estimates λ = S².
+    The EigenPro preconditioner P = I − Σ_{j<r} (1 − (λ_q+σ²)/(λ_j+σ²))
+    u_j u_jᵀ shrinks the top of the spectrum to the q-th eigenvalue,
+    raising the SAFE STEP SIZE by λ_1/λ_q (arXiv:1703.10622);
+  * the iteration is WARM-STARTED at α₀ = (L Lᵀ + σ²I)⁻¹ rhs (the Woodbury
+    apply the pivchol preconditioner already uses), so the epochs only
+    polish the Nyström residual;
+  * ln det K is the deflation-spectrum estimate Σ_{j≤q} ln(λ_j + σ²) plus
+    a matched-trace tail (the n − q unseen eigenvalues share the residual
+    trace tr K − Σ λ_j), and the gradient traces are the same Hutchinson
+    probes as the iterative backend — [rhs | probes] solve together in one
+    stacked iteration, then ONE stacked Pallas tangent launch.
+
+Batch size, deflation rank and epochs resolve through the memory-budgeted
+:func:`resolve_stochastic` policy (same shape as ``resolve_precond`` /
+``resolve_fused``): batch·n kernel entries per row-slab launch are held
+under ``SolverOpts(mem_budget_mb=...)``, so the solver fits n ≈ 10⁶
+irregular points on one host without ever allocating an (n, n) — or even
+an (n, large-batch) — buffer.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import iterative as it
+from ..kernels import operators as kopers
+from ..kernels import ops as kops
+
+# backend="auto" escalation point: below this n the iterative backend's
+# exact CG on Pallas tiles is affordable; above it an irregular ("pallas"
+# operator) fit switches to the stochastic backend (gp.GP.bind).
+STOCHASTIC_AUTO_MIN_N = 65536
+
+_DEFAULT_EPOCHS = 12
+_MIN_BATCH = 8          # fp32 sublane minimum = the row-slab tile height
+_MAX_BATCH = 4096       # past this the MXU contraction saturates and
+# larger slabs only grow the VMEM/HBM footprint
+
+
+class StochasticPlan(NamedTuple):
+    """What ``resolve_stochastic`` decides for one (n, noise2, budget)."""
+
+    batch: int          # rows per mini-batch update (power of two)
+    rank: int           # Nyström/pivoted-Cholesky factor size q
+    epochs: int         # sweeps over the data per solve
+
+
+def resolve_stochastic(opts, n: int, noise2: float) -> StochasticPlan:
+    """Memory-budgeted auto batch/rank/epoch policy (host-side, per bind).
+
+    * rank: an explicit ``SolverOpts(nystrom_rank=...)`` wins; otherwise
+      the noise-to-signal ladder shared with the pivchol preconditioner
+      (:func:`repro.core.iterative.resolve_rank`, 32/64/128).  Either way
+      the factor is capped so its ~3 (n, q) f64 buffers (L, U, workspace)
+      fit the budget.
+    * batch: an explicit ``SolverOpts(batch_size=...)`` wins; otherwise
+      the largest power of two whose b·n f64 row slab fits the budget,
+      clamped to [8, 4096] ∩ [1, n].
+    * epochs: ``SolverOpts(n_epochs=...)`` or the default 12 — the warm
+      start does the bulk of the work; epochs polish the Nyström residual.
+    """
+    n = max(int(n), 1)
+    budget = max(int(opts.mem_budget_mb), 1) * (1 << 20)
+    rank_cap = max(2, budget // (3 * 8 * n))
+    rank = (int(opts.nystrom_rank) if opts.nystrom_rank > 0
+            else it.resolve_rank(noise2, n))
+    rank = max(2, min(rank, rank_cap, n))
+    if opts.batch_size > 0:
+        batch = int(opts.batch_size)
+    else:
+        cap = max(_MIN_BATCH, budget // (8 * n))
+        batch = min(1 << (cap.bit_length() - 1), _MAX_BATCH)
+        # keep ≥ 8 SGD steps per epoch: a batch near n degenerates to
+        # Richardson iteration and forfeits the mini-batch speedup
+        batch = min(batch, max(_MIN_BATCH, n // 8))
+    batch = max(1, min(batch, n))
+    epochs = int(opts.n_epochs) if opts.n_epochs > 0 else _DEFAULT_EPOCHS
+    return StochasticPlan(batch, rank, epochs)
+
+
+class StochasticSolver:
+    """Mini-batch EigenPro iteration behind the ``GPSolver`` contract.
+
+    Bound to one (theta, x, y) evaluation point like the other backends;
+    the deflation eigensystem is computed ONCE per θ at construction and
+    shared by every solve, the log-det and the gradient traces.  Passing
+    ``mesh`` shards each row-slab matvec over the mesh's row axes
+    (:func:`repro.core.distributed.sharded_rows_matvec`): every device
+    generates K(batch, x_shard) against its own column shard and the
+    (b, k) partials are psum-reduced — the Chen-et-al-style low-rank
+    parallel recipe, with α and the batch coordinates replicated.
+    """
+
+    backend = "stochastic"
+
+    def __init__(self, kind: str, theta, x, y, sigma_n: float, key,
+                 jitter: float = 1e-8, opts=None, op=None, mesh=None):
+        from .engine import SolverOpts
+
+        self.kind = kind
+        self.theta = jnp.asarray(theta)
+        self.x = jnp.asarray(x)
+        self.y = jnp.asarray(y)
+        self.sigma_n = sigma_n
+        self.jitter = jitter
+        self.key = key if key is not None else jax.random.key(0)
+        self.opts = opts if opts is not None else SolverOpts()
+        self.n = int(self.y.shape[0])
+        # the operator supplies the PRECONDITIONER oracles (diag / matcol)
+        # and the stacked tangent launch; the hot-loop row slabs go through
+        # kops.matvec_rows on the exact kernel regardless of the operator,
+        # so any structure works — the default is the general Pallas tiles
+        self.op = op if op is not None else kopers.PallasTileOperator(
+            kind, self.x, sigma_n, jitter)
+        self.noise2 = float(self.op.noise2)
+        self.plan = resolve_stochastic(self.opts, self.n, self.noise2)
+        if mesh is not None:
+            from .distributed import sharded_rows_matvec
+            self._rows_mv = sharded_rows_matvec(kind, mesh)
+        else:
+            self._rows_mv = (lambda theta_, xb, x_, V:
+                             kops.matvec_rows(kind, theta_, xb, x_, V))
+
+        # ---- deflation eigensystem, once per θ (DESIGN.md §14) ----
+        q = self.plan.rank
+        diag = self.op.diag(self.theta)
+        L = it.pivoted_cholesky(diag, lambda i: self.op.matcol(self.theta, i),
+                                q)
+        self._L = L
+        self._Lm = it._woodbury_factor(L, self.noise2)
+        self._warm = it._woodbury_apply(L, self._Lm, self.noise2)
+        S2, W = jnp.linalg.eigh(L.T @ L)
+        lam = jnp.clip(S2[::-1], 1e-30)              # descending λ estimates
+        W = W[:, ::-1]
+        self.lam = lam
+        self.U = L @ (W / jnp.sqrt(lam)[None, :])    # (n, q), orthonormal
+        tail = lam[-1]
+        # deflation shrink factors 1 − (λ_q+σ²)/(λ_j+σ²) (last entry 0:
+        # the q-th direction is the new spectral top, left untouched)
+        self._dvec = jnp.clip(
+            1.0 - (tail + self.noise2) / (lam + self.noise2), 0.0)
+        self._trK = jnp.sum(diag)
+
+        # EigenPro safe step size (arXiv:1703.10622 eq. 12, in K/n units;
+        # β bounds the per-row leverage — unit-diagonal kernels give
+        # β = 1 + σ² exactly).  The deflated spectral top is NOT lam[-1]
+        # when the factor is imperfect: with E = K − L Lᵀ (PSD — L is a
+        # pivoted-Cholesky/Schur factor) the rigorous bound is
+        #   λ_max(P^{1/2} (K+σ²I) P^{1/2}) ≤ tail + tr E + σ²,
+        # and tr E = tr K − Σ λ̂_j is exact and already in hand.  Trusting
+        # lam[-1] alone diverges on flat spectra (rank inside the
+        # plateau); the trace-bounded step is provably stable, and sharp
+        # exactly when the rank has captured the spectrum (tr E → 0).
+        resid_tr = jnp.clip(self._trK - jnp.sum(lam), 0.0)
+        b = float(self.plan.batch)
+        beta = 1.0 + self.noise2
+        mu_t = (tail + resid_tr + self.noise2) / self.n
+        self.eta = jnp.where(b < beta / mu_t + 1.0, b / beta,
+                             0.95 * 2.0 * b / (beta + (b - 1.0) * mu_t))
+
+        # lazy solves, shared [y | probes] iteration (engine contract)
+        self.z = jax.random.rademacher(
+            self.key, (self.n, self.opts.n_probes)).astype(self.y.dtype)
+        self.alpha = None
+        self.Kinv_z = None
+        self._logdet = None
+
+    # ---- the mini-batch iteration -------------------------------------
+
+    def _iterate(self, RHS):
+        """Epochs of deflated-preconditioned SGD on (K+σ²I) A = RHS (n,k)."""
+        n, b = self.n, self.plan.batch
+        steps = max(n // b, 1)
+        noise2 = jnp.asarray(self.noise2, RHS.dtype)
+        eta_b = (self.eta / b).astype(RHS.dtype)
+        U = self.U.astype(RHS.dtype)
+        Ud = U * self._dvec.astype(RHS.dtype)[None, :]
+        theta, x = self.theta, self.x
+        kb = jax.random.fold_in(self.key, 0x57ec)
+
+        def epoch(e, A):
+            perm = jax.random.permutation(jax.random.fold_in(kb, e), n)
+            batches = perm[: steps * b].reshape(steps, b)
+
+            def step(s, A):
+                rows = batches[s]
+                xb = jnp.take(x, rows, axis=0)
+                g = (self._rows_mv(theta, xb, x, A)
+                     + noise2 * A[rows] - RHS[rows])
+                # α[m] −= (η/b) g;  α += (η/b) U (d ⊙ (U[m]ᵀ g))
+                A = A.at[rows].add(-eta_b * g)
+                return A + eta_b * (Ud @ (U[rows].T @ g))
+
+            return jax.lax.fori_loop(0, steps, step, A)
+
+        # Woodbury(L Lᵀ + σ²I) warm start — helpful ONLY when the Nyström
+        # residual E = K − L Lᵀ is small along it (its true residual is
+        # exactly E α₀; an imperfect low-rank factor amplifies the unseen
+        # tail by 1/σ²).  One exact row-sweep (epoch-equivalent cost)
+        # checks each column against the zero-start residual ‖RHS‖ and
+        # drops the columns the warm start would make WORSE.
+        A0 = self._warm(RHS)
+        r0 = self._full_matvec(A0) - RHS
+        worse = (jnp.linalg.norm(r0, axis=0)
+                 >= jnp.linalg.norm(RHS, axis=0))
+        A0 = jnp.where(worse[None, :], 0.0, A0)
+        return jax.lax.fori_loop(0, self.plan.epochs, epoch, A0)
+
+    def _full_matvec(self, A):
+        """(K + σ²I) A exactly, one row-slab sweep over ⌈n/b⌉ batches."""
+        n, b = self.n, self.plan.batch
+        steps = -(-n // b)
+        rows_all = jnp.clip(jnp.arange(steps * b), 0, n - 1).reshape(
+            steps, b)
+        noise2 = jnp.asarray(self.noise2, A.dtype)
+        theta, x = self.theta, self.x
+
+        def body(s, out):
+            rows = rows_all[s]
+            xb = jnp.take(x, rows, axis=0)
+            vals = self._rows_mv(theta, xb, x, A) + noise2 * A[rows]
+            return out.at[rows].set(vals)
+
+        return jax.lax.fori_loop(0, steps, body, jnp.zeros_like(A))
+
+    def _ensure_alpha(self):
+        if self.alpha is None:
+            self.alpha = self._iterate(self.y[:, None])[:, 0]
+        return self.alpha
+
+    def _ensure_probes(self):
+        if self.Kinv_z is None:
+            if self.alpha is None:      # one stacked run for [y | probes]
+                sol = self._iterate(
+                    jnp.concatenate([self.y[:, None], self.z], axis=1))
+                self.alpha = sol[:, 0]
+                self.Kinv_z = sol[:, 1:]
+            else:
+                self.Kinv_z = self._iterate(self.z)
+        return self.Kinv_z
+
+    # ---- GPSolver contract --------------------------------------------
+
+    def solve(self, rhs):
+        squeeze = rhs.ndim == 1
+        out = self._iterate(rhs[:, None] if squeeze else rhs)
+        return out[:, 0] if squeeze else out
+
+    def logdet(self):
+        """Deflation-spectrum log-det with a matched-trace tail.
+
+        The q Nyström eigenvalues carry the top of ln det(K + σ²I); the
+        n − q unseen eigenvalues share the residual trace tr K − Σ λ_j
+        equally — a deterministic, smooth-in-θ estimate (the analogue of
+        the pivchol preconditioner's analytic ln det P, extended by the
+        trace-matching tail instead of assuming the tail is exactly 0).
+        """
+        if self._logdet is None:
+            n, q = self.n, self.plan.rank
+            head = jnp.sum(jnp.log(self.lam + self.noise2))
+            if n > q:
+                resid = jnp.clip(self._trK - jnp.sum(self.lam), 0.0)
+                self._logdet = head + (n - q) * jnp.log(
+                    self.noise2 + resid / (n - q))
+            else:
+                self._logdet = head
+        return self._logdet
+
+    def quad(self, y):
+        return y @ self.solve(y)
+
+    def sigma2_hat(self):
+        return (self.y @ self._ensure_alpha()) / self.n
+
+    def grad_terms(self):
+        Kinv_z = self._ensure_probes()
+        alpha = self.alpha
+        # ONE stacked launch: dK_i @ [alpha | z] for every direction i,
+        # Hutchinson probes estimating tr(K⁻¹ dK_i) exactly as the
+        # iterative backend does (engine.IterativeSolver.grad_terms)
+        V = jnp.concatenate([alpha[:, None], self.z], axis=1)
+        dkv = self.op.tangent_matvecs(self.theta, V)
+        quad = jnp.einsum("j,mj->m", alpha, dkv[:, :, 0])
+        tr = jnp.mean(jnp.einsum("jp,mjp->mp", Kinv_z, dkv[:, :, 1:]),
+                      axis=-1)
+        return quad, tr

@@ -56,8 +56,10 @@ from ..data.grid import (build_inducing_grid, classify_grid,
 from ..kernels import kernel_matvec
 from ..kernels import ops as kops
 from ..kernels import ski_fused
-from ..kernels.operators import (SLQPrecond, _embed, _strang_spectrum,
-                                 interp_gather, interp_scatter)
+from ..kernels.operators import (SLQPrecond, _embed, _selection_cells,
+                                 _strang_spectrum, interp_gather,
+                                 interp_scatter,
+                                 masked_circulant_slq_precond_bank)
 from .spec import pad_boxes
 
 
@@ -116,6 +118,7 @@ class BankOperator:
             self.shape = like.shape
             self.axis_grids = like.axis_grids
             self.axis_idx, self.axis_w = like.axis_idx, like.axis_w
+            self._sel_cells = like._sel_cells
             grid = like.grid
         elif self.d > 1:
             grid = self._init_nd(np.asarray(x, np.float64))
@@ -140,6 +143,10 @@ class BankOperator:
             self.shape = None
             self.axis_grids = None
             self.axis_idx = self.axis_w = None
+            # gappy-record detection (host-side, once): selection-matrix W
+            # unlocks the determinant-corrected bank SLQ preconditioner
+            self._sel_cells = None if self.idx is None else \
+                _selection_cells(self.idx, self.w)
             # fused Pallas sandwich geometry (SKI banks only: the exact-
             # grid bank has no W to fuse around its FFT) — DESIGN.md §12
             self.fused_geom = None if self.idx is None else \
@@ -190,6 +197,7 @@ class BankOperator:
                                     for g in info.grids)
             self.idx = self.w = None
             self.axis_idx = self.axis_w = None
+            self._sel_cells = None
             return self.x
         grids, axis_idx, axis_w = [], [], []
         for a in range(self.d):
@@ -216,6 +224,7 @@ class BankOperator:
         self.axis_idx = tuple(jnp.asarray(ia) for ia in axis_idx)
         self.axis_w = tuple(jnp.asarray(wa, self.x.dtype)
                             for wa in axis_w)
+        self._sel_cells = _selection_cells(IDX, WW)
         return self.x
 
     # -- per-member first columns (the ONLY per-family computation) ------
@@ -593,12 +602,20 @@ class BankOperator:
         n-point spectra → batched P⁻¹ apply, N(0, P_b) sampler and exact
         (B,) ln det P.  Full-product-grid banks ("kron") get the d-D
         analogue — per-member Kronecker Strang spectra, d-D FFT pairs,
-        ln det P_b = Σ ln Λ_b.  SKI / product banks return None (their
-        grid-space sandwich has no analytic determinant — plain bank SLQ
-        applies)."""
+        ln det P_b = Σ ln Λ_b.  GAPPY banks — selection-matrix W over the
+        inducing grid, 1-D "near" or multi-axis "product" structure — get
+        the bank-batched determinant-corrected masked circulant
+        (:func:`masked_circulant_slq_precond_bank`): P_b = M_b[occ, occ]
+        with the occ/miss geometry shared and the g x g correction
+        Cholesky batched over members.  Jittered W (not a selection
+        matrix) returns None — plain bank SLQ applies."""
         if self.d > 1:
             if self.structure != "kron":
-                return None
+                if self._sel_cells is None:
+                    return None
+                Lam = self._strang_lam_nd(thetas, dtype, floor)
+                return masked_circulant_slq_precond_bank(Lam,
+                                                         self._sel_cells)
             Lam = self._strang_lam_nd(thetas, dtype, floor)  # (B, m1..md)
             LamT = jnp.moveaxis(Lam, 0, -1)[..., None]
             sq = jnp.sqrt(LamT)
@@ -620,7 +637,12 @@ class BankOperator:
             logdet = jnp.sum(jnp.log(Lam.reshape(B, -1)), axis=1)
             return SLQPrecond(apply_inv_nd, sample_nd, logdet)
         if self.idx is not None:
-            return None
+            if self._sel_cells is None:
+                return None
+            T = self.first_columns(thetas, dtype)           # (B, m_grid)
+            lam = jax.vmap(lambda t: _strang_spectrum(
+                t, self.noise2, floor))(T)                  # (B, m_grid)
+            return masked_circulant_slq_precond_bank(lam, self._sel_cells)
         T = self.first_columns(thetas, dtype)               # (B, n)
         lam = jax.vmap(lambda t: _strang_spectrum(t, self.noise2,
                                                   floor))(T)  # (B, n)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from ..core import engine as eng
 from ..core import laplace as _laplace
+from ..core import stochastic as _stochastic
 from ..core import nested as _nested
 from ..core import predict as _predict
 from ..core import train as _train
@@ -80,12 +81,24 @@ class GP:
         box = spec.box if spec.box is not None else flat_box(cov, x)
         kind = None
         op = None
-        if backend == "iterative":
+        if backend in ("iterative", "stochastic"):
             kind = eng.resolve_kind(cov)
+            operator = spec.solver.opts.operator
+            if backend == "stochastic" and operator is None:
+                # the stochastic iteration applies EXACT kernel rows, so
+                # its oracle operator is always the general Pallas tiles
+                operator = "pallas"
             op = kopers.select_operator(kind, x, float(spec.noise.sigma_n),
-                                        float(jitter),
-                                        operator=spec.solver.opts.operator,
+                                        float(jitter), operator=operator,
                                         fused=spec.solver.opts.fused)
+            # three-way auto-dispatch (DESIGN.md §14): data with NO grid
+            # structure ("pallas" operator) at large n escalates from the
+            # O(n²)-per-CG-iteration exact path to the O(batch·n)-per-step
+            # stochastic backend
+            if (backend == "iterative" and spec.solver.backend == "auto"
+                    and op.name == "pallas"
+                    and n >= _stochastic.STOCHASTIC_AUTO_MIN_N):
+                backend = "stochastic"
         return cls(spec, x, y, box, backend, jitter, kind, op)
 
     # ------------------------------------------------------------------

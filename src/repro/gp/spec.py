@@ -52,9 +52,15 @@ class SolverPolicy(NamedTuple):
     """How a bound session solves: backend + engine knobs + NCG budget.
 
     backend: "auto" picks dense below ``dense_cutoff`` data points and the
-    matrix-free iterative engine above it.  ``scan_points=None`` means the
-    compare-style default (256 scan evaluations per hyperparameter on the
-    dense path, none on the iterative path); pass an int to pin it.
+    matrix-free iterative engine above it; at bind time an "auto" session
+    whose data is STRUCTURE-FREE (the general Pallas tile operator — no
+    Toeplitz/SKI/Kronecker fast path) escalates once more, to the
+    mini-batch "stochastic" backend, when n reaches
+    ``core.stochastic.STOCHASTIC_AUTO_MIN_N`` (DESIGN.md §14).  Any of
+    "dense" / "iterative" / "stochastic" pins the choice.
+    ``scan_points=None`` means the compare-style default (256 scan
+    evaluations per hyperparameter on the dense path, none on the
+    iterative path); pass an int to pin it.
     """
 
     backend: str = "auto"

@@ -38,6 +38,8 @@ from jax.experimental import pallas as pl
 
 TILE_R = 256
 TILE_C = 256
+TILE_B = 8  # row-slab tile: the fp32 sublane minimum, so a mini-batch of
+# a few rows does not pad up to a full 256-row tile (matvec_rows_pallas)
 N_PARAM_SLOTS = 8  # fixed-size natural-parameter vector (padded)
 
 
@@ -301,6 +303,66 @@ def matvec_pallas(kind: str, params, x1, x2, v,
         out_shape=jax.ShapeDtypeStruct((n1, b), v.dtype),
         interpret=interpret,
     )(params.reshape(1, N_PARAM_SLOTS), x1[:, None], x2[None, :], v)
+
+
+def matvec_rows_pallas(kind: str, params, rows_x, x2, v,
+                       tile_b: int = TILE_B, tile_c: int = TILE_C,
+                       interpret: bool = True):
+    """Row-slab matvec  K(rows_x, x2) @ v  for mini-batch solvers.
+
+    Identical tile generation to :func:`matvec_pallas` (same kernel body),
+    but the row axis is the PRE-GATHERED mini-batch coordinates rows_x
+    (b,) and the row tile is ``TILE_B`` = 8 instead of 256: one update of
+    the stochastic solver touches b·n kernel entries — never n² — and a
+    batch of a few hundred rows does not pad to a multiple of 256.
+
+    Returns (b, k) = the mini-batch rows of K applied to v (n2, k).
+    """
+    b = rows_x.shape[0]
+    n2, k = v.shape
+    assert b % tile_b == 0 and n2 % tile_c == 0, (b, n2, tile_b, tile_c)
+    tile_fn = TILE_FNS[kind]
+    grid = (b // tile_b, n2 // tile_c)
+
+    return pl.pallas_call(
+        functools.partial(_matvec_kernel, tile_fn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, N_PARAM_SLOTS), lambda r, c: (0, 0)),
+            pl.BlockSpec((tile_b, 1), lambda r, c: (r, 0)),
+            pl.BlockSpec((1, tile_c), lambda r, c: (0, c)),
+            pl.BlockSpec((tile_c, k), lambda r, c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, k), lambda r, c: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), v.dtype),
+        interpret=interpret,
+    )(params.reshape(1, N_PARAM_SLOTS), rows_x[:, None], x2[None, :], v)
+
+
+def matvec_rows_pallas_nd(kinds, params, rows_x, x2t, v,
+                          tile_b: int = TILE_B, tile_c: int = TILE_C,
+                          interpret: bool = True):
+    """Separable-product row-slab matvec K(rows_x, x2) @ v, (b, d) rows."""
+    b, d = rows_x.shape
+    n2, k = v.shape
+    assert b % tile_b == 0 and n2 % tile_c == 0, (b, n2, tile_b, tile_c)
+    assert x2t.shape == (d, n2) and len(kinds) == d
+    tile_fns = tuple(TILE_FNS[kd] for kd in kinds)
+    grid = (b // tile_b, n2 // tile_c)
+
+    return pl.pallas_call(
+        functools.partial(_matvec_kernel_nd, tile_fns),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, N_PARAM_SLOTS), lambda r, c: (0, 0)),
+            pl.BlockSpec((tile_b, d), lambda r, c: (r, 0)),
+            pl.BlockSpec((d, tile_c), lambda r, c: (0, c)),
+            pl.BlockSpec((tile_c, k), lambda r, c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, k), lambda r, c: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), v.dtype),
+        interpret=interpret,
+    )(params, rows_x, x2t, v)
 
 
 def matvec_pallas_nd(kinds, params, x1, x2t, v,

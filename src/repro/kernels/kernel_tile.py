@@ -27,21 +27,28 @@ def _tile_kernel(tile_fn, params_ref, x1_ref, x2_ref, o_ref):
 
 
 def matrix_pallas(kind: str, params, x1, x2, tile: int = TILE,
-                  interpret: bool = True):
-    """Materialise K(x1, x2) by tiles. Shapes must be tile-aligned."""
+                  interpret: bool = True, tile_r: int = 0, tile_c: int = 0):
+    """Materialise K(x1, x2) by tiles. Shapes must be tile-aligned.
+
+    ``tile_r``/``tile_c`` override the square default with a rectangular
+    tiling — e.g. an 8-row slab K(batch, x) for mini-batch references,
+    where padding a handful of rows to 256 would waste 30x the work.
+    """
+    tile_r = tile_r or tile
+    tile_c = tile_c or tile
     n1, n2 = x1.shape[0], x2.shape[0]
-    assert n1 % tile == 0 and n2 % tile == 0, (n1, n2, tile)
+    assert n1 % tile_r == 0 and n2 % tile_c == 0, (n1, n2, tile_r, tile_c)
     tile_fn = TILE_FNS[kind]
 
     return pl.pallas_call(
         functools.partial(_tile_kernel, tile_fn),
-        grid=(n1 // tile, n2 // tile),
+        grid=(n1 // tile_r, n2 // tile_c),
         in_specs=[
             pl.BlockSpec((1, N_PARAM_SLOTS), lambda r, c: (0, 0)),
-            pl.BlockSpec((tile, 1), lambda r, c: (r, 0)),
-            pl.BlockSpec((1, tile), lambda r, c: (0, c)),
+            pl.BlockSpec((tile_r, 1), lambda r, c: (r, 0)),
+            pl.BlockSpec((1, tile_c), lambda r, c: (0, c)),
         ],
-        out_specs=pl.BlockSpec((tile, tile), lambda r, c: (r, c)),
+        out_specs=pl.BlockSpec((tile_r, tile_c), lambda r, c: (r, c)),
         out_shape=jax.ShapeDtypeStruct((n1, n2), x1.dtype),
         interpret=interpret,
     )(params.reshape(1, N_PARAM_SLOTS), x1[:, None], x2[None, :])

@@ -455,6 +455,86 @@ def masked_circulant_slq_precond(lam, occ,
     return SLQPrecond(apply_inv, sample, logdet)
 
 
+def masked_circulant_slq_precond_bank(lams, occ,
+                                      max_miss: int = _GAPPY_SLQ_MAX_MISS
+                                      ) -> Optional[SLQPrecond]:
+    """Bank-batched :func:`masked_circulant_slq_precond`: B members sharing
+    ONE occupancy pattern, P_b = M_b[occ, occ] with per-member spectra
+    ``lams`` (B, m_1, ..., m_d; noise folded in).
+
+    The occ/miss index math is geometry, identical across members, so it is
+    done once host-side; everything spectral — the d-D FFT applies, the
+    g x g correction Cholesky G_b = (M_b^{-1})[miss, miss], the analytic
+    ln det P_b = Σ ln Λ_b + 2 Σ ln diag chol(G_b) — batches over the member
+    axis.  Accessors follow the bank block convention: ``apply_inv`` maps
+    (n, B, p) -> (n, B, p), ``sample`` returns (n, B, p), ``logdet`` is
+    (B,).  Returns None when the number of missing cells exceeds
+    ``max_miss`` or occ has duplicates (callers fall back to plain bank
+    SLQ).
+    """
+    B = int(lams.shape[0])
+    shape = lams.shape[1:]
+    d = len(shape)
+    m = int(np.prod(shape))
+    axes = tuple(range(d))
+    LamT = jnp.moveaxis(lams, 0, -1)[..., None]       # (m1..md, B, 1)
+    sq = jnp.sqrt(LamT)
+    logdet = jnp.sum(jnp.log(lams.reshape(B, -1)), axis=1)   # (B,)
+
+    def conv_inv(R):
+        """All members' M_b^{-1} on the full grid: (m, B, p) blocks."""
+        U = R.reshape(shape + R.shape[1:])
+        out = jnp.fft.ifftn(jnp.fft.fftn(U, axes=axes) / LamT,
+                            axes=axes).real
+        return out.reshape(R.shape)
+
+    if occ is None:
+        occ_np = None
+        g = 0
+    else:
+        occ_np = np.asarray(occ, np.int64).ravel()
+        if np.unique(occ_np).size != occ_np.size:
+            return None
+        miss_np = np.setdiff1d(np.arange(m, dtype=np.int64), occ_np)
+        g = int(miss_np.size)
+        if g > max_miss:
+            return None
+    if g:
+        midx = np.unravel_index(miss_np, shape)
+        diff = tuple((mi[:, None] - mi[None, :]) % sa
+                     for mi, sa in zip(midx, shape))
+        flat_diff = np.ravel_multi_index(diff, shape)
+        qs = jnp.fft.ifftn(1.0 / lams,
+                           axes=tuple(range(1, d + 1))).real.reshape(B, m)
+        G = qs[:, jnp.asarray(flat_diff)]              # (B, g, g)
+        Lg = jnp.linalg.cholesky(G)
+        logdet = logdet + 2.0 * jnp.sum(jnp.log(
+            jnp.diagonal(Lg, axis1=1, axis2=2)), axis=1)
+        miss_j = jnp.asarray(miss_np)
+    occ_j = None if occ_np is None else jnp.asarray(occ_np)
+
+    def apply_inv(r):                                  # (n, B, p)
+        if occ_j is None:
+            return conv_inv(r).astype(r.dtype)
+        rt = jnp.zeros((m,) + r.shape[1:], lams.dtype).at[occ_j].set(r)
+        u = conv_inv(rt)
+        if g:
+            s = jnp.moveaxis(u[miss_j], 1, 0)          # (B, g, p)
+            tcor = jax.vmap(lambda lg, ss: cho_solve((lg, True), ss))(Lg, s)
+            tt = jnp.zeros((m,) + r.shape[1:], lams.dtype).at[miss_j].set(
+                jnp.moveaxis(tcor, 0, 1))
+            u = u - conv_inv(tt)
+        return u[occ_j].astype(r.dtype)
+
+    def sample(key, p):
+        gg = jax.random.normal(key, shape + (B, p), lams.dtype)
+        z = jnp.fft.ifftn(jnp.fft.fftn(gg, axes=axes) * sq,
+                          axes=axes).real.reshape(m, B, p)
+        return z if occ_j is None else z[occ_j]
+
+    return SLQPrecond(apply_inv, sample, logdet)
+
+
 class ToeplitzOperator(_StationaryColumnAccess):
     """O(n log n) gram/tangent matvecs for stationary kernels on a grid.
 

@@ -232,6 +232,48 @@ def matvec(kind: str, theta, x1, x2, v, tile_r: int = kernel_matvec.TILE_R,
     return out[:, 0] if squeeze else out
 
 
+@functools.partial(jax.jit, static_argnums=(0, 5, 6))
+def matvec_rows(kind: str, theta, rows_x, x2, v,
+                tile_b: int = kernel_matvec.TILE_B,
+                tile_c: int = kernel_matvec.TILE_C):
+    """K(rows_x, x2) @ v for a PRE-GATHERED mini-batch of rows (no noise).
+
+    The stochastic solver's hot loop (DESIGN.md §14): one update touches
+    b·n kernel entries through the small-row-tile slab kernel
+    (:func:`kernel_matvec.matvec_rows_pallas`) instead of the full n²
+    sweep.  rows_x is (b,) — or (b, d) for composite kinds — and v is
+    (n2,) or (n2, k); padding rows get the covariance-safe sentinel, so
+    their k ≡ 0 output rows are simply truncated.
+    """
+    squeeze = v.ndim == 1
+    if squeeze:
+        v = v[:, None]
+    b = rows_x.shape[0]
+    kinds = split_kind(kind)
+    if len(kinds) > 1:
+        rows_x = jnp.asarray(rows_x)
+        x2 = jnp.asarray(x2)
+        _check_nd_coords(kind, kinds, rows_x, x2)
+        p = natural_params_nd(kind, theta).astype(v.dtype)
+        xbp = _pad_to(rows_x.astype(v.dtype), tile_b, _SENTINEL)
+        x2tp = _pad_to(x2.astype(v.dtype), tile_c, 2.0 * _SENTINEL).T
+        vp = _pad_to(v, tile_c, 0.0)
+        out = kernel_matvec.matvec_rows_pallas_nd(
+            kinds, p, xbp, x2tp, vp, tile_b=tile_b, tile_c=tile_c,
+            interpret=_use_interpret())
+        out = out[:b]
+        return out[:, 0] if squeeze else out
+    p = natural_params(kind, theta).astype(v.dtype)
+    xbp = _pad_to(jnp.asarray(rows_x, v.dtype), tile_b, _SENTINEL)
+    x2p = _pad_to(jnp.asarray(x2, v.dtype), tile_c, 2.0 * _SENTINEL)
+    vp = _pad_to(v, tile_c, 0.0)
+    out = kernel_matvec.matvec_rows_pallas(kind, p, xbp, x2p, vp,
+                                           tile_b=tile_b, tile_c=tile_c,
+                                           interpret=_use_interpret())
+    out = out[:b]
+    return out[:, 0] if squeeze else out
+
+
 @functools.partial(jax.jit, static_argnums=(0, 4, 5))
 def gram_matvec(kind: str, theta, x, v, sigma_n: float = 0.0,
                 jitter: float = 0.0):

@@ -511,9 +511,15 @@ def test_public_api_snapshot():
         "backend", "opts", "n_starts", "max_iters", "grad_tol",
         "scan_points", "multimodal", "dense_cutoff")
     # the engine knobs are public surface too (PR 5 adds precond="auto"
-    # semantics and the fused= kernel selector)
+    # semantics and the fused= kernel selector; PR 7 the stochastic
+    # backend's batch/rank/epoch/budget knobs)
     assert E.SolverOpts._fields == (
         "n_probes", "lanczos_k", "cg_tol", "cg_max_iter", "precond_rank",
-        "fd_step", "operator", "precond", "fused")
+        "fd_step", "operator", "precond", "fused", "batch_size",
+        "n_epochs", "nystrom_rank", "mem_budget_mb")
     assert E.SolverOpts().precond is None
     assert E.SolverOpts().fused == "auto"
+    assert E.SolverOpts().batch_size == 0       # 0 = resolve from budget
+    assert E.SolverOpts().nystrom_rank == 0     # 0 = rank ladder
+    assert E.SolverOpts().n_epochs == 0         # 0 = backend default
+    assert E.SolverOpts().mem_budget_mb == 1024
