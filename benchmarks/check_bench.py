@@ -10,7 +10,10 @@ below the floor at n >= 4096 — the payload keys select the gate:
   * multi-axis Kronecker / ProductSKI vs the O(n^2) Pallas product tile
     (``kron_matvec`` rows + the ``product_ski`` row, DESIGN.md §13), and
   * the stochastic mini-batch backend vs plain Pallas-tile CG at matched
-    residual on irregular data (``stochastic`` rows, DESIGN.md §14).
+    residual on irregular data (``stochastic`` rows, DESIGN.md §14), and
+  * streaming posterior serving (``serve_batch``/``serve_qps`` rows,
+    DESIGN.md §15): coalesced-vs-sequential speedup at batch >= 8 plus
+    p99 latency presence for every QPS row.
 
 Run by the nightly CI lane right after ``kernel_bench.py`` writes the
 artifact, so a regression turns the scheduled job red instead of silently
@@ -33,6 +36,8 @@ def check(payload: dict, min_speedup: float = 1.0,
         return check_kron(payload, min_speedup, min_n)
     if "stochastic" in payload:
         return check_stochastic(payload, min_speedup, min_n)
+    if "serve_batch" in payload or "serve_qps" in payload:
+        return check_serve(payload, min_speedup)
     failures = []
     rows = payload.get("fused_matvec", [])
     gated = [r for r in rows if r["n"] >= min_n]
@@ -107,6 +112,36 @@ def check_stochastic(payload: dict, min_speedup: float = 1.0,
             failures.append(
                 f"stochastic-vs-tile-CG speedup x{r['speedup']:.2f} < "
                 f"x{min_speedup} at n={r['n']}{bound}")
+    return failures
+
+
+def check_serve(payload: dict, min_speedup: float = 1.0,
+                min_batch: int = 8) -> list:
+    """BENCH_serve.json gate: cross-request coalescing must stay >= parity
+    with sequential serving once a batch has >= 8 requests (the batched
+    program's launch count per CG iteration is independent of the batch
+    size, so losing to B sequential solves means the serving fast path
+    regressed), and every QPS row must record its tail latency (a missing
+    p99 means the open-loop sweep silently served nothing)."""
+    failures = []
+    rows = [r for r in payload.get("serve_batch", [])
+            if r["batch"] >= min_batch]
+    if not rows:
+        failures.append(f"no serve_batch rows with batch >= {min_batch}")
+    for r in rows:
+        if r["speedup"] < min_speedup:
+            failures.append(
+                f"serve coalesced-vs-sequential speedup "
+                f"x{r['speedup']:.2f} < x{min_speedup} at "
+                f"batch={r['batch']}")
+    qps_rows = payload.get("serve_qps", [])
+    if not qps_rows:
+        failures.append("no serve_qps rows")
+    for r in qps_rows:
+        if r.get("p99_ms") is None:
+            failures.append(f"serve qps={r.get('qps')} row has no p99_ms")
+        if not r.get("n_requests"):
+            failures.append(f"serve qps={r.get('qps')} served 0 requests")
     return failures
 
 

@@ -707,11 +707,107 @@ def run_compare_batched(n=4096, kernels=("k1", "se", "matern32",
     return row
 
 
+def run_serve(n=1024, points=8, batches=(1, 2, 4, 8, 16), reps=3,
+              qps_list=(50, 200), qps_requests=40, verbose=True):
+    """Streaming posterior serving: batched-vs-sequential + latency/QPS.
+
+    One SKI model (pinned theta — the bench times SERVING, not fitting)
+    on a gappy n-point grid.  Two sweeps into BENCH_serve.json:
+
+    * batch sweep: B concurrent predicts served as ONE coalesced launch
+      through the cross-request batcher vs the same B requests served
+      sequentially — the speedup is the whole point of coalescing (the
+      variance CG solves all B x points columns together, so the FFT
+      launch count per iteration is independent of B), gated >= parity at
+      B >= 8 by check_bench.check_serve;
+    * QPS sweep: a worker thread serves a seeded open-loop request stream
+      at fixed arrival rates; p50/p99 latency and the mean coalesced
+      batch size come from serve.metrics (p99 presence is gated).
+    """
+    from repro.core import enable_x64
+    from repro.core.engine import SolverOpts
+    from repro.gp import GPSpec, NoiseModel, SolverPolicy
+    from repro.serve import PosteriorServer
+
+    enable_x64()
+    rng = np.random.default_rng(0)
+    xg = np.arange(int(n / 0.9) + 1, dtype=np.float64) * 0.5
+    x = xg[np.sort(rng.choice(xg.size, size=n, replace=False))]
+    y = np.sin(0.3 * x) + 0.4 * np.sin(0.11 * x) \
+        + 0.1 * rng.standard_normal(n)
+    spec = GPSpec(kernel="se", noise=NoiseModel(sigma_n=0.1),
+                  solver=SolverPolicy(backend="iterative",
+                                      opts=SolverOpts(cg_tol=1e-8,
+                                                      fused=False)))
+    srv = PosteriorServer(max_batch=max(batches))
+    entry = srv.register("bench", spec, x, y,
+                         theta=jnp.asarray([np.log(4.0)]))
+    lo, hi = float(x[0]), float(x[-1])
+
+    def make_requests(B, seed):
+        r = np.random.default_rng(seed)
+        return [np.linspace(a, a + 3.0, points)
+                for a in r.uniform(lo, hi - 4.0, B)]
+
+    batch_rows = []
+    for B in batches:
+        xss = make_requests(B, 100 + B)
+        # warm both paths (compiles for this pad size)
+        for xs in xss:
+            srv.batcher.submit("bench", xs)
+        srv.batcher.run_pending()
+        np.asarray(entry.predict_batched(xss[0]).mean)
+        t0 = time.time()
+        for _ in range(reps):
+            futs = [srv.batcher.submit("bench", xs) for xs in xss]
+            srv.batcher.run_pending()
+            for f in futs:
+                np.asarray(f.result().mean)
+        t_bat = (time.time() - t0) / reps
+        t0 = time.time()
+        for _ in range(reps):
+            for xs in xss:
+                p = entry.predict_batched(xs)
+                np.asarray(p.mean), np.asarray(p.var)
+        t_seq = (time.time() - t0) / reps
+        batch_rows.append({"batch": B, "n": n, "points": points,
+                           "t_batched_s": t_bat, "t_sequential_s": t_seq,
+                           "speedup": t_seq / t_bat})
+        if verbose:
+            print(f"serve batch={B:3d}: coalesced={t_bat*1e3:.1f}ms "
+                  f"sequential={t_seq*1e3:.1f}ms "
+                  f"x{batch_rows[-1]['speedup']:.2f}", flush=True)
+
+    qps_rows = []
+    for qps in qps_list:
+        srv.metrics.reset_latencies()
+        xss = make_requests(qps_requests, 200 + qps)
+        srv.batcher.start()
+        futs = []
+        for xs in xss:
+            futs.append(srv.batcher.submit("bench", xs))
+            time.sleep(1.0 / qps)
+        for f in futs:
+            f.result(timeout=60.0)
+        srv.batcher.stop()
+        snap = srv.metrics.snapshot()
+        qps_rows.append({"qps": qps, "p50_ms": snap["p50_ms"],
+                         "p99_ms": snap["p99_ms"],
+                         "mean_batch": snap["mean_batch"],
+                         "n_requests": snap["requests"]})
+        if verbose:
+            print(f"serve qps={qps:4d}: p50={snap['p50_ms']:.1f}ms "
+                  f"p99={snap['p99_ms']:.1f}ms "
+                  f"mean_batch={snap['mean_batch']:.1f}", flush=True)
+    return batch_rows, qps_rows
+
+
 def main(json_path="BENCH_operators.json", ski_json_path="BENCH_ski.json",
          api_json_path="BENCH_api.json",
          fused_json_path="BENCH_fused.json",
          kron_json_path="BENCH_kron.json",
-         stochastic_json_path="BENCH_stochastic.json"):
+         stochastic_json_path="BENCH_stochastic.json",
+         serve_json_path="BENCH_serve.json"):
     rows = run()
     tang = run_stacked_tangent()
     op_rows = run_operators()
@@ -726,6 +822,7 @@ def main(json_path="BENCH_operators.json", ski_json_path="BENCH_ski.json",
     cg_row = run_precond_cg_large()
     policy_rows = run_policy_tidal()
     sto_rows = run_stochastic()
+    serve_batch_rows, serve_qps_rows = run_serve()
     print("name,us_per_call,derived")
     for r in rows:
         print(f"kernel_matvec_n{r['n']},{r['t_s']*1e6:.0f},"
@@ -813,6 +910,26 @@ def main(json_path="BENCH_operators.json", ski_json_path="BENCH_ski.json",
         with open(stochastic_json_path, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {stochastic_json_path}")
+    if serve_json_path:
+        payload = {"serve_batch": serve_batch_rows,
+                   "serve_qps": serve_qps_rows,
+                   "note": "streaming posterior serving (repro.serve): "
+                           "B coalesced predicts through the "
+                           "cross-request batcher vs the same B served "
+                           "sequentially (one SKI model, pinned theta, "
+                           "gappy grid, n = 1024) plus open-loop QPS "
+                           "latency percentiles from serve.metrics.  "
+                           "The coalesced path runs ONE padded posterior "
+                           "program whose variance CG solves every "
+                           "request's cross-covariance columns together "
+                           "— FFT launches per CG iteration independent "
+                           "of B (certified structurally in tests/"
+                           "test_serve.py).  check_bench.check_serve "
+                           "gates speedup >= 1.0 at batch >= 8 and p99 "
+                           "presence per QPS row."}
+        with open(serve_json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {serve_json_path}")
     if api_json_path:
         payload = {"compare_batched": api_row,
                    "note": "gp.compare batched bank vs sequential "
@@ -827,7 +944,8 @@ def main(json_path="BENCH_operators.json", ski_json_path="BENCH_ski.json",
             json.dump(payload, f, indent=2)
         print(f"wrote {api_json_path}")
     return rows + [tang] + op_rows + tidal_rows + ski_rows + fused_rows \
-        + kron_rows + ski_tidal_rows + sto_rows \
+        + kron_rows + ski_tidal_rows + sto_rows + serve_batch_rows \
+        + serve_qps_rows \
         + [prod_ski_row, api_row, slq_row, cg_row] + policy_rows
 
 
@@ -849,8 +967,12 @@ if __name__ == "__main__":
     ap.add_argument("--stochastic-json", default="BENCH_stochastic.json",
                     help="output path for the stochastic-backend-vs-"
                          "tile-CG record")
+    ap.add_argument("--serve-json", default="BENCH_serve.json",
+                    help="output path for the streaming-serving "
+                         "latency/throughput record")
     args = ap.parse_args()
     main(json_path=args.json, ski_json_path=args.ski_json,
          api_json_path=args.api_json, fused_json_path=args.fused_json,
          kron_json_path=args.kron_json,
-         stochastic_json_path=args.stochastic_json)
+         stochastic_json_path=args.stochastic_json,
+         serve_json_path=args.serve_json)

@@ -60,9 +60,26 @@ def save(ckpt_dir: str | Path, step: int, tree: Any,
     return final
 
 
+def _step_dirs(ckpt_dir: Path) -> list[tuple[int, Path]]:
+    """(step, path) pairs sorted NUMERICALLY; malformed names skipped.
+
+    Lexicographic sort breaks once steps outgrow the zero padding (or a
+    stray dir matches the glob), so both GC and restore go through this.
+    """
+    out = []
+    for p in ckpt_dir.glob("step_*"):
+        if not p.is_dir():
+            continue
+        try:
+            out.append((int(p.name.split("_", 1)[1]), p))
+        except ValueError:
+            continue
+    out.sort()
+    return out
+
+
 def _gc(ckpt_dir: Path, keep_n: int):
-    steps = sorted(p for p in ckpt_dir.glob("step_*") if p.is_dir())
-    for p in steps[:-keep_n]:
+    for _, p in _step_dirs(ckpt_dir)[:-keep_n]:
         shutil.rmtree(p, ignore_errors=True)
 
 
@@ -91,10 +108,10 @@ def latest_step(ckpt_dir: str | Path) -> Optional[int]:
     ckpt_dir = Path(ckpt_dir)
     if not ckpt_dir.exists():
         return None
-    steps = sorted(ckpt_dir.glob("step_*"))
+    steps = _step_dirs(ckpt_dir)
     if not steps:
         return None
-    return int(steps[-1].name.split("_")[1])
+    return steps[-1][0]
 
 
 def restore(ckpt_dir: str | Path, example_tree: Any,
@@ -111,9 +128,15 @@ def restore(ckpt_dir: str | Path, example_tree: Any,
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
     path = ckpt_dir / f"step_{step:08d}"
-    data = np.load(path / "arrays.npz")
     meta = json.loads((path / "meta.json").read_text())
     leaves, treedef = _flatten(example_tree)
+    if meta["n_leaves"] != len(leaves):
+        raise ValueError(
+            f"checkpoint at {path} holds {meta['n_leaves']} leaves but "
+            f"example_tree has {len(leaves)}")
+    # np.load on an npz with zero entries is fine, but guard the read so an
+    # empty pytree (no leaves at all) round-trips without touching arrays.
+    data = np.load(path / "arrays.npz") if leaves else {}
     arrays = []
     for i in range(len(leaves)):
         a = data[f"a{i}"]
@@ -127,3 +150,17 @@ def restore(ckpt_dir: str | Path, example_tree: Any,
         arrays = [jax.device_put(a, s) if s is not None else a
                   for a, s in zip(arrays, shard_leaves)]
     return jax.tree.unflatten(treedef, arrays)
+
+
+def restore_latest(ckpt_dir: str | Path, example_tree: Any,
+                   shardings: Any = None) -> Optional[tuple[int, Any]]:
+    """``(step, tree)`` from the newest complete checkpoint, else None.
+
+    The server restart path wants "resume if there is anything, start
+    fresh otherwise" without the try/except dance around ``restore``.
+    """
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None
+    return step, restore(ckpt_dir, example_tree, step=step,
+                         shardings=shardings)

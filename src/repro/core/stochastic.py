@@ -64,7 +64,9 @@ class StochasticPlan(NamedTuple):
 
     batch: int          # rows per mini-batch update (power of two)
     rank: int           # Nyström/pivoted-Cholesky factor size q
-    epochs: int         # sweeps over the data per solve
+    epochs: int         # sweeps over the data per solve (cap if adaptive)
+    adaptive: bool = False   # residual-driven early stop (n_epochs=0 auto)
+    tol: float = 0.01        # relative-residual stop for the adaptive loop
 
 
 def resolve_stochastic(opts, n: int, noise2: float) -> StochasticPlan:
@@ -78,8 +80,14 @@ def resolve_stochastic(opts, n: int, noise2: float) -> StochasticPlan:
     * batch: an explicit ``SolverOpts(batch_size=...)`` wins; otherwise
       the largest power of two whose b·n f64 row slab fits the budget,
       clamped to [8, 4096] ∩ [1, n].
-    * epochs: ``SolverOpts(n_epochs=...)`` or the default 12 — the warm
-      start does the bulk of the work; epochs polish the Nyström residual.
+    * epochs: an explicit ``SolverOpts(n_epochs=...)`` runs exactly that
+      many sweeps; the auto default (``n_epochs=0``) runs ADAPTIVELY — up
+      to 12 sweeps, stopping once the epoch's accumulated mini-batch
+      residual drops below ``tol`` relative to ‖RHS‖ (the warm start does
+      the bulk of the work, so easy solves stop after one sweep or zero).
+      ``tol`` rides ``cg_tol`` but is floored at 1e-2: the accumulated
+      gradient norm is a stale estimate of the true residual, so chasing
+      CG-grade tolerances with it just burns the epoch cap.
     """
     n = max(int(n), 1)
     budget = max(int(opts.mem_budget_mb), 1) * (1 << 20)
@@ -96,8 +104,10 @@ def resolve_stochastic(opts, n: int, noise2: float) -> StochasticPlan:
         # Richardson iteration and forfeits the mini-batch speedup
         batch = min(batch, max(_MIN_BATCH, n // 8))
     batch = max(1, min(batch, n))
-    epochs = int(opts.n_epochs) if opts.n_epochs > 0 else _DEFAULT_EPOCHS
-    return StochasticPlan(batch, rank, epochs)
+    if opts.n_epochs > 0:
+        return StochasticPlan(batch, rank, int(opts.n_epochs))
+    return StochasticPlan(batch, rank, _DEFAULT_EPOCHS, adaptive=True,
+                          tol=max(float(opts.cg_tol), 1e-2))
 
 
 class StochasticSolver:
@@ -186,6 +196,7 @@ class StochasticSolver:
         self.alpha = None
         self.Kinv_z = None
         self._logdet = None
+        self.last_epochs = None   # sweeps used by the most recent solve
 
     # ---- the mini-batch iteration -------------------------------------
 
@@ -223,10 +234,56 @@ class StochasticSolver:
         # drops the columns the warm start would make WORSE.
         A0 = self._warm(RHS)
         r0 = self._full_matvec(A0) - RHS
-        worse = (jnp.linalg.norm(r0, axis=0)
-                 >= jnp.linalg.norm(RHS, axis=0))
+        rhs_norm = jnp.maximum(jnp.linalg.norm(RHS, axis=0), 1e-30)
+        r0_norm = jnp.linalg.norm(r0, axis=0)
+        worse = r0_norm >= rhs_norm
         A0 = jnp.where(worse[None, :], 0.0, A0)
-        return jax.lax.fori_loop(0, self.plan.epochs, epoch, A0)
+        if not self.plan.adaptive:
+            # fixed budget: exactly plan.epochs sweeps, carry is A alone —
+            # bitwise identical to the pre-adaptive iteration
+            self.last_epochs = jnp.asarray(self.plan.epochs)
+            return jax.lax.fori_loop(0, self.plan.epochs, epoch, A0)
+
+        # Adaptive stop: each epoch already touches every row once, so the
+        # mini-batch gradients g (the residual on their rows, evaluated at
+        # the then-current iterate) give a free whole-vector residual
+        # estimate — accumulate Σ‖g‖² per column over the sweep and stop
+        # once  max_col √acc / ‖RHS_col‖ ≤ tol.  The estimate is stale by
+        # at most one epoch of progress (it only LAGS the true residual),
+        # so the stop errs on the side of one extra sweep, never early.
+        # The entry residual comes from the warm-start guard's exact
+        # sweep: ‖r0‖ where the warm start survived, ‖RHS‖ where it was
+        # dropped — so already-converged columns cost ZERO epochs.
+        tol = jnp.asarray(self.plan.tol, RHS.dtype)
+
+        def epoch_acc(carry):
+            e, A, _rel = carry
+            perm = jax.random.permutation(jax.random.fold_in(kb, e), n)
+            batches = perm[: steps * b].reshape(steps, b)
+
+            def step(s, c):
+                A, acc = c
+                rows = batches[s]
+                xb = jnp.take(x, rows, axis=0)
+                g = (self._rows_mv(theta, xb, x, A)
+                     + noise2 * A[rows] - RHS[rows])
+                A = A.at[rows].add(-eta_b * g)
+                A = A + eta_b * (Ud @ (U[rows].T @ g))
+                return A, acc + jnp.sum(g * g, axis=0)
+
+            A, acc = jax.lax.fori_loop(
+                0, steps, step, (A, jnp.zeros(RHS.shape[1], RHS.dtype)))
+            return e + 1, A, jnp.max(jnp.sqrt(acc) / rhs_norm)
+
+        def keep_going(carry):
+            e, _A, rel = carry
+            return (e < self.plan.epochs) & (rel > tol)
+
+        rel0 = jnp.max(jnp.where(worse, rhs_norm, r0_norm) / rhs_norm)
+        e_fin, A, _rel = jax.lax.while_loop(
+            keep_going, epoch_acc, (jnp.asarray(0), A0, rel0))
+        self.last_epochs = e_fin
+        return A
 
     def _full_matvec(self, A):
         """(K + σ²I) A exactly, one row-slab sweep over ⌈n/b⌉ batches."""

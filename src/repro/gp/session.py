@@ -101,6 +101,41 @@ class GP:
                 backend = "stochastic"
         return cls(spec, x, y, box, backend, jitter, kind, op)
 
+    def rebind(self, x, y, op="auto") -> "GP":
+        """Rebind THIS session's decisions to updated data (no re-probe).
+
+        The streaming-serve refit path (serve/online.py): observations
+        arrive on the same (near-)grid, so the spec, hyperprior box,
+        backend and jitter resolved at :meth:`bind` stay valid — only the
+        data and its operator change.  ``op`` controls the operator:
+
+        * an explicit :class:`~repro.kernels.operators.LinearOperator`
+          instance — injected as-is, skipping ALL host-side probing (the
+          serve path passes its incrementally-maintained SKI view);
+        * ``"auto"`` — re-run structure selection on the new data (the
+          only host work; backend/box/jitter are still reused).
+
+        Returns an UNFITTED session: the box is deliberately carried over
+        so staleness-triggered refits keep a stable prior support (the
+        evidence's Occam volume stays comparable across refits).
+        """
+        x = jnp.asarray(x)
+        y = jnp.asarray(y)
+        new_op = self.op
+        if op == "auto":
+            if self.backend in ("iterative", "stochastic"):
+                operator = self.spec.solver.opts.operator
+                if self.backend == "stochastic" and operator is None:
+                    operator = "pallas"
+                new_op = kopers.select_operator(
+                    self.kind, x, float(self.spec.noise.sigma_n),
+                    float(self.jitter), operator=operator,
+                    fused=self.spec.solver.opts.fused)
+        else:
+            new_op = op
+        return GP(self.spec, x, y, self.box, self.backend, self.jitter,
+                  self.kind, new_op)
+
     # ------------------------------------------------------------------
     # properties
     # ------------------------------------------------------------------

@@ -572,6 +572,32 @@ class ToeplitzOperator(_StationaryColumnAccess):
         return kernel_matvec.TILE_FNS[self.kind](
             self._dt0.astype(dtype), p)
 
+    def first_column_extend(self, theta, t_old, dtype=None):
+        """Extend a cached first column to THIS operator's (longer) grid.
+
+        The streaming-serve path (serve/online.py) appends observations at
+        the right edge of the grid; the first column of the grown Toeplitz
+        matrix shares its first ``len(t_old)`` entries with the cached one,
+        so only the NEW lags' kernel values are evaluated — O(m_new - m_old)
+        work instead of O(m_new).  Returns ``t_old`` unchanged when the
+        lengths already match.  Callers then refresh the cached rfft of the
+        circulant embedding (O(m log m)) — still far below a re-bind, which
+        would re-probe the grid and rebuild W from scratch.
+        """
+        t_old = jnp.asarray(t_old)
+        k_old = int(t_old.shape[0])
+        if k_old == int(self.n):
+            return t_old
+        if k_old > int(self.n):
+            raise ValueError(
+                f"cached first column has {k_old} entries but the grid has "
+                f"{int(self.n)}; extension only grows at the right edge")
+        dtype = t_old.dtype if dtype is None else dtype
+        p = kops.natural_params(self.kind, theta).astype(dtype)
+        tail = kernel_matvec.TILE_FNS[self.kind](
+            self._dt0[k_old:].astype(dtype), p)
+        return jnp.concatenate([t_old.astype(dtype), tail])
+
     def embedding_eigenvalues(self, theta):
         """Spectrum of the size-(2n-2) circulant embedding (diagnostic).
 
@@ -611,12 +637,15 @@ class ToeplitzOperator(_StationaryColumnAccess):
         return _circulant_inverse_apply(self.first_column(theta),
                                         self.noise2, floor)
 
-    def bound_gram_matvec(self, theta, dtype):
+    def bound_gram_matvec(self, theta, dtype, first_column=None):
         """Per-θ bound apply: the first column and its embedding spectrum
         are computed HERE, once — every call inside a CG/Lanczos loop is
         then one rfft/irfft pair (the spectrum no longer re-evaluates per
-        iteration; DESIGN.md §12)."""
-        t = self.first_column(theta, dtype)
+        iteration; DESIGN.md §12).  ``first_column`` lets streaming
+        callers (serve/online.py) inject an incrementally-extended cached
+        column instead of re-evaluating all m lags."""
+        t = (self.first_column(theta, dtype) if first_column is None
+             else jnp.asarray(first_column, dtype))
         lam = jnp.fft.rfft(_embed(t))
         n, L = self.n, 2 * self.n - 2
         noise2 = self.noise2
@@ -749,6 +778,51 @@ class SKIOperator:
         # preconditioner (slq_precond below).  Jittered rows leave None.
         self._sel_cells = _selection_cells(idx, w)
 
+    @classmethod
+    def from_parts(cls, kind: str, x, sigma_n: float, jitter: float,
+                   grid, idx, w, order: str = "cubic",
+                   fused="auto") -> "SKIOperator":
+        """Assemble an SKIOperator from incrementally-maintained parts.
+
+        The streaming-serve path (serve/online.py) keeps the inducing grid
+        and the CSR-style W rows itself — appends add O(s) selection/interp
+        rows and extend the grid at the right edge — so re-running
+        ``build_inducing_grid`` + ``interp_weights`` over all n points per
+        append batch would be wasted work.  This constructor trusts the
+        caller's geometry: ``grid`` must be a regular ascending grid with
+        enough margin for every stencil, ``idx``/``w`` the (n, s) rows of W
+        against that grid.  Everything else (fused geometry, selection
+        detection, the inner Toeplitz probe on the m-cell grid) is the same
+        host-side work as ``__init__`` minus the O(n) weight rebuild.
+        """
+        idx = np.asarray(idx)
+        w = np.asarray(w)
+        x = jnp.asarray(x)
+        if idx.shape != w.shape or idx.ndim != 2 \
+                or idx.shape[0] != int(x.shape[0]):
+            raise ValueError(
+                f"idx/w must be (n, s) rows of W for n={int(x.shape[0])} "
+                f"points; got idx{idx.shape} w{w.shape}")
+        op = cls.__new__(cls)
+        op.kind = kind
+        op.x = x
+        op.n = op.x.shape[0]
+        op.order = order
+        op.sigma_n = float(sigma_n)
+        op.jitter = float(jitter)
+        op.noise2 = float(sigma_n) ** 2 + float(jitter)
+        op._toep = ToeplitzOperator(kind, grid)
+        op.grid = op._toep.x
+        op.m_grid = int(op.grid.shape[0])
+        if idx.size and (idx.min() < 0 or idx.max() >= op.m_grid):
+            raise ValueError("W rows index outside the inducing grid")
+        op.idx = jnp.asarray(idx, jnp.int32)
+        op.w = jnp.asarray(w, op.x.dtype)
+        op.fused_geom = ski_fused.build_fused_geometry(idx, w, op.m_grid)
+        op.fused = ski_fused.resolve_fused(fused, op.fused_geom, int(op.n))
+        op._sel_cells = _selection_cells(idx, w)
+        return op
+
     # -- the sparse interpolation applications (trace-safe: idx/w constants)
 
     def _W(self, u):
@@ -775,7 +849,7 @@ class SKIOperator:
             return out[:, 0] if squeeze else out
         return self.matvec(theta, v) + jnp.asarray(self.noise2, v.dtype) * v
 
-    def bound_gram_matvec(self, theta, dtype):
+    def bound_gram_matvec(self, theta, dtype, first_column=None):
         """Per-θ bound training matvec, the CG/Lanczos hot-loop apply.
 
         Fused path: the permuted power-of-two spectrum is built here,
@@ -783,10 +857,14 @@ class SKIOperator:
         W·irfft(Λ⊙rfft(Wᵀ·))·+noise2 sandwich in VMEM (DESIGN.md §12).
         Unfused path: the inner Toeplitz spectrum is still hoisted, each
         call being the gather → FFT pair → scatter composition.
+        ``first_column`` injects a cached/incrementally-extended grid
+        first column (streaming serve path) on either branch.
         """
         if self.fused:
             lam = ski_fused.spectrum_perm(
-                self._toep.first_column(theta, dtype), self.fused_geom)
+                self._toep.first_column(theta, dtype)
+                if first_column is None
+                else jnp.asarray(first_column, dtype), self.fused_geom)
             geom, noise2 = self.fused_geom, self.noise2
 
             def mv(v):
@@ -795,7 +873,8 @@ class SKIOperator:
             return mv
         # the inner ToeplitzOperator carries no noise (noise lives on the
         # DATA axis), so its bound apply is the pure K_grid spectrum matvec
-        inner = self._toep.bound_gram_matvec(theta, dtype)
+        inner = self._toep.bound_gram_matvec(theta, dtype,
+                                             first_column=first_column)
         noise2 = self.noise2
 
         def mv(v):

@@ -1,78 +1,32 @@
-"""Batched serving driver: prefill + greedy decode with a KV/state cache.
+"""Deprecated location: serving moved to :mod:`repro.serve`.
 
-Demonstrates the serving path the decode_* dry-run cells lower: a fixed
-slot batch, one prefill per request batch, then step-wise decode against
-the cache.  Runs the reduced config on CPU:
+The GP posterior serving CLI (model registry + cross-request batching +
+online Toeplitz/SKI updates) lives at ``repro.serve`` now:
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
-        --batch 4 --prompt-len 32 --gen 32
+    PYTHONPATH=src python -m repro.serve --n 256 --requests 12
+
+This module stays importable so existing launch scripts keep working:
+``main`` emits one DeprecationWarning and forwards to
+:func:`repro.serve.server.main` (which tolerates the legacy LM flags via
+``parse_known_args``).
 """
 
 from __future__ import annotations
 
-import argparse
-import time
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from ..configs.base import get_config, reduce_for_smoke
-from ..models import model as M
-from ..parallel.sharding import ParallelContext, init_tree
-from .mesh import make_local_mesh
-
-
-def generate(cfg, params, ctx, prompts, gen_len: int, s_max: int):
-    """Greedy generation: returns (B, gen_len) new tokens."""
-    B, P = prompts.shape
-    cache = M.init_cache(cfg, B, s_max, jnp.float32, ctx)
-
-    decode = jax.jit(
-        lambda c, t, p: M.decode_step(params, cfg, ctx, c, t, p))
-
-    # prefill by stepping the cache through the prompt (cache-filling
-    # prefill; the prefill_32k dry-run cells lower the fused variant)
-    tok = None
-    for t in range(P):
-        logits, cache = decode(cache, prompts[:, t:t + 1],
-                               jnp.asarray(t, jnp.int32))
-    out = []
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-    for t in range(P, P + gen_len):
-        out.append(tok)
-        logits, cache = decode(cache, tok, jnp.asarray(t, jnp.int32))
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-    return jnp.concatenate(out, axis=1)
+_WARNED = False
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-0.6b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
-    cfg = reduce_for_smoke(get_config(args.arch))
-    if cfg.is_encdec:
-        raise SystemExit("enc-dec serving needs an encoder pass; "
-                         "use examples/whisper notes")
-    ctx = ParallelContext(make_local_mesh())
-    params = init_tree(jax.random.key(args.seed), M.model_init(cfg),
-                       jnp.float32)
-    prompts = jax.random.randint(jax.random.key(1),
-                                 (args.batch, args.prompt_len), 0, cfg.vocab)
-    t0 = time.time()
-    toks = generate(cfg, params, ctx, prompts, args.gen,
-                    args.prompt_len + args.gen)
-    dt = time.time() - t0
-    n_tok = args.batch * (args.prompt_len + args.gen)
-    print(f"generated {toks.shape} in {dt:.1f}s "
-          f"({n_tok/dt:.0f} tok/s incl. prefill)")
-    print(np.asarray(toks[:2]))
-    return toks
+    global _WARNED
+    if not _WARNED:
+        warnings.warn(
+            "repro.launch.serve is deprecated; use `python -m repro.serve` "
+            "(repro.serve.server.main)", DeprecationWarning, stacklevel=2)
+        _WARNED = True
+    from ..serve.server import main as serve_main
+    return serve_main(argv)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,23 @@
+"""Streaming GP prediction service (ROADMAP item 1, serving half).
+
+Bind once per spec, coalesce concurrent predicts into single batched
+launches, stream appends through online Toeplitz/SKI updates, and
+checkpoint for crash-safe resume.  See DESIGN.md §15.
+"""
+
+from .batcher import PredictRequest, RequestBatcher
+from .metrics import ServeMetrics
+from .online import OnlineGPState
+from .registry import ModelRegistry, ServedModel
+from .server import PosteriorServer, main
+
+__all__ = [
+    "ModelRegistry",
+    "OnlineGPState",
+    "PosteriorServer",
+    "PredictRequest",
+    "RequestBatcher",
+    "ServeMetrics",
+    "ServedModel",
+    "main",
+]

@@ -1,0 +1,165 @@
+"""Cross-request batcher: coalesce concurrent predicts into one launch.
+
+Requests enter an async queue (``submit`` returns a
+``concurrent.futures.Future`` immediately); a single worker thread drains
+the queue under a max-wait/max-batch admission policy and groups requests
+by model.  Each group's test points are CONCATENATED and served by one
+call to ``ServedModel.predict_batched`` — one padded compiled program in
+which the variance CG solves every request's columns together, so B
+coalesced requests cost one batched matvec launch per CG iteration
+instead of B sequential solves (fft/pallas launch count independent of
+B; certified by tests/test_serve.py).
+
+Admission policy: the first request opens a window; the worker keeps
+draining until either ``max_wait_s`` has passed since that arrival or
+some model's group reaches ``max_batch`` requests.  All compute happens
+on the worker thread, so JAX sees a single-threaded stream of launches.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .metrics import ServeMetrics
+from .registry import ModelRegistry
+
+
+@dataclass
+class PredictRequest:
+    model: str
+    xstar: np.ndarray
+    compute_var: bool
+    t_submit: float
+    future: Future = field(default_factory=Future)
+
+
+class RequestBatcher:
+    """Async request/response queues around a ModelRegistry."""
+
+    def __init__(self, registry: ModelRegistry, max_batch: int = 16,
+                 max_wait_s: float = 0.005,
+                 metrics: Optional[ServeMetrics] = None):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.registry = registry
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_s)
+        self.metrics = metrics if metrics is not None else registry.metrics
+        self._q: "queue.Queue[PredictRequest]" = queue.Queue()
+        self._stop = threading.Event()
+        self._worker: Optional[threading.Thread] = None
+
+    # ---- lifecycle ----------------------------------------------------
+
+    def start(self) -> "RequestBatcher":
+        if self._worker is None or not self._worker.is_alive():
+            self._stop.clear()
+            self._worker = threading.Thread(target=self._loop,
+                                            name="serve-batcher",
+                                            daemon=True)
+            self._worker.start()
+        return self
+
+    def stop(self, drain: bool = True):
+        """Stop the worker; ``drain=True`` serves queued requests first."""
+        if drain and self._worker is not None and self._worker.is_alive():
+            self._q.join()
+        self._stop.set()
+        if self._worker is not None:
+            self._worker.join(timeout=5.0)
+            self._worker = None
+
+    # ---- submission ---------------------------------------------------
+
+    def submit(self, model: str, xstar, compute_var: bool = True) -> Future:
+        """Enqueue one predict; resolves to a ``Posterior`` slice."""
+        req = PredictRequest(model=model,
+                             xstar=np.atleast_1d(
+                                 np.asarray(xstar, np.float64)),
+                             compute_var=bool(compute_var),
+                             t_submit=time.monotonic())
+        self._q.put(req)
+        return req.future
+
+    def run_pending(self):
+        """Drain and serve everything queued, on the CALLING thread.
+
+        The deterministic, no-worker mode: tests and benchmarks submit a
+        seeded load first and then coalesce it in one pass, so grouping —
+        and therefore the batched numerics — is reproducible bit-for-bit.
+        """
+        while True:
+            groups = self._drain(deadline=None)
+            if not groups:
+                break
+            for model, reqs in groups.items():
+                self._execute(model, reqs)
+
+    # ---- the worker ---------------------------------------------------
+
+    def _loop(self):
+        while not self._stop.is_set():
+            try:
+                first = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            groups = self._drain(
+                deadline=first.t_submit + self.max_wait_s, first=first)
+            for model, reqs in groups.items():
+                self._execute(model, reqs)
+
+    def _drain(self, deadline: Optional[float],
+               first: Optional[PredictRequest] = None
+               ) -> Dict[str, List[PredictRequest]]:
+        groups: Dict[str, List[PredictRequest]] = {}
+        if first is not None:
+            groups[first.model] = [first]
+        while True:
+            if any(len(rs) >= self.max_batch for rs in groups.values()):
+                break
+            if deadline is None:
+                timeout = 0.0
+            else:
+                timeout = deadline - time.monotonic()
+                if timeout <= 0.0 and groups:
+                    break
+            try:
+                req = self._q.get(timeout=max(timeout, 0.0)
+                                  if deadline is not None else 0.0)
+            except queue.Empty:
+                break
+            groups.setdefault(req.model, []).append(req)
+        return groups
+
+    def _execute(self, model: str, reqs: List[PredictRequest]):
+        """ONE batched posterior launch for a coalesced model group."""
+        try:
+            entry = self.registry.get(model)
+            xcat = np.concatenate([r.xstar for r in reqs])
+            splits = np.cumsum([r.xstar.shape[0] for r in reqs])[:-1]
+            want_var = any(r.compute_var for r in reqs)
+            post = entry.predict_batched(xcat, compute_var=want_var)
+            means = np.split(np.asarray(post.mean), splits)
+            vars_ = (np.split(np.asarray(post.var), splits)
+                     if want_var else [None] * len(reqs))
+            done = time.monotonic()
+            for r, m, v in zip(reqs, means, vars_):
+                r.future.set_result(
+                    post._replace(mean=m,
+                                  var=v if r.compute_var else None))
+                self.metrics.record_request(done - r.t_submit)
+            self.metrics.record_batch(len(reqs))
+        except Exception as e:  # noqa: BLE001 — fail every waiter
+            for r in reqs:
+                if not r.future.done():
+                    r.future.set_exception(e)
+        finally:
+            for _ in reqs:
+                self._q.task_done()

@@ -1,0 +1,87 @@
+"""Serving metrics: request latency percentiles + batching counters.
+
+Thread-safe accumulators shared by the batcher worker and the submitting
+threads.  ``snapshot()`` is what the CLI prints and what
+``benchmarks/kernel_bench.run_serve`` turns into the BENCH_serve.json
+QPS rows (p50/p99 present for every row — gated by
+``check_bench.check_serve``).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import numpy as np
+
+
+class ServeMetrics:
+    """Latency recorder + coalescing counters for one server."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._latencies_s: list = []       # per-request submit -> done
+        self._batch_sizes: list = []       # coalesced requests per launch
+        self.requests = 0
+        self.batches = 0
+        self.registry_hits = 0
+        self.registry_misses = 0
+        self.appends = 0
+        self.refits = 0
+
+    # ---- recording (called from batcher / registry / server) ----------
+
+    def record_request(self, latency_s: float):
+        with self._lock:
+            self.requests += 1
+            self._latencies_s.append(float(latency_s))
+
+    def record_batch(self, size: int):
+        with self._lock:
+            self.batches += 1
+            self._batch_sizes.append(int(size))
+
+    def record_append(self):
+        with self._lock:
+            self.appends += 1
+
+    def record_refit(self):
+        with self._lock:
+            self.refits += 1
+
+    # ---- reading ------------------------------------------------------
+
+    def percentile_ms(self, q: float) -> Optional[float]:
+        with self._lock:
+            lats = list(self._latencies_s)
+        if not lats:
+            return None
+        return float(np.percentile(np.asarray(lats), q) * 1e3)
+
+    def mean_batch(self) -> Optional[float]:
+        with self._lock:
+            sizes = list(self._batch_sizes)
+        if not sizes:
+            return None
+        return float(np.mean(sizes))
+
+    def snapshot(self) -> dict:
+        return {
+            "requests": self.requests,
+            "batches": self.batches,
+            "p50_ms": self.percentile_ms(50.0),
+            "p99_ms": self.percentile_ms(99.0),
+            "mean_batch": self.mean_batch(),
+            "registry_hits": self.registry_hits,
+            "registry_misses": self.registry_misses,
+            "appends": self.appends,
+            "refits": self.refits,
+        }
+
+    def reset_latencies(self):
+        """Start a fresh measurement window (benchmark QPS sweeps)."""
+        with self._lock:
+            self._latencies_s.clear()
+            self._batch_sizes.clear()
+            self.requests = 0
+            self.batches = 0

@@ -1,0 +1,295 @@
+"""Online (near-)grid GP state: incremental SKI updates for streaming data.
+
+The paper's tidal-gauge case is a live sensor feed; this module keeps one
+model's data state current as observations stream in WITHOUT re-binding:
+
+* **Selection-row / interp-row W updates** — appended points get their
+  (s,) interpolation rows computed against the existing inducing grid in
+  O(s) host work each (`data.grid.interp_weights` on the new points only);
+  the (n, s) CSR-style W simply grows rows.  On-grid points stay one-hot,
+  so gappy streams keep W a selection matrix and the surrogate exact.
+* **First-column / spectrum extension** — points past the grid's right
+  edge extend the grid; the Toeplitz first column of the grown grid shares
+  its prefix with the cached one, so only the new lags are evaluated
+  (`ToeplitzOperator.first_column_extend`) and the cached rfft of the
+  circulant embedding refreshes in O(m log m) — never a re-probe.
+* **Sliding-window eviction** — a bounded `window` drops the oldest rows
+  of (x, y, W) and trims now-unused leading grid cells (shifting the W
+  indices), so the traced posterior program stays O(window) with no (n, n)
+  buffer ever materialised.
+* **Warm-started posterior state** — after an append, alpha = K^{-1}y is
+  re-solved by CG on the RESIDUAL correction around the zero-padded old
+  alpha: r = y − (K+sigma_n^2 I) alpha_pad is small, so a handful of
+  iterations polish the solve instead of starting cold.
+
+Staleness accounting (`appended_since_fit` vs `refit_frac`) drives the
+periodic hyperparameter refit in `registry.ServedModel`.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import engine as eng
+from ..core import iterative as it
+from ..data.grid import GRID_MARGIN, build_inducing_grid, interp_weights
+from ..gp.spec import GPSpec
+from ..kernels import operators as kopers
+
+
+class OnlineGPState:
+    """One model's streaming data + incrementally-maintained SKI geometry.
+
+    Construction does the cold host-side build once (inducing grid + W for
+    the seed data, exactly as ``GP.bind`` would); every later ``append``
+    is incremental.  ``theta`` is managed by the owner (ServedModel): the
+    bound per-theta state (embedding spectrum, alpha, grid-space
+    k(x*, x) source ``ugrid``) is rebuilt lazily on access and reused
+    across every predict until data or theta change.
+    """
+
+    def __init__(self, spec: GPSpec, x, y, window: Optional[int] = None,
+                 order: str = "cubic"):
+        self.spec = spec
+        self.kind = eng.resolve_kind(spec.cov)
+        self.sigma_n = float(spec.noise.sigma_n)
+        self.jitter = float(spec.noise.jitter_for("iterative"))
+        self.order = order
+        self.window = int(window) if window else None
+        opts = spec.solver.opts
+        self.cg_tol = float(opts.cg_tol)
+        self.cg_max_iter = int(opts.cg_max_iter)
+        self.fused = opts.fused
+
+        x = np.asarray(x, np.float64)
+        y = np.asarray(y, np.float64)
+        if x.ndim != 1 or x.shape != y.shape or x.shape[0] < 2:
+            raise ValueError("OnlineGPState needs matching 1-D x/y, n >= 2")
+        if np.any(np.diff(x) <= 0):
+            raise ValueError("streaming x must be strictly ascending")
+        grid = build_inducing_grid(x)
+        self.h = float(grid[1] - grid[0])
+        self.origin = float(grid[0])
+        self.m_grid = int(grid.shape[0])
+        idx, w = interp_weights(x, grid, order=order)
+        self.x = x
+        self.y = y
+        self.idx = np.asarray(idx, np.int32)
+        self.w = np.asarray(w, np.float64)
+
+        self.theta = None
+        self.appended_since_fit = 0
+        self.evicted = 0
+        self.last_cg_iters = 0
+        self._op = None            # assembled SKIOperator view (lazy)
+        self._bound = None         # per-(theta, data) spectrum/alpha state
+        self._alpha_prev = None    # warm-start source across appends
+        self._tcol = None          # cached grid first column (per theta)
+        self._tcol_theta = None
+
+    # ------------------------------------------------------------------
+    # geometry
+    # ------------------------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return int(self.x.shape[0])
+
+    @property
+    def grid(self) -> np.ndarray:
+        return self.origin + self.h * np.arange(self.m_grid)
+
+    def operator(self) -> kopers.SKIOperator:
+        """The assembled SKI view of the current data state (cached)."""
+        if self._op is None:
+            self._op = kopers.SKIOperator.from_parts(
+                self.kind, self.x, self.sigma_n, self.jitter, self.grid,
+                self.idx, self.w, order=self.order, fused=self.fused)
+        return self._op
+
+    def set_theta(self, theta):
+        self.theta = jnp.asarray(theta)
+        self._bound = None
+        self.appended_since_fit = 0
+
+    # ------------------------------------------------------------------
+    # streaming updates
+    # ------------------------------------------------------------------
+
+    def append(self, x_new, y_new) -> dict:
+        """Absorb one append batch; O(batch) W rows + O(m log m) spectrum.
+
+        New points must continue the stream (strictly after the current
+        last x).  Returns counters for telemetry.
+        """
+        x_new = np.atleast_1d(np.asarray(x_new, np.float64))
+        y_new = np.atleast_1d(np.asarray(y_new, np.float64))
+        if x_new.shape != y_new.shape or x_new.ndim != 1:
+            raise ValueError("append needs matching 1-D x/y batches")
+        if x_new.size == 0:
+            return {"appended": 0, "evicted": 0, "grid_extended": 0}
+        if np.any(np.diff(x_new) <= 0) or x_new[0] <= self.x[-1]:
+            raise ValueError(
+                "append batch must be strictly ascending and strictly "
+                "after the current last observation (streaming order)")
+
+        # grid extension at the right edge: keep every cubic stencil
+        # (t in [1, m-2]) inside with the standard margin on top
+        t_max = (float(x_new[-1]) - self.origin) / self.h
+        grown = 0
+        m_need = int(np.ceil(t_max)) + GRID_MARGIN + 1
+        if m_need > self.m_grid:
+            grown = m_need - self.m_grid
+            self.m_grid = m_need
+        idx_new, w_new = interp_weights(x_new, self.grid, order=self.order)
+
+        # carry the old alpha (padded below) as the CG warm start
+        if self._bound is not None and self._bound.get("alpha") is not None:
+            self._alpha_prev = np.asarray(self._bound["alpha"])
+        self.x = np.concatenate([self.x, x_new])
+        self.y = np.concatenate([self.y, y_new])
+        self.idx = np.concatenate([self.idx,
+                                   np.asarray(idx_new, np.int32)])
+        self.w = np.concatenate([self.w, np.asarray(w_new, np.float64)])
+        if self._alpha_prev is not None:
+            self._alpha_prev = np.concatenate(
+                [self._alpha_prev, np.zeros(x_new.size)])
+
+        evicted = 0
+        if self.window is not None and self.n > self.window:
+            evicted = self.n - self.window
+            self.x = self.x[evicted:]
+            self.y = self.y[evicted:]
+            self.idx = self.idx[evicted:]
+            self.w = self.w[evicted:]
+            if self._alpha_prev is not None:
+                self._alpha_prev = self._alpha_prev[evicted:]
+            self.evicted += evicted
+            # trim leading grid cells no row can touch any more, keeping
+            # the usual margin below the lowest referenced cell so test
+            # points near the window edge still have full stencils
+            off = max(0, int(self.idx.min()) - GRID_MARGIN)
+            if off > 0:
+                self.idx = self.idx - np.int32(off)
+                self.origin += off * self.h
+                self.m_grid -= off
+
+        self.appended_since_fit += int(x_new.size)
+        self._op = None
+        self._bound = None
+        return {"appended": int(x_new.size), "evicted": evicted,
+                "grid_extended": grown}
+
+    # ------------------------------------------------------------------
+    # per-theta bound state + posterior
+    # ------------------------------------------------------------------
+
+    def _first_column(self, op, dtype):
+        """The grid first column k(h·[0..m)) with the incremental cache.
+
+        The column depends only on (theta, h, m_grid): left trims truncate
+        the cache, right extensions evaluate ONLY the new lags through
+        ``ToeplitzOperator.first_column_extend`` — the first-column half of
+        the online-update contract (the other half is the O(s) W rows).
+        """
+        theta_key = np.asarray(self.theta).tobytes()
+        if self._tcol is not None and self._tcol_theta == theta_key:
+            t_old = self._tcol[:self.m_grid]
+            t = op._toep.first_column_extend(self.theta, t_old, dtype)
+        else:
+            t = op._toep.first_column(self.theta, dtype)
+        self._tcol = np.asarray(t)
+        self._tcol_theta = theta_key
+        return t
+
+    def _ensure_bound(self):
+        """(Re)build the per-(theta, data) serving state: the bound gram
+        matvec (spectrum hoisted), the warm-started alpha = K^{-1} y, the
+        profiled scale s2 and the grid-space mean source
+        ugrid = K_grid W^T alpha (making every mean evaluation a pure
+        O(n* s) gather — zero FFTs per request)."""
+        if self._bound is not None:
+            return self._bound
+        if self.theta is None:
+            raise ValueError("no hyperparameters set; call set_theta() "
+                             "or fit through the owning ServedModel")
+        op = self.operator()
+        theta = self.theta
+        y = jnp.asarray(self.y)
+        t = self._first_column(op, y.dtype)
+        mv = op.bound_gram_matvec(theta, y.dtype, first_column=t)
+        pre = op.circulant_precond(theta)
+
+        if (self._alpha_prev is not None
+                and self._alpha_prev.shape[0] == self.n):
+            a0 = jnp.asarray(self._alpha_prev)
+            r = y - mv(a0)
+            # solve the residual correction to an ABSOLUTE tolerance
+            # matching tol * ||y||: cg_solve's stop is relative to its rhs
+            rnorm = float(jnp.linalg.norm(r))
+            ynorm = max(float(jnp.linalg.norm(y)), 1e-30)
+            tol_eff = min(1.0, self.cg_tol * ynorm / max(rnorm, 1e-30))
+            res = it.cg_solve(mv, r, tol=tol_eff,
+                              max_iter=self.cg_max_iter, precond=pre)
+            alpha = a0 + res.x
+        else:
+            res = it.cg_solve(mv, y, tol=self.cg_tol,
+                              max_iter=self.cg_max_iter, precond=pre)
+            alpha = res.x
+        self.last_cg_iters = int(res.iters)
+        s2 = jnp.maximum(y @ alpha / self.n, 1e-30)
+        ugrid = op._toep.matvec(
+            theta, kopers.interp_scatter(self.idx, self.w, self.m_grid,
+                                         alpha))
+        self._bound = {"op": op, "mv": mv, "pre": pre, "alpha": alpha,
+                       "s2": s2, "ugrid": ugrid}
+        self._alpha_prev = np.asarray(alpha)
+        return self._bound
+
+    @property
+    def alpha(self):
+        return self._ensure_bound()["alpha"]
+
+    @property
+    def sigma2_hat(self):
+        return self._ensure_bound()["s2"]
+
+    def cross_rows(self, xstar) -> Tuple[np.ndarray, np.ndarray]:
+        """Host-side W* rows of the test points on the live grid."""
+        idx_s, w_s = interp_weights(np.asarray(xstar, np.float64),
+                                    self.grid, order=self.order)
+        return np.asarray(idx_s, np.int32), np.asarray(w_s, np.float64)
+
+    def posterior_from_rows(self, idx_s, w_s, compute_var: bool = True,
+                            include_noise: bool = False):
+        """Posterior mean/var from W* rows — trace-safe in (idx_s, w_s).
+
+        mean = W* ugrid (one sparse gather; the grid FFT already happened
+        at bind).  var: k(x, x*) columns via scatter -> grid FFT -> gather,
+        then ONE batched CG for every column together — the launch count
+        of the traced program is independent of how many requests were
+        coalesced (the B-independence acceptance contract).
+        """
+        b = self._ensure_bound()
+        mean = kopers.interp_gather(idx_s, w_s, b["ugrid"])
+        if not compute_var:
+            return mean, None
+        ks = b["op"].cross_columns(self.theta, (idx_s, w_s))
+        wc = it.cg_solve(b["mv"], ks, tol=self.cg_tol,
+                         max_iter=self.cg_max_iter, precond=b["pre"]).x
+        quad = jnp.sum(ks * wc, axis=0)
+        var_unit = 1.0 - quad
+        if include_noise:
+            var_unit = var_unit + self.sigma_n ** 2
+        return mean, b["s2"] * jnp.clip(var_unit, 0.0)
+
+    def posterior(self, xstar, compute_var: bool = True,
+                  include_noise: bool = False):
+        idx_s, w_s = self.cross_rows(xstar)
+        return self.posterior_from_rows(jnp.asarray(idx_s),
+                                        jnp.asarray(w_s),
+                                        compute_var=compute_var,
+                                        include_noise=include_noise)

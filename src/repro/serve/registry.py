@@ -1,0 +1,249 @@
+"""Model registry: bind once per GPSpec, cache bound operators/spectra.
+
+``ModelRegistry`` maps a model name to a :class:`ServedModel` — one
+``GPSpec`` bound to its streaming data state.  Registration does the
+expensive work exactly once (``GP.bind`` host probing + the initial
+hyperparameter fit unless ``theta`` pins one); every later predict rides
+the cached per-theta serving state (embedding spectrum, alpha, grid-space
+mean source) and the compiled padded posterior program.  Re-registering
+the same (name, spec) is a cache HIT and returns the live entry —
+hit/miss counters feed ``serve.metrics``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.predict import Posterior
+from ..gp import GP, GPSpec
+from .metrics import ServeMetrics
+from .online import OnlineGPState
+
+
+def _spec_equal(a: GPSpec, b: GPSpec) -> bool:
+    """Structural spec equality, robust to array-valued boxes."""
+    if a is b:
+        return True
+    try:
+        eq = jax.tree.all(jax.tree.map(
+            lambda u, v: bool(np.all(np.asarray(u) == np.asarray(v))),
+            a, b))
+        return bool(eq)
+    except Exception:
+        return False
+
+
+class ServedModel:
+    """One model's live serving state: session + online data + programs.
+
+    * ``predict_batched`` serves a COALESCED batch of test points through
+      one padded, jit-compiled posterior program — padding to the next
+      power of two keeps the compile cache tiny, and the program's launch
+      count is independent of how many requests were coalesced (the
+      variance CG solves every column together).
+    * ``append`` streams observations through the incremental
+      :class:`OnlineGPState` update path (W rows + first-column/spectrum
+      extension + sliding-window eviction) — never a re-bind.
+    * ``maybe_refit`` applies the staleness rule: once appends since the
+      last fit exceed ``refit_frac`` of the window, hyperparameters are
+      re-fit through ``GP.rebind(...).fit`` (same spec/box, refit keys
+      derived deterministically from the base key so crash/resume replays
+      the identical sequence).
+    """
+
+    def __init__(self, name: str, spec: GPSpec, x, y, key=None,
+                 theta=None, window: Optional[int] = None,
+                 refit_frac: float = 0.25, order: str = "cubic",
+                 metrics: Optional[ServeMetrics] = None):
+        self.name = name
+        self.spec = spec
+        self.refit_frac = float(refit_frac)
+        self.metrics = metrics
+        self.base_key = key if key is not None else jax.random.key(0)
+        self.refit_count = 0
+        self.include_noise = bool(spec.noise.include_noise)
+        self.state = OnlineGPState(spec, x, y, window=window, order=order)
+        # host-side decisions (box, backend, jitter) resolved once; refits
+        # rebind THIS session to the updated data + incremental operator
+        self._sess = GP.bind(spec, self.state.x, self.state.y)
+        self._progs: Dict[tuple, callable] = {}
+        self._version = 0
+        if theta is not None:
+            self.state.set_theta(theta)
+        else:
+            self._fit()
+
+    # ------------------------------------------------------------------
+    # fitting / staleness
+    # ------------------------------------------------------------------
+
+    def _fit(self):
+        fit_key = jax.random.fold_in(self.base_key, self.refit_count)
+        sess = self._sess.rebind(self.state.x, self.state.y,
+                                 op=self.state.operator())
+        fitted = sess.fit(fit_key)
+        self.state.set_theta(fitted.result.theta_hat)
+        self.refit_count += 1
+        self._bump()
+        if self.metrics is not None:
+            self.metrics.record_refit()
+        return fitted
+
+    @property
+    def theta(self):
+        return self.state.theta
+
+    @property
+    def staleness(self) -> float:
+        """Appends since the last fit as a fraction of the live data."""
+        return self.state.appended_since_fit / max(self.state.n, 1)
+
+    def needs_refit(self) -> bool:
+        return self.staleness >= self.refit_frac
+
+    def maybe_refit(self, force: bool = False) -> bool:
+        if force or self.needs_refit():
+            self._fit()
+            return True
+        return False
+
+    # ------------------------------------------------------------------
+    # streaming
+    # ------------------------------------------------------------------
+
+    def append(self, x_new, y_new) -> dict:
+        out = self.state.append(x_new, y_new)
+        self._bump()
+        if self.metrics is not None:
+            self.metrics.record_append()
+        return out
+
+    def _bump(self):
+        self._version += 1
+        self._progs.clear()
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+
+    def _program(self, n_pad: int, compute_var: bool):
+        """The compiled posterior program for ``n_pad`` padded points.
+
+        Built (and the per-theta bound state ensured) OUTSIDE the trace,
+        so the traced program contains only the request-time math: sparse
+        gather for the mean, cross columns + one batched CG for the
+        variance.  Cached per (data/theta version, pad size, var flag).
+        """
+        key = (self._version, n_pad, compute_var)
+        fn = self._progs.get(key)
+        if fn is None:
+            self.state._ensure_bound()      # bind-time work stays out
+            state, inc = self.state, self.include_noise
+
+            def f(idx_s, w_s):
+                mean, var = state.posterior_from_rows(
+                    idx_s, w_s, compute_var=compute_var,
+                    include_noise=inc)
+                return (mean,) if var is None else (mean, var)
+
+            fn = jax.jit(f)
+            self._progs[key] = fn
+        return fn
+
+    def cross_rows_padded(self, xstar, n_pad: Optional[int] = None):
+        """Host-side W* rows padded to a power-of-two row count."""
+        idx_s, w_s = self.state.cross_rows(xstar)
+        p = idx_s.shape[0]
+        if n_pad is None:
+            n_pad = 1 << max(int(np.ceil(np.log2(max(p, 1)))), 0)
+        if p < n_pad:
+            pad = n_pad - p
+            idx_s = np.concatenate([idx_s, np.repeat(idx_s[-1:], pad, 0)])
+            w_s = np.concatenate([w_s, np.repeat(w_s[-1:], pad, 0)])
+        return jnp.asarray(idx_s), jnp.asarray(w_s), p
+
+    def predict_batched(self, xstar, compute_var: bool = True) -> Posterior:
+        """Posterior for one (possibly coalesced) batch of test points."""
+        xstar = np.atleast_1d(np.asarray(xstar, np.float64))
+        idx_s, w_s, p = self.cross_rows_padded(xstar)
+        out = self._program(int(idx_s.shape[0]), compute_var)(idx_s, w_s)
+        mean = out[0][:p]
+        var = out[1][:p] if compute_var else None
+        return Posterior(mean=mean, var=var,
+                         sigma_f_hat=jnp.sqrt(self.state.sigma2_hat))
+
+    # ------------------------------------------------------------------
+    # checkpoint state
+    # ------------------------------------------------------------------
+
+    def checkpoint_tree(self) -> dict:
+        """The arrays that fully determine this entry's serving state:
+        geometry/W/spectrum/alpha all rebuild deterministically from
+        (x, y, theta), and the counters keep the refit-key sequence and
+        staleness accounting identical across a crash/resume."""
+        return {
+            "x": np.asarray(self.state.x),
+            "y": np.asarray(self.state.y),
+            "theta": np.asarray(self.state.theta),
+            "refit_count": np.int64(self.refit_count),
+            "appended_since_fit": np.int64(self.state.appended_since_fit),
+        }
+
+    @classmethod
+    def from_checkpoint(cls, name: str, spec: GPSpec, leaves: dict,
+                        key=None, window: Optional[int] = None,
+                        refit_frac: float = 0.25, order: str = "cubic",
+                        metrics=None) -> "ServedModel":
+        entry = cls(name, spec, leaves["x"], leaves["y"], key=key,
+                    theta=jnp.asarray(leaves["theta"]), window=window,
+                    refit_frac=refit_frac, order=order, metrics=metrics)
+        entry.refit_count = int(leaves["refit_count"])
+        entry.state.appended_since_fit = int(leaves["appended_since_fit"])
+        return entry
+
+
+class ModelRegistry:
+    """name -> ServedModel with bind-once semantics and hit/miss stats."""
+
+    def __init__(self, metrics: Optional[ServeMetrics] = None):
+        self.metrics = metrics if metrics is not None else ServeMetrics()
+        self._models: Dict[str, ServedModel] = {}
+
+    def register(self, name: str, spec: GPSpec, x, y,
+                 **kwargs) -> ServedModel:
+        """Bind (or return the already-bound) entry for (name, spec)."""
+        existing = self._models.get(name)
+        if existing is not None and _spec_equal(existing.spec, spec):
+            self.metrics.registry_hits += 1
+            return existing
+        self.metrics.registry_misses += 1
+        entry = ServedModel(name, spec, x, y, metrics=self.metrics,
+                            **kwargs)
+        self._models[name] = entry
+        return entry
+
+    def get(self, name: str) -> ServedModel:
+        entry = self._models.get(name)
+        if entry is None:
+            self.metrics.registry_misses += 1
+            raise KeyError(f"no model {name!r} registered; "
+                           f"known: {sorted(self._models)}")
+        self.metrics.registry_hits += 1
+        return entry
+
+    def names(self):
+        return sorted(self._models)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._models
+
+    def __len__(self) -> int:
+        return len(self._models)
+
+    def checkpoint_tree(self) -> dict:
+        return {name: entry.checkpoint_tree()
+                for name, entry in sorted(self._models.items())}

@@ -1,0 +1,222 @@
+"""The streaming GP posterior server: registry + batcher + checkpoints.
+
+``PosteriorServer`` composes the pieces of this package into the ROADMAP
+item-1 serving layer:
+
+* ``register(name, spec, x, y, ...)`` — bind once, fit (or pin theta),
+  cache the per-theta serving state;
+* ``predict(name, xstar)`` — enqueue through the cross-request batcher
+  (returns a Future; coalesced into one batched launch per model);
+* ``observe(name, x_new, y_new)`` — stream appends through the online
+  Toeplitz/SKI update path, apply the staleness→refit rule, and write an
+  atomic checkpoint of the registry state at the configured interval;
+* ``PosteriorServer.resume(ckpt_dir, specs, ...)`` — crash-safe restart:
+  rebuild every model from the latest complete checkpoint (geometry, W,
+  spectrum and alpha are deterministic functions of the saved
+  (x, y, theta), and the saved counters keep the refit-key sequence
+  aligned), so posterior means match an uninterrupted run.
+
+CLI demo (the ``repro.serve`` module entry point; the former LM stub at
+``repro.launch.serve`` forwards here with a deprecation warning):
+
+    PYTHONPATH=src python -m repro.serve --n 256 --requests 12 --appends 3
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint import store
+from ..gp import GPSpec, NoiseModel, SolverPolicy
+from ..core.engine import SolverOpts
+from .batcher import RequestBatcher
+from .metrics import ServeMetrics
+from .registry import ModelRegistry, ServedModel
+
+_ENTRY_KEYS = ("x", "y", "theta", "refit_count", "appended_since_fit")
+
+
+class PosteriorServer:
+    """Batched posterior serving with online updates + checkpointing."""
+
+    def __init__(self, ckpt_dir: Optional[str] = None, max_batch: int = 16,
+                 max_wait_s: float = 0.005, ckpt_every: int = 1,
+                 keep_n: int = 3):
+        self.metrics = ServeMetrics()
+        self.registry = ModelRegistry(metrics=self.metrics)
+        self.batcher = RequestBatcher(self.registry, max_batch=max_batch,
+                                      max_wait_s=max_wait_s,
+                                      metrics=self.metrics)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = max(int(ckpt_every), 1)
+        self.keep_n = keep_n
+        self._ckpt_step = 0
+        self._observes = 0
+
+    # ---- lifecycle ----------------------------------------------------
+
+    def start(self) -> "PosteriorServer":
+        self.batcher.start()
+        return self
+
+    def stop(self):
+        self.batcher.stop()
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # ---- models -------------------------------------------------------
+
+    def register(self, name: str, spec: GPSpec, x, y,
+                 **kwargs) -> ServedModel:
+        return self.registry.register(name, spec, x, y, **kwargs)
+
+    def predict(self, name: str, xstar, compute_var: bool = True,
+                wait: bool = False, timeout: Optional[float] = 30.0):
+        """Submit one predict through the batcher.
+
+        Returns the Future (``wait=False``) or the resolved Posterior
+        (``wait=True``; serves inline when no worker thread is running).
+        """
+        fut = self.batcher.submit(name, xstar, compute_var=compute_var)
+        if not wait:
+            return fut
+        worker = self.batcher._worker
+        if worker is None or not worker.is_alive():
+            self.batcher.run_pending()
+        return fut.result(timeout=timeout)
+
+    # ---- streaming + checkpoints --------------------------------------
+
+    def observe(self, name: str, x_new, y_new) -> dict:
+        """Stream one append batch into a model; refit on staleness and
+        checkpoint at the configured interval (atomic save)."""
+        entry = self.registry.get(name)
+        out = entry.append(x_new, y_new)
+        out["refitted"] = entry.maybe_refit()
+        self._observes += 1
+        if self.ckpt_dir is not None \
+                and self._observes % self.ckpt_every == 0:
+            out["ckpt_step"] = self.checkpoint()
+        return out
+
+    def checkpoint(self) -> int:
+        if self.ckpt_dir is None:
+            raise ValueError("server was built without ckpt_dir")
+        self._ckpt_step += 1
+        store.save(self.ckpt_dir, self._ckpt_step,
+                   self.registry.checkpoint_tree(), keep_n=self.keep_n)
+        return self._ckpt_step
+
+    @classmethod
+    def resume(cls, ckpt_dir: str, specs: Dict[str, GPSpec],
+               model_kwargs: Optional[Dict[str, dict]] = None,
+               **server_kwargs) -> "PosteriorServer":
+        """Rebuild a server from the latest complete checkpoint.
+
+        ``specs`` names the models to restore (specs themselves are code,
+        not checkpoint payload); ``model_kwargs`` optionally re-supplies
+        per-model registration options (key=, window=, refit_frac=) so
+        the refit-key sequence continues exactly where it stopped.
+        """
+        example = {name: {k: np.zeros(0) for k in _ENTRY_KEYS}
+                   for name in specs}
+        got = store.restore_latest(ckpt_dir, example)
+        if got is None:
+            raise FileNotFoundError(
+                f"no complete checkpoint under {ckpt_dir}")
+        step, tree = got
+        srv = cls(ckpt_dir=ckpt_dir, **server_kwargs)
+        srv._ckpt_step = step
+        kw = model_kwargs or {}
+        for name, spec in specs.items():
+            entry = ServedModel.from_checkpoint(
+                name, spec, tree[name], metrics=srv.metrics,
+                **kw.get(name, {}))
+            srv.registry._models[name] = entry
+        return srv
+
+
+# ---------------------------------------------------------------------------
+# CLI demo
+# ---------------------------------------------------------------------------
+
+def _demo_data(n: int, drop: float, seed: int):
+    rng = np.random.default_rng(seed)
+    xg = np.arange(int(n / (1.0 - drop)) + 1, dtype=np.float64) * 0.5
+    keep = np.sort(rng.choice(xg.size, size=n, replace=False))
+    x = xg[keep]
+    y = (np.sin(0.3 * x) + 0.4 * np.sin(0.11 * x)
+         + 0.1 * rng.standard_normal(n))
+    return x, y
+
+
+def main(argv=None):
+    """Serving demo on a gappy sensor grid: batch of concurrent predicts,
+    streamed appends with online updates, checkpoint + latency stats.
+    Returns the stats dict (used by the smoke test)."""
+    ap = argparse.ArgumentParser(
+        description="streaming GP posterior serving demo")
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--points", type=int, default=8)
+    ap.add_argument("--appends", type=int, default=3)
+    ap.add_argument("--append-size", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-wait-ms", type=float, default=5.0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    # tolerate legacy repro.launch.serve LM flags (deprecation shim)
+    args, _unknown = ap.parse_known_args(argv)
+
+    x, y = _demo_data(args.n, drop=0.1, seed=args.seed)
+    spec = GPSpec(kernel="se", noise=NoiseModel(sigma_n=0.1),
+                  solver=SolverPolicy(backend="iterative", n_starts=2,
+                                      max_iters=20,
+                                      opts=SolverOpts(cg_tol=1e-8)))
+    srv = PosteriorServer(ckpt_dir=args.ckpt_dir,
+                          max_batch=args.max_batch,
+                          max_wait_s=args.max_wait_ms * 1e-3)
+    entry = srv.register("sensor", spec, x, y,
+                         key=jax.random.key(args.seed), window=4 * args.n)
+    print(f"registered 'sensor': n={entry.state.n} "
+          f"theta={np.asarray(entry.theta).round(3).tolist()}")
+
+    with srv:
+        rng = np.random.default_rng(args.seed + 1)
+        futs = []
+        for _ in range(args.requests):
+            lo = rng.uniform(float(x[0]), float(x[-1]) * 0.8)
+            xs = np.linspace(lo, lo + 3.0, args.points)
+            futs.append(srv.predict("sensor", xs))
+        for f in futs:
+            f.result(timeout=60.0)
+
+        h = float(x[1] - x[0]) if x[1] - x[0] > 0 else 0.5
+        for k in range(args.appends):
+            x0 = float(entry.state.x[-1])
+            xa = x0 + 0.5 * np.arange(1, args.append_size + 1)
+            ya = (np.sin(0.3 * xa) + 0.4 * np.sin(0.11 * xa)
+                  + 0.1 * rng.standard_normal(xa.size))
+            out = srv.observe("sensor", xa, ya)
+            print(f"append {k}: +{out['appended']} "
+                  f"evicted={out['evicted']} refit={out['refitted']}")
+            srv.predict("sensor", xa[: args.points],
+                        wait=True, timeout=60.0)
+
+    stats = srv.metrics.snapshot()
+    stats["n_final"] = entry.state.n
+    print("serve stats:", {k: (round(v, 3) if isinstance(v, float) else v)
+                           for k, v in stats.items() if v is not None})
+    return stats
+
+
+if __name__ == "__main__":
+    main()

@@ -492,7 +492,7 @@ GP_PUBLIC_API = [
 
 GP_SESSION_METHODS = [
     "bind", "cov", "fit", "log_evidence", "log_likelihood", "n",
-    "operator_name", "predict", "sample", "theta_hat",
+    "operator_name", "predict", "rebind", "sample", "theta_hat",
 ]
 
 GPSPEC_FIELDS = ["kernel", "box", "noise", "solver"]

@@ -1,0 +1,455 @@
+"""The streaming GP prediction service (DESIGN.md §15).
+
+Covers the serving tentpole end to end:
+
+* online-update correctness — streamed appends give the SAME posterior as
+  a cold re-bind on the concatenated data (exact and gappy grids,
+  rtol 1e-6), with the incremental first-column/W-row paths exercised;
+* the B-independence acceptance contract — a jaxpr count certifying that
+  serving B coalesced requests costs the same number of FFT/pallas
+  launches per CG iteration as serving one;
+* sliding-window eviction — the traced posterior program stays free of
+  (n, n)-sized buffers and the grid is trimmed on the left;
+* registry bind-once semantics (hit/miss counters), batcher determinism
+  under a seeded concurrent load, and the crash/resume e2e: >= 3 streamed
+  append batches, a killed server, and a checkpoint resume whose
+  posterior means match the uninterrupted run;
+* checkpoint store hardening (numeric step sort, empty-pytree round trip,
+  ``restore_latest``) and the ``GP.rebind`` session hook.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.core.engine import SolverOpts
+from repro.gp import GP, GPSpec, NoiseModel, SolverPolicy
+from repro.kernels import operators as OPS
+from repro.serve import (ModelRegistry, OnlineGPState, PosteriorServer,
+                         RequestBatcher, ServeMetrics)
+
+SIGMA_N = 0.1
+THETA = jnp.asarray([np.log(4.0)])
+
+
+def _spec(cg_tol=1e-10, operator=None, **solver_kw):
+    return GPSpec(kernel="se", noise=NoiseModel(sigma_n=SIGMA_N),
+                  solver=SolverPolicy(backend="iterative",
+                                      opts=SolverOpts(cg_tol=cg_tol,
+                                                      operator=operator),
+                                      **solver_kw))
+
+
+def _gappy(n, seed=0, h=0.5, drop=0.1):
+    rng = np.random.default_rng(seed)
+    xg = np.arange(int(n / (1.0 - drop)) + 1, dtype=np.float64) * h
+    x = xg[np.sort(rng.choice(xg.size, size=n, replace=False))]
+    y = (np.sin(0.3 * x) + 0.4 * np.sin(0.11 * x)
+         + 0.1 * rng.standard_normal(n))
+    return x, y
+
+
+def _exact(n, h=0.5, seed=0):
+    rng = np.random.default_rng(seed)
+    x = np.arange(n, dtype=np.float64) * h
+    y = np.sin(0.3 * x) + 0.1 * rng.standard_normal(n)
+    return x, y
+
+
+def _stream_tail(x_last, k, seed, h=0.5):
+    rng = np.random.default_rng(seed)
+    xa = x_last + h * np.arange(1, k + 1)
+    ya = np.sin(0.3 * xa) + 0.1 * rng.standard_normal(k)
+    return xa, ya
+
+
+def _count_prims(closed_jaxpr, names):
+    """Total occurrences of each primitive, recursing into sub-jaxprs
+    (while/cond/scan bodies), so one count covers the whole program."""
+    counts = dict.fromkeys(names, 0)
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name in counts:
+                counts[eqn.primitive.name] += 1
+            for v in eqn.params.values():
+                for sub in (v if isinstance(v, (list, tuple)) else [v]):
+                    if hasattr(sub, "jaxpr"):
+                        walk(sub.jaxpr)
+                    elif hasattr(sub, "eqns"):
+                        walk(sub)
+
+    walk(closed_jaxpr.jaxpr)
+    return counts
+
+
+def _all_avals(closed_jaxpr):
+    out = []
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            out.extend(v.aval for v in eqn.outvars)
+            for v in eqn.params.values():
+                for sub in (v if isinstance(v, (list, tuple)) else [v]):
+                    if hasattr(sub, "jaxpr"):
+                        walk(sub.jaxpr)
+                    elif hasattr(sub, "eqns"):
+                        walk(sub)
+
+    walk(closed_jaxpr.jaxpr)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Online updates == cold re-bind
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make", [_exact, _gappy],
+                         ids=["exact_grid", "gappy_grid"])
+def test_streamed_append_matches_cold_rebind(make):
+    """Three streamed append batches, then predict: mean and variance
+    agree with a cold ``GP.bind`` on the concatenated data to 1e-6 —
+    the incremental W rows + first-column extension lose nothing.
+
+    The cold reference is pinned to the SAME SKI surrogate (on an exact
+    grid auto-select would pick the plain Toeplitz operator, whose exact
+    off-grid cross-covariances differ from ANY interpolated serving path
+    by the O(h^4) interpolation error, not by anything incremental)."""
+    x, y = make(128)
+    st = OnlineGPState(_spec(), x, y)
+    st.set_theta(THETA)
+    st.posterior(np.linspace(x[5], x[20], 8))     # prime the caches
+    for k in range(3):
+        xa, ya = _stream_tail(float(st.x[-1]), 16, seed=10 + k)
+        st.append(xa, ya)
+        x, y = np.concatenate([x, xa]), np.concatenate([y, ya])
+    xq = np.linspace(x[10], x[-5], 32)
+    mean, var = st.posterior(xq)
+    cold = GP.bind(_spec(operator="ski"), x, y).predict(
+        xq, theta=THETA, compute_var=True)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(cold.mean),
+                               rtol=1e-6, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(var), np.asarray(cold.var),
+                               rtol=1e-6, atol=1e-9)
+
+
+def test_append_validates_streaming_order():
+    x, y = _exact(32)
+    st = OnlineGPState(_spec(), x, y)
+    with pytest.raises(ValueError, match="streaming order"):
+        st.append(np.array([x[-1]]), np.array([0.0]))   # not strictly after
+    with pytest.raises(ValueError, match="streaming order"):
+        st.append(np.array([x[-1] + 1.0, x[-1] + 0.5]), np.zeros(2))
+
+
+def test_first_column_extend_matches_cold():
+    """Right-edge extension evaluates only the new lags, bitwise equal to
+    a cold first-column evaluation on the grown grid."""
+    g1 = np.arange(64, dtype=np.float64) * 0.5
+    g2 = np.arange(96, dtype=np.float64) * 0.5
+    t1 = OPS.ToeplitzOperator("se", g1).first_column(THETA, jnp.float64)
+    toep2 = OPS.ToeplitzOperator("se", g2)
+    t2 = toep2.first_column_extend(THETA, t1, jnp.float64)
+    np.testing.assert_array_equal(np.asarray(t2),
+                                  np.asarray(toep2.first_column(
+                                      THETA, jnp.float64)))
+    with pytest.raises(ValueError):
+        toep2.first_column_extend(THETA, np.zeros(97), jnp.float64)
+
+
+def test_ski_from_parts_matches_constructor():
+    """The incremental assembly path builds the operator the constructor
+    would have built: same geometry, same matvec, selection detected."""
+    x, _ = _gappy(96, seed=3)
+    from repro.data.grid import build_inducing_grid, interp_weights
+    grid = np.asarray(build_inducing_grid(x))
+    idx, w = interp_weights(x, grid)
+    a = OPS.SKIOperator("se", x, SIGMA_N, 1e-8, grid)
+    b = OPS.SKIOperator.from_parts("se", x, SIGMA_N, 1e-8, grid,
+                                   np.asarray(idx), np.asarray(w))
+    assert (a._sel_cells is None) == (b._sel_cells is None)
+    v = jnp.asarray(np.random.default_rng(0).standard_normal(x.size))
+    np.testing.assert_array_equal(
+        np.asarray(a.gram_matvec(THETA, v[:, None])),
+        np.asarray(b.gram_matvec(THETA, v[:, None])))
+
+
+# ---------------------------------------------------------------------------
+# B-independence: launch count of the coalesced program
+# ---------------------------------------------------------------------------
+
+def test_coalesced_launch_count_independent_of_batch():
+    """THE acceptance contract: the posterior program serving B coalesced
+    requests contains exactly as many fft / pallas launches as the B=1
+    program — the variance CG solves all B x points columns in one
+    batched matvec per iteration, so coalescing costs no extra launches."""
+    x, y = _gappy(128, seed=1)
+    st = OnlineGPState(_spec(), x, y)
+    st.set_theta(THETA)
+    st._ensure_bound()
+
+    def program(idx_s, w_s):
+        return st.posterior_from_rows(idx_s, w_s, compute_var=True)
+
+    counts = {}
+    for B in (1, 8):
+        idx_s, w_s = st.cross_rows(np.linspace(x[4], x[-4], 8 * B))
+        jx = jax.make_jaxpr(program)(jnp.asarray(idx_s), jnp.asarray(w_s))
+        counts[B] = _count_prims(jx, ["fft", "pallas_call"])
+    assert counts[1]["fft"] > 0            # the FFT path is actually used
+    assert counts[8] == counts[1]
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window eviction
+# ---------------------------------------------------------------------------
+
+def test_sliding_window_evicts_and_trims_grid():
+    """Eviction keeps n bounded, advances the grid origin past dropped
+    cells, and the traced posterior program holds no (n, n) buffer."""
+    x, y = _exact(128)
+    st = OnlineGPState(_spec(), x, y, window=128)
+    st.set_theta(THETA)
+    m0, origin0 = st.m_grid, st.origin
+    for k in range(3):
+        xa, ya = _stream_tail(float(st.x[-1]), 32, seed=20 + k)
+        out = st.append(xa, ya)
+        assert out["evicted"] == 32
+    assert st.n == 128
+    assert st.origin > origin0             # leading cells trimmed
+    assert st.evicted == 96
+    # evicted-window posterior still matches a cold bind on the window
+    xq = np.linspace(st.x[10], st.x[-5], 16)
+    mean, var = st.posterior(xq)
+    cold = GP.bind(_spec(operator="ski"), st.x, st.y).predict(
+        xq, theta=THETA, compute_var=True)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(cold.mean),
+                               rtol=1e-6, atol=1e-9)
+    # no (n, n)-sized buffer anywhere in the traced program
+    idx_s, w_s = st.cross_rows(xq)
+    jx = jax.make_jaxpr(
+        lambda i, w: st.posterior_from_rows(i, w, compute_var=True))(
+        jnp.asarray(idx_s), jnp.asarray(w_s))
+    n = st.n
+    for av in _all_avals(jx):
+        shape = getattr(av, "shape", ())
+        if len(shape) == 2:
+            assert min(shape) < n, f"dense-sized buffer {shape}"
+
+
+# ---------------------------------------------------------------------------
+# Registry + batcher
+# ---------------------------------------------------------------------------
+
+def test_registry_hit_miss_counters():
+    x, y = _gappy(96, seed=2)
+    reg = ModelRegistry()
+    spec = _spec()
+    e1 = reg.register("a", spec, x, y, theta=THETA)
+    assert reg.metrics.registry_misses == 1
+    e2 = reg.register("a", spec, x, y, theta=THETA)
+    assert e2 is e1 and reg.metrics.registry_hits == 1
+    # a different spec rebuilds (miss), same name
+    e3 = reg.register("a", _spec(cg_tol=1e-6), x, y, theta=THETA)
+    assert e3 is not e1 and reg.metrics.registry_misses == 2
+    assert reg.get("a") is e3
+    with pytest.raises(KeyError, match="known"):
+        reg.get("missing")
+    assert "a" in reg and len(reg) == 1
+
+
+def test_batcher_coalesces_and_is_deterministic():
+    """A seeded concurrent load served twice from scratch produces
+    bitwise-identical results, each agreeing with sequential serving —
+    and the whole load coalesces into max_batch-bounded launches."""
+    x, y = _gappy(96, seed=4)
+    rng = np.random.default_rng(7)
+    queries = [np.linspace(a, a + 3.0, 8)
+               for a in rng.uniform(x[0], x[-1] - 4.0, 12)]
+
+    def run_once():
+        reg = ModelRegistry()
+        entry = reg.register("m", _spec(), x, y, theta=THETA)
+        bat = RequestBatcher(reg, max_batch=8)
+        futs = [bat.submit("m", q) for q in queries]
+        bat.run_pending()
+        outs = [f.result(timeout=30.0) for f in futs]
+        return entry, bat, [np.asarray(o.mean) for o in outs], \
+            [np.asarray(o.var) for o in outs]
+
+    entry, bat, means1, vars1 = run_once()
+    _, _, means2, vars2 = run_once()
+    for m1, m2 in zip(means1, means2):
+        np.testing.assert_array_equal(m1, m2)
+    for v1, v2 in zip(vars1, vars2):
+        np.testing.assert_array_equal(v1, v2)
+    # coalescing really happened: 12 requests, max_batch=8 -> 2 launches
+    assert bat.metrics.requests == 12
+    assert bat.metrics.batches == 2
+    assert bat.metrics.mean_batch() == 6.0
+    # and batched == sequential (the variance CG stops on the JOINT
+    # column residual when coalesced, so agreement is to CG tolerance,
+    # not bitwise)
+    for q, m1, v1 in zip(queries, means1, vars1):
+        p = entry.predict_batched(q)
+        np.testing.assert_allclose(m1, np.asarray(p.mean), rtol=1e-12)
+        np.testing.assert_allclose(v1, np.asarray(p.var), rtol=1e-6)
+
+
+def test_batcher_worker_thread_serves_all():
+    """The async worker path: start(), submit under load, stop(drain)."""
+    x, y = _gappy(96, seed=5)
+    reg = ModelRegistry()
+    reg.register("m", _spec(), x, y, theta=THETA)
+    bat = RequestBatcher(reg, max_batch=4, max_wait_s=0.002).start()
+    futs = [bat.submit("m", np.linspace(3.0 + i, 6.0 + i, 8))
+            for i in range(9)]
+    outs = [f.result(timeout=30.0) for f in futs]
+    bat.stop()
+    assert all(np.all(np.isfinite(np.asarray(o.mean))) for o in outs)
+    assert bat.metrics.requests == 9
+
+
+def test_batcher_propagates_errors():
+    reg = ModelRegistry()
+    bat = RequestBatcher(reg)
+    fut = bat.submit("nope", np.arange(4.0))
+    bat.run_pending()
+    with pytest.raises(KeyError):
+        fut.result(timeout=5.0)
+
+
+# ---------------------------------------------------------------------------
+# Crash / resume e2e (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_server_crash_resume_matches_uninterrupted(tmp_path):
+    """Stream 3 append batches with per-observe checkpoints, 'crash' the
+    server after the second, resume from disk, stream the third — the
+    resumed posterior means match the uninterrupted run."""
+    x, y = _gappy(128, seed=6)
+    spec = _spec()
+    tails = [_stream_tail(0.0, 16, seed=30 + k) for k in range(3)]
+
+    def stream(srv, upto, x_last):
+        for k in range(upto):
+            xa, ya = tails[k]
+            xa = xa + x_last                  # chain the batches
+            srv.observe("m", xa, ya)
+            x_last = float(xa[-1])
+        return x_last
+
+    xq = None
+    # uninterrupted reference
+    srv_u = PosteriorServer()
+    srv_u.register("m", spec, x, y, theta=THETA, refit_frac=10.0)
+    last = stream(srv_u, 3, float(x[-1]))
+    xq = np.linspace(x[20], last - 2.0, 24)
+    mean_u = np.asarray(srv_u.predict("m", xq, wait=True).mean)
+
+    # crashed-and-resumed run
+    ck = str(tmp_path / "ck")
+    srv_a = PosteriorServer(ckpt_dir=ck)
+    srv_a.register("m", spec, x, y, theta=THETA, refit_frac=10.0)
+    mid = stream(srv_a, 2, float(x[-1]))
+    del srv_a                                  # crash: nothing flushed
+    srv_b = PosteriorServer.resume(
+        ck, {"m": spec}, model_kwargs={"m": {"refit_frac": 10.0}})
+    entry = srv_b.registry.get("m")
+    assert entry.state.n == 128 + 32           # both streamed batches live
+    xa, ya = tails[2]
+    srv_b.observe("m", xa + mid, ya)
+    mean_b = np.asarray(srv_b.predict("m", xq, wait=True).mean)
+    np.testing.assert_allclose(mean_b, mean_u, rtol=1e-6, atol=1e-9)
+    # counters survived the round trip
+    assert entry.state.appended_since_fit == 48
+
+
+def test_server_resume_missing_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        PosteriorServer.resume(str(tmp_path / "none"), {"m": _spec()})
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint store hardening (satellite)
+# ---------------------------------------------------------------------------
+
+def test_store_latest_step_numeric_sort(tmp_path):
+    d = tmp_path / "ck"
+    store.save(d, 9, {"a": np.arange(3.0)}, keep_n=None)
+    store.save(d, 10, {"a": np.arange(3.0)}, keep_n=None)
+    # unpadded + junk dirs must not confuse the numeric sort
+    (d / "step_7").mkdir()
+    (d / "step_junk").mkdir()
+    (d / "step_").mkdir()
+    assert store.latest_step(d) == 10
+    step, tree = store.restore_latest(d, {"a": np.zeros(0)})
+    assert step == 10
+    np.testing.assert_array_equal(tree["a"], np.arange(3.0))
+
+
+def test_store_empty_tree_round_trip(tmp_path):
+    """Zero-leaf pytrees save and restore cleanly (server with no models
+    yet, or a tree of only static aux data)."""
+    d = tmp_path / "ck"
+    store.save(d, 1, {}, keep_n=None)
+    assert store.restore(d, {}) == {}
+    got = store.restore_latest(d, {})
+    assert got == (1, {})
+
+
+def test_store_restore_latest_none_and_leaf_mismatch(tmp_path):
+    assert store.restore_latest(tmp_path / "nothing", {"a": 0.0}) is None
+    d = tmp_path / "ck"
+    store.save(d, 1, {"a": np.arange(2.0)}, keep_n=None)
+    with pytest.raises(ValueError, match="leaves"):
+        store.restore(d, {"a": 0.0, "b": 0.0})
+
+
+# ---------------------------------------------------------------------------
+# Session rebind hook (satellite)
+# ---------------------------------------------------------------------------
+
+def test_gp_rebind_matches_fresh_bind():
+    """rebind keeps spec/backend/jitter and re-selects (or is handed) the
+    operator for the new data; predictions equal a fresh bind."""
+    x, y = _gappy(96, seed=8)
+    sess = GP.bind(_spec(), x, y)
+    xa, ya = _stream_tail(float(x[-1]), 16, seed=40)
+    x2, y2 = np.concatenate([x, xa]), np.concatenate([y, ya])
+    re = sess.rebind(x2, y2)
+    fresh = GP.bind(_spec(), x2, y2)
+    assert re.operator_name == fresh.operator_name
+    xq = np.linspace(x2[5], x2[-5], 16)
+    pr = re.predict(xq, theta=THETA, compute_var=True)
+    pf = fresh.predict(xq, theta=THETA, compute_var=True)
+    np.testing.assert_allclose(np.asarray(pr.mean), np.asarray(pf.mean),
+                               rtol=1e-10)
+    np.testing.assert_allclose(np.asarray(pr.var), np.asarray(pf.var),
+                               rtol=1e-10)
+    # explicit operator injection is used as-is
+    st = OnlineGPState(_spec(), x2, y2)
+    re2 = sess.rebind(x2, y2, op=st.operator())
+    assert re2.operator_name == "ski"
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_percentiles_and_reset():
+    m = ServeMetrics()
+    assert m.percentile_ms(99.0) is None and m.mean_batch() is None
+    for ms in (1.0, 2.0, 3.0, 100.0):
+        m.record_request(ms * 1e-3)
+    m.record_batch(4)
+    snap = m.snapshot()
+    assert snap["requests"] == 4 and snap["batches"] == 1
+    assert 1.0 <= snap["p50_ms"] <= 3.0
+    assert snap["p99_ms"] > 50.0
+    m.reset_latencies()
+    assert m.snapshot()["p50_ms"] is None

@@ -406,3 +406,59 @@ def test_bank_slq_precond_jittered_returns_none():
     assert bank.structure == "near" and bank._sel_cells is None
     assert bank.bind_slq_precond(jnp.asarray([[0.5], [0.3]]),
                                  jnp.float64) is None
+
+
+# ---------------------------------------------------------------------------
+# Adaptive epoch count (satellite)
+# ---------------------------------------------------------------------------
+
+def _adaptive_problem(n=1024, rank=64):
+    x, y = _irregular(n, seed=9)
+    mk = lambda opts: ST.StochasticSolver(
+        "se", jnp.asarray([np.log(3.0)]), x, y, SIGMA_N,
+        jax.random.key(0), opts=opts)
+    return x, y, mk
+
+
+def test_resolve_stochastic_adaptive_plan():
+    """n_epochs=0 (auto) turns on the residual-driven stop with a tol that
+    rides cg_tol but is floored at 1e-2; explicit n_epochs pins a fixed
+    budget with the untouched default plan fields (pin above relies on
+    that equality)."""
+    auto = ST.resolve_stochastic(E.SolverOpts(), 1 << 14, SIGMA_N**2)
+    assert auto.adaptive and auto.epochs == ST._DEFAULT_EPOCHS
+    assert auto.tol == 0.01
+    loose = ST.resolve_stochastic(E.SolverOpts(cg_tol=0.05), 1 << 14,
+                                  SIGMA_N**2)
+    assert loose.adaptive and loose.tol == 0.05
+    fixed = ST.resolve_stochastic(E.SolverOpts(n_epochs=5), 1 << 14,
+                                  SIGMA_N**2)
+    assert not fixed.adaptive and fixed.epochs == 5 and fixed.tol == 0.01
+
+
+def test_adaptive_epochs_no_regression_vs_fixed_budget():
+    """The adaptive stop never ships a worse solve than the fixed-budget
+    iteration: its exact relative residual is within the plan tol or
+    matches the 12-sweep run.  On this well-conditioned problem the
+    Woodbury warm start already converges, so the adaptive path must also
+    demonstrate the payoff — (near-)zero sweeps instead of 12."""
+    _x, y, mk = _adaptive_problem()
+    sa = mk(E.SolverOpts(batch_size=128, nystrom_rank=64))
+    sf = mk(E.SolverOpts(batch_size=128, nystrom_rank=64, n_epochs=12))
+    assert sa.plan.adaptive and not sf.plan.adaptive
+    aa, af = sa.solve(y), sf.solve(y)
+    ra = float(jnp.linalg.norm(sa._full_matvec(aa[:, None])[:, 0] - y)
+               / jnp.linalg.norm(y))
+    rf = float(jnp.linalg.norm(sf._full_matvec(af[:, None])[:, 0] - y)
+               / jnp.linalg.norm(y))
+    assert ra <= max(sa.plan.tol, rf * 1.001)
+    assert int(sa.last_epochs) <= 2 < int(sf.last_epochs) == 12
+
+
+def test_adaptive_epochs_runs_to_cap_when_hard():
+    """A rank-2 deflation leaves a real residual: the adaptive loop keeps
+    sweeping and is capped at plan.epochs rather than stopping early."""
+    _x, y, mk = _adaptive_problem()
+    sh = mk(E.SolverOpts(batch_size=128, nystrom_rank=2))
+    sh.solve(y)
+    assert int(sh.last_epochs) == sh.plan.epochs

@@ -3,8 +3,12 @@
 1. GP side (the paper): data -> multi-start training -> Laplace model
    comparison picks the generating covariance; prediction interpolates.
 2. LM side (the framework): a reduced arch trains for real steps with
-   checkpoint/restart mid-run, loss decreases; serving generates tokens.
+   checkpoint/restart mid-run, loss decreases.
+3. Serving: the deprecated ``repro.launch.serve`` entry point forwards
+   (with one warning) to the streaming GP server demo in ``repro.serve``.
 """
+
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -55,10 +59,23 @@ def test_lm_train_loss_decreases_with_restart(tmp_path):
     assert len(losses2) <= 61                # resumed, did not start over
 
 
-def test_lm_serve_generates():
-    from repro.launch.serve import main as serve_main
+def test_serve_shim_forwards_with_one_warning():
+    """Legacy entry point: importable, warns ONCE, forwards to the new
+    GP serving CLI — legacy LM flags are tolerated and ignored."""
+    from repro.launch import serve as legacy
 
-    toks = serve_main(["--arch", "qwen3-0.6b", "--batch", "2",
-                       "--prompt-len", "8", "--gen", "8"])
-    assert toks.shape == (2, 8)
-    assert np.all(np.asarray(toks) >= 0)
+    legacy._WARNED = False
+    with pytest.warns(DeprecationWarning, match="repro.serve"):
+        stats = legacy.main(["--arch", "qwen3-0.6b", "--batch", "2",
+                             "--n", "96", "--requests", "4", "--points",
+                             "4", "--appends", "1", "--append-size", "8"])
+    assert stats["requests"] >= 5          # 4 batched + 1 post-append
+    assert stats["batches"] >= 1
+    assert stats["appends"] == 1
+    assert stats["n_final"] == 96 + 8
+    # second call: forwards silently (the warning fired once)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        stats2 = legacy.main(["--n", "96", "--requests", "1",
+                              "--appends", "0"])
+    assert stats2["requests"] >= 1
