@@ -5,6 +5,8 @@ Fails (exit 1) when a headline speedup of the performance work drops
 below the floor at n >= 4096 — the payload keys select the gate:
 
   * fused-vs-unfused SKI gram matvec (``fused_matvec`` rows),
+  * batch-tiled fused sandwich vs the unfused composition at
+    n*b >= 2**19 (``fused_batch_tiled`` rows, DESIGN.md §16),
   * preconditioned-vs-plain CG at matched tolerance
     (``precond_cg_large``),
   * multi-axis Kronecker / ProductSKI vs the O(n^2) Pallas product tile
@@ -48,6 +50,16 @@ def check(payload: dict, min_speedup: float = 1.0,
             failures.append(
                 f"fused-vs-unfused speedup x{r['speedup']:.2f} < "
                 f"x{min_speedup} at n={r['n']}")
+    tiled = payload.get("fused_batch_tiled", [])
+    gated_nb = [r for r in tiled if r["n"] * r["b"] >= (1 << 19)]
+    if tiled and not gated_nb:
+        failures.append("no fused_batch_tiled rows with n*b >= 2**19")
+    for r in gated_nb:
+        if r["speedup"] < min_speedup:
+            failures.append(
+                f"batch-tiled fused-vs-unfused speedup "
+                f"x{r['speedup']:.2f} < x{min_speedup} at n={r['n']} "
+                f"b={r['b']} (n*b={r['n'] * r['b']})")
     cg = payload.get("precond_cg_large")
     if cg is None:
         failures.append("precond_cg_large row missing")

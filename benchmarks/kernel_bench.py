@@ -355,6 +355,61 @@ def run_fused_ski(sizes=(1024, 4096, 8192), b=8, drop=0.1, verbose=True):
     return rows
 
 
+def run_fused_batch_tiled(n_full=18500, bs=(8, 16, 32, 64), drop=0.1,
+                          tile_mb=32, verbose=True):
+    """Batch-tiled fused sandwich vs the unfused composition, sweeping the
+    batch width b at FIXED n (DESIGN.md §16).
+
+    The n·b ≥ 2¹⁹ rows are the tentpole acceptance shape: before the
+    batch-axis grid tiling a launch this wide busted the per-step VMEM
+    budget, so ``fused="auto"`` had to fall back to the unfused
+    composition.  Now ONE ``pallas_call`` streams (L, b_tile) column
+    blocks through the launch grid (the geometry constants stay resident,
+    the v/out blocks double-buffer across steps) and must stay ≥ parity
+    with the composition it replaced — regression-gated by
+    benchmarks/check_bench.py at n·b ≥ 2¹⁹.
+
+    The bench runs at a 32 MB tile budget rather than the 8 MB default:
+    the default is sized for the ~16 MB/core TPU VMEM the kernel ships
+    to, but interpret mode has no VMEM wall and pays pure interpreter
+    overhead per extra grid step (overhead a real Pallas pipeline
+    overlaps with compute), so the CPU gate measures the widest tile a
+    CPU-sized scratchpad admits — the b = 64 row still runs a 2-step
+    grid, so the gated shapes exercise true multi-step tiling.
+    Interleaved-A/B medians as everywhere; interpret-mode caveat as in
+    :func:`run_fused_ski`.
+    """
+    rows = []
+    theta = jnp.asarray([3.2, 1.5, 0.05, 2.8, -0.1], jnp.float32)
+    rng = np.random.default_rng(0)
+    grid = np.arange(n_full, dtype=np.float64) * 2.0
+    x = jnp.asarray(grid[rng.uniform(size=n_full) > drop], jnp.float32)
+    n = int(x.shape[0])
+    fu = opr.SKIOperator("k2", x, 0.1, 1e-8, fused=True, tile_mb=tile_mb)
+    un = opr.SKIOperator("k2", x, 0.1, 1e-8, fused=False)
+    from repro.kernels import ski_fused as skf
+    mv_f = jax.jit(fu.bound_gram_matvec(theta, jnp.float32))
+    mv_u = jax.jit(un.bound_gram_matvec(theta, jnp.float32))
+    for b in bs:
+        v = jnp.asarray(rng.normal(size=(n, b)), jnp.float32)
+        a, bb = mv_u(v), mv_f(v)
+        err = float(jnp.max(jnp.abs(a - bb)) / (jnp.max(jnp.abs(a)) + 1e-30))
+        assert err < 1e-4, f"tiled-fused disagreement at b={b}: {err}"
+        bt = skf.fused_tile_plan(fu.fused_geom, b, 4, tile_mb=tile_mb)
+        bp = b + b % 2
+        steps = (bp + (-bp) % bt) // bt
+        t_u, t_f, speedup = _ab_med(mv_u, mv_f, v, reps=2, trials=7)
+        rows.append({"n": n, "b": b, "nb": n * b, "b_tile": bt,
+                     "tile_mb": tile_mb, "grid_steps": steps, "relerr": err,
+                     "t_unfused_s": t_u, "t_fused_s": t_f,
+                     "speedup": speedup})
+        if verbose:
+            print(f"fused_batch_tiled n={n} b={b:3d} (nb={n*b}): "
+                  f"tile={bt} steps={steps} unfused={t_u*1e3:.1f}ms "
+                  f"fused={t_f*1e3:.1f}ms x{speedup:.2f}", flush=True)
+    return rows
+
+
 def _product_grid(shape, hs=(0.5, 0.25), dtype=np.float32):
     axes = [h * np.arange(m, dtype=np.float64) for m, h in zip(shape, hs)]
     X = np.stack(np.meshgrid(*axes, indexing="ij"), -1)
@@ -814,6 +869,7 @@ def main(json_path="BENCH_operators.json", ski_json_path="BENCH_ski.json",
     tidal_rows = run_tidal_training()
     ski_rows = run_ski()
     fused_rows = run_fused_ski()          # float32: before enable_x64
+    fused_tiled_rows = run_fused_batch_tiled()   # float32 likewise
     kron_rows = run_kron()                # float32: before enable_x64
     prod_ski_row = run_product_ski()
     ski_tidal_rows = run_ski_tidal_training()
@@ -860,6 +916,7 @@ def main(json_path="BENCH_operators.json", ski_json_path="BENCH_ski.json",
         print(f"wrote {ski_json_path}")
     if fused_json_path:
         payload = {"fused_matvec": fused_rows,
+                   "fused_batch_tiled": fused_tiled_rows,
                    "precond_slq": slq_row,
                    "precond_cg_large": cg_row,
                    "policy_tidal": policy_rows,
@@ -868,8 +925,10 @@ def main(json_path="BENCH_operators.json", ski_json_path="BENCH_ski.json",
                            "wall-clock, median-of-trials; fused_matvec "
                            "and precond_cg_large rows at n >= 4096 are "
                            "regression-gated by benchmarks/check_bench.py "
-                           "(speedup >= 1.0).  policy_tidal rows are "
-                           "one-shot INCLUDING jit compilation; "
+                           "(speedup >= 1.0), fused_batch_tiled rows "
+                           "(batch-axis grid tiling, DESIGN.md §16) "
+                           "likewise at n*b >= 2**19.  policy_tidal rows "
+                           "are one-shot INCLUDING jit compilation; "
                            "precond='auto' coincides with the per-size "
                            "winner by construction."}
         with open(fused_json_path, "w") as f:
@@ -944,8 +1003,8 @@ def main(json_path="BENCH_operators.json", ski_json_path="BENCH_ski.json",
             json.dump(payload, f, indent=2)
         print(f"wrote {api_json_path}")
     return rows + [tang] + op_rows + tidal_rows + ski_rows + fused_rows \
-        + kron_rows + ski_tidal_rows + sto_rows + serve_batch_rows \
-        + serve_qps_rows \
+        + fused_tiled_rows + kron_rows + ski_tidal_rows + sto_rows \
+        + serve_batch_rows + serve_qps_rows \
         + [prod_ski_row, api_row, slq_row, cg_row] + policy_rows
 
 

@@ -102,6 +102,13 @@ class SolverOpts(NamedTuple):
     mem_budget_mb: int = 1024   # stochastic backend: per-solve memory
     # budget bounding batch·n row-slab entries and the (n, rank) factor
     # (DESIGN.md §14)
+    momentum: float = 0.0       # stochastic backend: heavy-ball momentum
+    # on the mini-batch epoch loop (0 = off; 0 < mu < 1 carries one (n,)
+    # velocity buffer, step scaled by (1 - mu) so the effective step mass
+    # is unchanged — DESIGN.md §14)
+    fused_tile_mb: int = 0      # fused SKI kernels: per-grid-step VMEM
+    # budget (MB) for the batch-axis column tiling (0 = the
+    # ski_fused.FUSED_TILE_MB default; DESIGN.md §16)
 
 
 # ---------------------------------------------------------------------------
@@ -191,7 +198,7 @@ class IterativeSolver:
         # re-dispatch; otherwise select by structure as before
         self.op = op if op is not None else kopers.select_operator(
             kind, self.x, sigma_n, jitter, operator=opts.operator,
-            fused=opts.fused)
+            fused=opts.fused, tile_mb=opts.fused_tile_mb)
         # the θ-bound apply hoists per-θ spectrum / factor work out of
         # every CG & Lanczos loop body; on a fused SKI operator it is the
         # one-launch Pallas sandwich (DESIGN.md §12)

@@ -201,7 +201,18 @@ class StochasticSolver:
     # ---- the mini-batch iteration -------------------------------------
 
     def _iterate(self, RHS):
-        """Epochs of deflated-preconditioned SGD on (K+σ²I) A = RHS (n,k)."""
+        """Epochs of deflated-preconditioned SGD on (K+σ²I) A = RHS (n,k).
+
+        ``SolverOpts(momentum=mu)`` with 0 < mu < 1 switches every epoch
+        loop to HEAVY-BALL iteration: one extra (n, k) velocity buffer V
+        accumulates the preconditioned update directions with decay mu and
+        the applied step is scaled by (1 − mu), so the steady-state
+        per-gradient step mass  η_b (1 − mu) Σ muᵗ = η_b  matches the
+        plain loop exactly — momentum smooths the mini-batch sampling
+        noise without changing the safe-step-size analysis.  mu = 0 (the
+        default) takes the original code path, host-branched, so it stays
+        bitwise identical to the momentum-free iteration.
+        """
         n, b = self.n, self.plan.batch
         steps = max(n // b, 1)
         noise2 = jnp.asarray(self.noise2, RHS.dtype)
@@ -210,6 +221,9 @@ class StochasticSolver:
         Ud = U * self._dvec.astype(RHS.dtype)[None, :]
         theta, x = self.theta, self.x
         kb = jax.random.fold_in(self.key, 0x57ec)
+        mu = float(self.opts.momentum)
+        mu_t = jnp.asarray(mu, RHS.dtype)
+        eta_mu = (eta_b * (1.0 - mu)).astype(RHS.dtype)
 
         def epoch(e, A):
             perm = jax.random.permutation(jax.random.fold_in(kb, e), n)
@@ -225,6 +239,23 @@ class StochasticSolver:
                 return A + eta_b * (Ud @ (U[rows].T @ g))
 
             return jax.lax.fori_loop(0, steps, step, A)
+
+        def epoch_mu(e, c):
+            perm = jax.random.permutation(jax.random.fold_in(kb, e), n)
+            batches = perm[: steps * b].reshape(steps, b)
+
+            def step(s, c):
+                A, V = c
+                rows = batches[s]
+                xb = jnp.take(x, rows, axis=0)
+                g = (self._rows_mv(theta, xb, x, A)
+                     + noise2 * A[rows] - RHS[rows])
+                # V ← mu V − scatter(g) + U (d ⊙ (U[m]ᵀ g));  A += η(1−mu) V
+                V = (mu_t * V).at[rows].add(-g)
+                V = V + Ud @ (U[rows].T @ g)
+                return A + eta_mu * V, V
+
+            return jax.lax.fori_loop(0, steps, step, c)
 
         # Woodbury(L Lᵀ + σ²I) warm start — helpful ONLY when the Nyström
         # residual E = K − L Lᵀ is small along it (its true residual is
@@ -242,7 +273,11 @@ class StochasticSolver:
             # fixed budget: exactly plan.epochs sweeps, carry is A alone —
             # bitwise identical to the pre-adaptive iteration
             self.last_epochs = jnp.asarray(self.plan.epochs)
-            return jax.lax.fori_loop(0, self.plan.epochs, epoch, A0)
+            if mu == 0.0:
+                return jax.lax.fori_loop(0, self.plan.epochs, epoch, A0)
+            A, _V = jax.lax.fori_loop(0, self.plan.epochs, epoch_mu,
+                                      (A0, jnp.zeros_like(A0)))
+            return A
 
         # Adaptive stop: each epoch already touches every row once, so the
         # mini-batch gradients g (the residual on their rows, evaluated at
@@ -280,8 +315,44 @@ class StochasticSolver:
             return (e < self.plan.epochs) & (rel > tol)
 
         rel0 = jnp.max(jnp.where(worse, rhs_norm, r0_norm) / rhs_norm)
-        e_fin, A, _rel = jax.lax.while_loop(
-            keep_going, epoch_acc, (jnp.asarray(0), A0, rel0))
+        if mu == 0.0:
+            e_fin, A, _rel = jax.lax.while_loop(
+                keep_going, epoch_acc, (jnp.asarray(0), A0, rel0))
+            self.last_epochs = e_fin
+            return A
+
+        # heavy-ball adaptive loop: same residual accumulator and stop
+        # rule, the velocity rides in the while_loop carry so it persists
+        # across epochs (zeroing it per sweep would forfeit the smoothing
+        # exactly where the sampling noise dominates — near the stop)
+        def epoch_acc_mu(carry):
+            e, A, V, _rel = carry
+            perm = jax.random.permutation(jax.random.fold_in(kb, e), n)
+            batches = perm[: steps * b].reshape(steps, b)
+
+            def step(s, c):
+                A, V, acc = c
+                rows = batches[s]
+                xb = jnp.take(x, rows, axis=0)
+                g = (self._rows_mv(theta, xb, x, A)
+                     + noise2 * A[rows] - RHS[rows])
+                V = (mu_t * V).at[rows].add(-g)
+                V = V + Ud @ (U[rows].T @ g)
+                return (A + eta_mu * V, V,
+                        acc + jnp.sum(g * g, axis=0))
+
+            A, V, acc = jax.lax.fori_loop(
+                0, steps, step,
+                (A, V, jnp.zeros(RHS.shape[1], RHS.dtype)))
+            return e + 1, A, V, jnp.max(jnp.sqrt(acc) / rhs_norm)
+
+        def keep_going_mu(carry):
+            e, _A, _V, rel = carry
+            return (e < self.plan.epochs) & (rel > tol)
+
+        e_fin, A, _V, _rel = jax.lax.while_loop(
+            keep_going_mu, epoch_acc_mu,
+            (jnp.asarray(0), A0, jnp.zeros_like(A0), rel0))
         self.last_epochs = e_fin
         return A
 

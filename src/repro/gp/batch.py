@@ -94,7 +94,7 @@ class BankOperator:
 
     def __init__(self, kinds: Sequence[str], x, sigma_n: float = 0.0,
                  jitter: float = 0.0, like: "BankOperator" = None,
-                 fused="auto"):
+                 fused="auto", tile_mb: int = 0):
         splits = [kops.split_kind(k) for k in kinds]    # ValueError: unknown
         ds = {len(s) for s in splits}
         if len(ds) != 1:
@@ -152,6 +152,8 @@ class BankOperator:
             self.fused_geom = None if self.idx is None else \
                 ski_fused.build_fused_geometry(self.idx, self.w,
                                                int(grid.shape[0]))
+        self.fused_tile_mb = int(tile_mb) if like is None \
+            else like.fused_tile_mb
         if like is not None and fused == "auto":
             # derived banks (stats / Laplace modes) inherit the training
             # bank's RESOLVED decision — an explicit SolverOpts(fused=)
@@ -164,8 +166,13 @@ class BankOperator:
             # (mirrors the Toeplitz session path) rather than an error
             self.fused = False
         else:
+            # the anticipated launch width is the WHOLE bank (B members ×
+            # pair-packed columns); the batch-tile plan keeps any width
+            # under the VMEM budget, so "auto" only declines when a single
+            # packed column of this geometry busts it (DESIGN.md §16)
             self.fused = ski_fused.resolve_fused(fused, self.fused_geom,
-                                                 self.n)
+                                                 self.n, b=2 * self.B,
+                                                 tile_mb=self.fused_tile_mb)
         self.grid = grid
         self.m_grid = int(grid.shape[0]) if self.d == 1 \
             else int(np.prod(self.shape))
@@ -356,11 +363,13 @@ class BankOperator:
         T = self.first_columns(thetas, dtype)
         if self.fused:
             geom, n2 = self.fused_geom, self.noise2
+            tile_mb = self.fused_tile_mb
             lams = jax.vmap(
                 lambda t: ski_fused.spectrum_perm(t, geom))(T)  # (B, L)
 
             def mv(V):
-                return ski_fused.fused_bank_matvec(geom, lams, n2, V)
+                return ski_fused.fused_bank_matvec(geom, lams, n2, V,
+                                                   tile_mb=tile_mb)
 
             return mv
         lam = jnp.fft.rfft(_embed(T), axis=-1)              # (B, Lf)
@@ -1055,7 +1064,8 @@ def train_bank(covs: Sequence[Covariance], x, y, sigma_n: float, key,
         z0s.append(jnp.pad(z, ((0, 0), (0, m_max - c.n_params))))
     Z0 = jnp.stack(z0s, axis=1).reshape(R * K, m_max)    # (B, m_max)
 
-    bank = BankOperator(kinds_full, x, sigma_n, jitter, fused=opts.fused)
+    bank = BankOperator(kinds_full, x, sigma_n, jitter, fused=opts.fused,
+                        tile_mb=opts.fused_tile_mb)
     obj = make_bank_objective(bank, box_full, y,
                               jax.random.fold_in(key, 0x5eed), opts)
     run = jax.jit(partial(_ncg_minimize_bank, obj.value_and_grad_z,

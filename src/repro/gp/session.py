@@ -88,9 +88,10 @@ class GP:
                 # the stochastic iteration applies EXACT kernel rows, so
                 # its oracle operator is always the general Pallas tiles
                 operator = "pallas"
-            op = kopers.select_operator(kind, x, float(spec.noise.sigma_n),
-                                        float(jitter), operator=operator,
-                                        fused=spec.solver.opts.fused)
+            op = kopers.select_operator(
+                kind, x, float(spec.noise.sigma_n), float(jitter),
+                operator=operator, fused=spec.solver.opts.fused,
+                tile_mb=spec.solver.opts.fused_tile_mb)
             # three-way auto-dispatch (DESIGN.md §14): data with NO grid
             # structure ("pallas" operator) at large n escalates from the
             # O(n²)-per-CG-iteration exact path to the O(batch·n)-per-step
@@ -130,7 +131,8 @@ class GP:
                 new_op = kopers.select_operator(
                     self.kind, x, float(self.spec.noise.sigma_n),
                     float(self.jitter), operator=operator,
-                    fused=self.spec.solver.opts.fused)
+                    fused=self.spec.solver.opts.fused,
+                    tile_mb=self.spec.solver.opts.fused_tile_mb)
         else:
             new_op = op
         return GP(self.spec, x, y, self.box, self.backend, self.jitter,

@@ -746,7 +746,7 @@ class SKIOperator:
                  jitter: float = 0.0, grid=None,
                  spacing: Optional[float] = None,
                  n_grid: Optional[int] = None, order: str = "cubic",
-                 fused="auto"):
+                 fused="auto", tile_mb: int = 0):
         if grid is None:
             grid = build_inducing_grid(x, spacing=spacing, n_grid=n_grid)
         idx, w = interp_weights(x, grid, order=order)
@@ -767,11 +767,15 @@ class SKIOperator:
         self.w = jnp.asarray(w, self.x.dtype)          # (n, s)
         # fused Pallas sandwich (DESIGN.md §12): banded-W + in-kernel-FFT
         # constants, built host-side once; ``fused`` resolves "auto" by
-        # geometry support and the measured size crossover
+        # geometry support, the measured size crossover, and the batch-tile
+        # VMEM budget (DESIGN.md §16 — SolverOpts(fused_tile_mb=) lands in
+        # ``tile_mb``, 0 = the FUSED_TILE_MB default)
+        self.fused_tile_mb = int(tile_mb)
         self.fused_geom = ski_fused.build_fused_geometry(idx, w,
                                                          self.m_grid)
         self.fused = ski_fused.resolve_fused(fused, self.fused_geom,
-                                             int(self.n))
+                                             int(self.n),
+                                             tile_mb=self.fused_tile_mb)
         # gappy-record detection (host-side, once): W is a SELECTION matrix
         # when every row is one-hot on a distinct grid cell — the paper's
         # footnote-7 case, which unlocks the determinant-corrected SLQ
@@ -781,7 +785,7 @@ class SKIOperator:
     @classmethod
     def from_parts(cls, kind: str, x, sigma_n: float, jitter: float,
                    grid, idx, w, order: str = "cubic",
-                   fused="auto") -> "SKIOperator":
+                   fused="auto", tile_mb: int = 0) -> "SKIOperator":
         """Assemble an SKIOperator from incrementally-maintained parts.
 
         The streaming-serve path (serve/online.py) keeps the inducing grid
@@ -818,8 +822,10 @@ class SKIOperator:
             raise ValueError("W rows index outside the inducing grid")
         op.idx = jnp.asarray(idx, jnp.int32)
         op.w = jnp.asarray(w, op.x.dtype)
+        op.fused_tile_mb = int(tile_mb)
         op.fused_geom = ski_fused.build_fused_geometry(idx, w, op.m_grid)
-        op.fused = ski_fused.resolve_fused(fused, op.fused_geom, int(op.n))
+        op.fused = ski_fused.resolve_fused(fused, op.fused_geom, int(op.n),
+                                           tile_mb=op.fused_tile_mb)
         op._sel_cells = _selection_cells(idx, w)
         return op
 
@@ -866,9 +872,11 @@ class SKIOperator:
                 if first_column is None
                 else jnp.asarray(first_column, dtype), self.fused_geom)
             geom, noise2 = self.fused_geom, self.noise2
+            tile_mb = self.fused_tile_mb
 
             def mv(v):
-                return ski_fused.fused_gram_matvec(geom, lam, noise2, v)
+                return ski_fused.fused_gram_matvec(geom, lam, noise2, v,
+                                                   tile_mb=tile_mb)
 
             return mv
         # the inner ToeplitzOperator carries no noise (noise lives on the
@@ -899,8 +907,9 @@ class SKIOperator:
             lams = jax.vmap(
                 lambda t: ski_fused.spectrum_perm(t, self.fused_geom)
             )(rows.T)                                        # (m, L)
-            out = ski_fused.fused_tangent_matvecs(self.fused_geom, lams,
-                                                  0.0, V)
+            out = ski_fused.fused_tangent_matvecs(
+                self.fused_geom, lams, 0.0, V,
+                tile_mb=self.fused_tile_mb)
         else:
             T = self._toep.tangent_matvecs(theta, self._Wt(V))
             out = jax.vmap(self._W)(T)                       # (m, n, b)
@@ -1233,7 +1242,7 @@ class ProductSKIOperator:
 
     def __init__(self, kind: str, x, sigma_n: float = 0.0,
                  jitter: float = 0.0, spacings=None, n_grid=None,
-                 order: str = "cubic", fused="auto",
+                 order: str = "cubic", fused="auto", tile_mb: int = 0,
                  rtol: float = GRID_RTOL):
         kinds = kops.split_kind(kind)
         if len(kinds) < 2:
@@ -1303,10 +1312,12 @@ class ProductSKIOperator:
         # fused 2-D Pallas sandwich (DESIGN.md §13): both axis FFT stages +
         # the VMEM-resident transpose in one launch; d > 2 or unsupported
         # geometry falls back to the unfused composition
+        self.fused_tile_mb = int(tile_mb)
         self.fused_geom = (ski_fused.build_fused_geometry_nd(
             axis_idx, axis_w, self.shape) if d == 2 else None)
         self.fused = ski_fused.resolve_fused(fused, self.fused_geom,
-                                             int(self.n))
+                                             int(self.n),
+                                             tile_mb=self.fused_tile_mb)
 
     # -- sparse interpolation applications (trace-safe: idx/w constants)
 
@@ -1341,9 +1352,11 @@ class ProductSKIOperator:
             ts = self._kron.first_columns(theta, dtype)
             lams = ski_fused.spectrum_perm_nd(ts, self.fused_geom)
             geom, noise2 = self.fused_geom, self.noise2
+            tile_mb = self.fused_tile_mb
 
             def mv(v):
-                return ski_fused.fused_gram_matvec_nd(geom, lams, noise2, v)
+                return ski_fused.fused_gram_matvec_nd(geom, lams, noise2, v,
+                                                      tile_mb=tile_mb)
 
             return mv
         inner = self._kron.bound_gram_matvec(theta, dtype)
@@ -1369,8 +1382,9 @@ class ProductSKIOperator:
             theta_j = jnp.asarray(theta, dtype)
             lams = ski_fused.tangent_spectra_nd(
                 self._kron, theta_j, self.fused_geom, dtype)
-            out = ski_fused.fused_tangent_matvecs_nd(self.fused_geom, lams,
-                                                     0.0, V)
+            out = ski_fused.fused_tangent_matvecs_nd(
+                self.fused_geom, lams, 0.0, V,
+                tile_mb=self.fused_tile_mb)
         else:
             T = self._kron.tangent_matvecs(theta, self._Wt(V))
             out = jax.vmap(self._W)(T)                       # (m, n, b)
@@ -1593,7 +1607,8 @@ def make_operator(name: str, kind: str, x, sigma_n: float = 0.0,
 
 def select_operator(kind: str, x, sigma_n: float = 0.0, jitter: float = 0.0,
                     operator: Optional[str] = None,
-                    rtol: float = GRID_RTOL, fused="auto") -> LinearOperator:
+                    rtol: float = GRID_RTOL, fused="auto",
+                    tile_mb: int = 0) -> LinearOperator:
     """Structure-aware dispatch (DESIGN.md §9–§10).
 
     An explicit ``operator`` name always wins (``SolverOpts(operator=...)``
@@ -1637,7 +1652,7 @@ def select_operator(kind: str, x, sigma_n: float = 0.0, jitter: float = 0.0,
         raise ValueError(f"unknown fused mode {fused!r}; choose from "
                          f"{ski_fused.FUSED_CHOICES}")
     if operator is not None:
-        kwargs = ({"fused": fused}
+        kwargs = ({"fused": fused, "tile_mb": tile_mb}
                   if operator in (SKIOperator.name, ProductSKIOperator.name)
                   else {})
         return make_operator(operator, kind, x, sigma_n, jitter, **kwargs)
@@ -1649,7 +1664,8 @@ def select_operator(kind: str, x, sigma_n: float = 0.0, jitter: float = 0.0,
         if info.kind == "product":
             return ProductSKIOperator(
                 kind, x, sigma_n, jitter,
-                spacings=tuple(a.h for a in info.axes), fused=fused)
+                spacings=tuple(a.h for a in info.axes), fused=fused,
+                tile_mb=tile_mb)
         return PallasTileOperator(kind, x, sigma_n, jitter)
     xc = _concrete(x)
     if xc is not None and np.asarray(xc).ndim >= 2 \
@@ -1664,5 +1680,5 @@ def select_operator(kind: str, x, sigma_n: float = 0.0, jitter: float = 0.0,
         return ToeplitzOperator(kind, x, sigma_n, jitter, rtol=rtol)
     if info.kind == "near":
         return SKIOperator(kind, x, sigma_n, jitter, spacing=info.h,
-                           fused=fused)
+                           fused=fused, tile_mb=tile_mb)
     return PallasTileOperator(kind, x, sigma_n, jitter)

@@ -60,8 +60,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 __all__ = [
-    "FUSED_CHOICES", "FUSED_AUTO_MIN_N", "FusedSKIGeometry",
+    "FUSED_CHOICES", "FUSED_AUTO_MIN_N", "FUSED_TILE_MB",
+    "FusedSKIGeometry",
     "build_fused_geometry", "resolve_fused", "spectrum_perm",
+    "fused_const_bytes", "fused_tile_bytes", "fused_tile_plan",
     "fused_gram_matvec", "fused_tangent_matvecs", "fused_bank_matvec",
     "FusedSKIGeometryND", "build_fused_geometry_nd", "spectrum_perm_nd",
     "tangent_spectra_nd", "fused_gram_matvec_nd", "fused_tangent_matvecs_nd",
@@ -74,6 +76,12 @@ FUSED_CHOICES = (True, False, "auto")
 # small-L FFT give the unfused composition the edge in interpret mode;
 # above it the fused kernel wins (BENCH_fused.json; DESIGN.md §12).
 FUSED_AUTO_MIN_N = 2048
+
+# Default per-grid-step VMEM budget (MB) for the batch-tiled kernels:
+# half of a TPU core's ~16 MB VMEM, leaving the other half for Mosaic's
+# double-buffered pipeline copies of the streamed column blocks.
+# SolverOpts(fused_tile_mb=...) overrides it per session (DESIGN.md §16).
+FUSED_TILE_MB = 8
 
 _INV_SQRT2 = 0.7071067811865476
 
@@ -310,13 +318,92 @@ def build_fused_geometry(idx, w, m_grid: int) -> Optional[FusedSKIGeometry]:
         cos=tuple(cos), sin=tuple(sin))
 
 
-def resolve_fused(fused, geom: Optional[FusedSKIGeometry], n: int) -> bool:
+# ---------------------------------------------------------------------------
+# Batch-tile plan: per-grid-step VMEM budget → even column-tile width
+# (DESIGN.md §16).  All arithmetic is host-side on trace-time constants.
+# ---------------------------------------------------------------------------
+
+def _tile_budget_bytes(tile_mb: Optional[int]) -> int:
+    mb = FUSED_TILE_MB if tile_mb is None or int(tile_mb) <= 0 \
+        else int(tile_mb)
+    return mb << 20
+
+
+def _fft_block_rows(geom) -> int:
+    """Rows of the largest live FFT block per packed column: L for the
+    1-D pipeline, L₁·L₂ for the 2-D sandwich's (L₂, L₁·bc) block."""
+    if hasattr(geom, "Ls"):
+        return int(np.prod(geom.Ls))
+    return geom.L
+
+
+def fused_const_bytes(geom, itemsize: int = 8) -> int:
+    """Grid-invariant VMEM residents: occ/wcell/cell + twiddle tables.
+
+    These operands have CONSTANT BlockSpec index maps, so the Pallas
+    pipeline fetches them once and revisits the same VMEM block on every
+    grid step — they charge the budget once, not per step.
+    """
+    metas = geom.metas if hasattr(geom, "metas") else (geom.meta,)
+    tw = sum(2 * (r - 1) * q for meta in metas for (r, q) in meta)
+    s = geom.wcell.shape[1]
+    return (4 * geom.m_grid                      # occ (int32)
+            + itemsize * s * geom.m_grid         # wcell
+            + 4 * geom.n                         # cell (int32)
+            + itemsize * tw)                     # cos/sin stage tables
+
+
+def fused_tile_bytes(geom, b_tile: int, itemsize: int = 8,
+                     m_dirs: int = 1) -> int:
+    """Estimated per-grid-step VMEM bytes for a width-``b_tile`` (real
+    columns) block of the fused sandwich.
+
+    Per packed complex column (two real columns riding re/im): ~3 re/im
+    copies live through a butterfly stage (6·L rows), the gathered +
+    accumulated cell-space block (4·m_grid), and the double-buffered
+    (n,)-tall in/out tiles (8·n).  The tangent kernels inflate the
+    inverse-FFT block by the m_dirs joint directions.  Constants charge
+    once (:func:`fused_const_bytes`).
+    """
+    q = max(1, int(b_tile) // 2)
+    per = (6 * _fft_block_rows(geom) * max(int(m_dirs), 1)
+           + 4 * geom.m_grid + 8 * geom.n)
+    return fused_const_bytes(geom, itemsize) + itemsize * per * q
+
+
+def fused_tile_plan(geom, b_real: int, itemsize: int,
+                    tile_mb: Optional[int] = None, m_dirs: int = 1) -> int:
+    """Even column-tile width (real columns) per grid step.
+
+    The widest even tile whose :func:`fused_tile_bytes` estimate fits the
+    per-grid-step budget, floored at one packed column (b_tile = 2) and
+    capped at the padded batch width — so a wide batch SHRINKS the tile
+    and raises the grid step count instead of busting VMEM.
+    """
+    budget = _tile_budget_bytes(tile_mb)
+    fixed = fused_const_bytes(geom, itemsize)
+    per = (fused_tile_bytes(geom, 2, itemsize, m_dirs) - fixed)
+    q = max(1, (budget - fixed) // max(per, 1))
+    bp = int(b_real) + (int(b_real) % 2)
+    return int(min(2 * q, max(bp, 2)))
+
+
+def resolve_fused(fused, geom, n: int, b: int = 1,
+                  tile_mb: Optional[int] = None) -> bool:
     """SolverOpts(fused=...) → concrete bool for one bound operator.
 
     ``True`` demands the fused kernel (ValueError if the geometry cannot
-    support it); ``"auto"`` enables it when supported and n ≥
-    ``FUSED_AUTO_MIN_N`` (the measured interpret-mode crossover);
-    ``False`` always uses the unfused composition.
+    support it); ``False`` always uses the unfused composition; ``"auto"``
+    enables the kernel when the geometry supports it, n ≥
+    ``FUSED_AUTO_MIN_N`` (the measured interpret-mode crossover), AND the
+    VMEM estimate ``fused_tile_bytes(L, b_tile) ≤ budget`` holds for the
+    batch tile the width-``b`` launch would plan.  Because the batch axis
+    is grid-tiled (:func:`fused_tile_plan` shrinks the tile down to one
+    packed column before ever overflowing), a wide bank/tangent/serve
+    batch no longer forces the unfused fallback — "auto" only declines
+    when even a single packed column of this geometry busts the budget.
+    ``b`` is the anticipated batch width (bank members × columns); the
+    estimate uses float64 (the worst per-entry cost this repo traces).
     """
     if fused not in FUSED_CHOICES:
         raise ValueError(f"unknown fused mode {fused!r}; choose from "
@@ -331,7 +418,10 @@ def resolve_fused(fused, geom: Optional[FusedSKIGeometry], n: int) -> bool:
                 "operator='ski' override on scattered data?); use "
                 "fused='auto' or False to take the unfused composition")
         return True
-    return geom is not None and n >= FUSED_AUTO_MIN_N
+    if geom is None or n < FUSED_AUTO_MIN_N:
+        return False
+    bt = fused_tile_plan(geom, max(int(b), 1), 8, tile_mb)
+    return fused_tile_bytes(geom, bt, 8) <= _tile_budget_bytes(tile_mb)
 
 
 def spectrum_perm(first_column, geom: FusedSKIGeometry):
@@ -463,13 +553,135 @@ def _pad_cols(v, mult=2):
     return jnp.concatenate([v, z], axis=-1), v.shape[-1]
 
 
-def fused_gram_matvec(geom: FusedSKIGeometry, lam_perm, noise2: float, v):
+def _col_block_specs(shapes, bt):
+    """BlockSpecs tiling the LAST axis in ``bt``-wide blocks indexed by the
+    (single) launch grid dimension — the batch-streaming operands.  The
+    leading axes stay whole; Pallas's pipeline double-buffers these blocks
+    across grid steps (fetch i+1 while i computes)."""
+    return [pl.BlockSpec(sh[:-1] + (bt,),
+                         lambda i, nd=len(sh): (0,) * (nd - 1) + (i,))
+            for sh in shapes]
+
+
+# ---------------------------------------------------------------------------
+# Joint tangent×batch / bank-member pair packing (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+#
+# Pair packing rides two real columns on one complex column, which is
+# exact only when both halves see the SAME real spectrum.  The joint
+# plans below relax that: the Hermitian split of a packed forward
+# spectrum Z = rfft-pack(a, b),
+#
+#   Â = (Z + conj(Z∘flip)) / 2,    B̂ = -i (Z - conj(Z∘flip)) / 2,
+#
+# recovers each real column's own spectrum from ONE packed FFT, where
+# ``flip`` reads the mirrored frequency (L - k) mod L without leaving the
+# digit-reversed order.  A packed pair whose halves need two different
+# spectra λ_a, λ_b then costs one conjugate-mirrored multiply-add
+#
+#   Y = λ_a Â + i λ_b B̂ = s ⊙ Z + d ⊙ conj(Z∘flip),
+#   s = (λ_a + λ_b) / 2,  d = (λ_a - λ_b) / 2,
+#
+# so tangent directions × batch columns (and bank members × columns) pack
+# JOINTLY into ceil(total/2) complex columns with no half-filled pairs at
+# odd widths.  Same-spectrum pairs keep the plain product (d = 0).
+
+
+def _flip_perm(L: int, perm) -> np.ndarray:
+    """Digit-reversed-order position of the mirrored frequency: with
+    DIF_out[j] = fft[perm[j]], flip[j] is where (L - perm[j]) mod L
+    lives — Zf = Z[flip] realises conj-symmetry access in DIF order."""
+    perm = np.asarray(perm)
+    inv = np.empty(L, np.int64)
+    inv[perm] = np.arange(L)
+    return inv[(L - perm) % L].astype(np.int32)
+
+
+def _joint_pairs(m_dirs: int, b: int):
+    """Host-side joint tangent×batch pair plan over the flattened
+    direction-major real output columns c = i·b + j.
+
+    Returns (src, half, dirs, aligned): (Q, 2) int arrays mapping each
+    packed output column's two halves to a forward packed source column
+    (src = j // 2), the re/im half inside it (half = j % 2), and the
+    tangent direction i — plus the per-column ALIGNED mask, True where
+    the pair is one whole forward packed column under one direction (the
+    plain-product fast path).  Odd totals clamp-replicate the last
+    column; the caller truncates it after the inverse transform.
+    """
+    total = m_dirs * b
+    Q = (total + 1) // 2
+    cols = np.minimum(np.arange(2 * Q), total - 1).reshape(Q, 2)
+    dirs, j = np.divmod(cols, b)
+    src, half = np.divmod(j, 2)
+    aligned = ((src[:, 0] == src[:, 1]) & (half[:, 0] == 0)
+               & (half[:, 1] == 1) & (dirs[:, 0] == dirs[:, 1]))
+    return (src.astype(np.int32), half.astype(np.int32),
+            dirs.astype(np.int32), aligned)
+
+
+def _plan_input(plan) -> jnp.ndarray:
+    """The (src, half, dirs, aligned) joint plan as ONE (7, Q) int32 kernel
+    input (Pallas forbids captured array constants — index arrays must
+    enter through refs)."""
+    src, half, dirs, aligned = plan
+    return jnp.asarray(np.stack([
+        src[:, 0], src[:, 1], dirs[:, 0], dirs[:, 1],
+        half[:, 0], half[:, 1], aligned.astype(np.int32)]))
+
+
+def _joint_spectra_aligned(R0, I0, lamT):
+    """λ ⊙ V̂ for a fully ALIGNED joint plan — pure broadcasting, no index
+    arrays: output packed column i·P + p is direction i times forward
+    column p, bit-identical to the per-direction separate packing."""
+    L = R0.shape[0]
+    Yr = (lamT[:, :, None] * R0[:, None, :]).reshape(L, -1)
+    Yi = (lamT[:, :, None] * I0[:, None, :]).reshape(L, -1)
+    return Yr, Yi
+
+
+def _joint_spectra_general(R0, I0, lamT, plan, flip):
+    """λ ⊙ V̂ under a straddling joint plan (traced plan/flip refs):
+    aligned columns keep the exact plain product; straddling columns
+    synthesise each half's own spectrum through the Hermitian split."""
+    src0, src1, dir0, dir1, half0, half1, aligned = (
+        plan[i] for i in range(7))
+    la, lb = lamT[:, dir0], lamT[:, dir1]
+    Rf, If = R0[flip], I0[flip]
+
+    def vhat(s, h):
+        odd = (h == 1)[None, :]
+        zr, zi, zfr, zfi = R0[:, s], I0[:, s], Rf[:, s], If[:, s]
+        vr = jnp.where(odd, 0.5 * (zi + zfi), 0.5 * (zr + zfr))
+        vi = jnp.where(odd, 0.5 * (zfr - zr), 0.5 * (zi - zfi))
+        return vr, vi
+
+    ar, ai = vhat(src0, half0)
+    br, bi = vhat(src1, half1)
+    mask = (aligned == 1)[None, :]
+    Yr = jnp.where(mask, la * R0[:, src0], la * ar - lb * bi)
+    Yi = jnp.where(mask, la * I0[:, src0], la * ai + lb * br)
+    return Yr, Yi
+
+
+def fused_gram_matvec(geom: FusedSKIGeometry, lam_perm, noise2: float, v,
+                      tile_mb: Optional[int] = None):
     """(W K_grid Wᵀ + noise2 I) v in ONE fused launch.
 
     lam_perm: permuted spectrum from :func:`spectrum_perm` (per θ, built
     outside); v: (n, b).  Returns (n, b).
+
+    The batch axis is tiled through the Pallas grid: columns stream in
+    even ``b_tile``-wide blocks sized by :func:`fused_tile_plan` so the
+    per-step VMEM footprint stays under the budget at ANY b; the geometry
+    constants keep constant index maps (fetched once, revisited every
+    step) while the v/out blocks pipeline — still exactly one
+    ``pallas_call``, zero XLA ffts.  Every kernel op is column-local, so
+    tiled and single-block launches are bit-identical.
     """
     v, b = _pad_cols(v)
+    bt = fused_tile_plan(geom, v.shape[-1], v.dtype.itemsize, tile_mb)
+    v, _ = _pad_cols(v, bt)
     n, bp = v.shape
     n_st = len(geom.meta)
 
@@ -488,9 +700,9 @@ def fused_gram_matvec(geom: FusedSKIGeometry, lam_perm, noise2: float, v):
 
     ins = [v, lam_perm.astype(v.dtype)] + _const_inputs(geom, v.dtype)
     out = pl.pallas_call(
-        kernel, grid=(1,),
-        in_specs=_full_specs(ins),
-        out_specs=pl.BlockSpec((n, bp), lambda i: (0, 0)),
+        kernel, grid=(bp // bt,),
+        in_specs=_col_block_specs([v.shape], bt) + _full_specs(ins[1:]),
+        out_specs=pl.BlockSpec((n, bt), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((n, bp), v.dtype),
         interpret=_use_interpret(),
     )(*ins)
@@ -498,97 +710,159 @@ def fused_gram_matvec(geom: FusedSKIGeometry, lam_perm, noise2: float, v):
 
 
 def fused_tangent_matvecs(geom: FusedSKIGeometry, lams_perm, noise2: float,
-                          v):
+                          v, tile_mb: Optional[int] = None):
     """All m_dirs stacked tangents dK/dθ_i V = W (dK_grid/dθ_i) Wᵀ V in
     ONE fused launch: the Wᵀ apply and the forward FFT are shared across
-    directions; each direction pays one spectrum multiply + inverse FFT +
-    banded gather.  lams_perm: (m_dirs, L) permuted tangent spectra
-    (``spectrum_perm`` of each first-column jacobian row).  Returns
-    (m_dirs, n, b).  (The noise diagonal is θ-independent: noise2 is
-    accepted for signature symmetry but never added here.)
+    directions; directions × batch columns then pack JOINTLY into
+    pair-packed complex columns (:func:`_joint_pairs`) so ONE inverse FFT
+    block of ceil(m_dirs·b / 2) columns covers every (direction, column)
+    product — odd b no longer wastes m_dirs half-filled pairs.  lams_perm:
+    (m_dirs, L) permuted tangent spectra (``spectrum_perm`` of each
+    first-column jacobian row).  Returns (m_dirs, n, b).  (The noise
+    diagonal is θ-independent: noise2 is accepted for signature symmetry
+    but never added here.)
+
+    Batch tiling: wide b streams in even column tiles exactly like
+    :func:`fused_gram_matvec` (the tile plan charges the inverse block
+    m_dirs-fold).  Even tiles keep every joint pair inside one direction,
+    so the tiled launch is bit-identical to the per-direction packing;
+    the Hermitian straddle path only runs for an odd-width single tile.
     """
     del noise2
     v, b = _pad_cols(v)
-    n, bp = v.shape
+    bp0 = v.shape[-1]
     m_dirs = lams_perm.shape[0]
+    bt = fused_tile_plan(geom, bp0, v.dtype.itemsize, tile_mb,
+                         m_dirs=m_dirs)
+    if bt >= bp0:
+        bt, b_in = bp0, b          # single tile: joint-pack the true width
+    else:
+        v, _ = _pad_cols(v, bt)
+        b_in = bt                  # even tiles: aligned pairs only
+    n, bp = v.shape
+    plan = _joint_pairs(m_dirs, b_in)
+    straddle = not bool(plan[3].all())
+    extra = ([_plan_input(plan), jnp.asarray(_flip_perm(geom.L, geom.perm))]
+             if straddle else [])
+    n_x = len(extra)
     n_st = len(geom.meta)
 
     def kernel(*refs):
-        v_ref, lam_ref, occ_ref, wcell_ref, cell_ref = refs[:5]
-        cos, sin = _split_tabs(refs[5:5 + 2 * n_st], n_st)
-        o_ref = refs[5 + 2 * n_st]
+        v_ref, lam_ref = refs[:2]
+        occ_ref, wcell_ref, cell_ref = refs[2 + n_x:5 + n_x]
+        cos, sin = _split_tabs(refs[5 + n_x:5 + n_x + 2 * n_st], n_st)
+        o_ref = refs[5 + n_x + 2 * n_st]
         vv = v_ref[...]
         wcell = wcell_ref[...]
         cell = cell_ref[...]
         u = _wt_apply(vv, occ_ref[...], wcell, geom.offs, geom.m_grid)
         ur, ui = _pack_pad(u, geom.L, geom.m_grid)
-        cos_t, sin_t = cos, sin
-        R0, I0 = _dif_fft(ur, ui, geom.meta, cos_t, sin_t,
+        R0, I0 = _dif_fft(ur, ui, geom.meta, cos, sin,
                           first_nonzero=geom.m_grid)     # shared forward
-        for i in range(m_dirs):
-            lam = lam_ref[i][:, None]
-            R, I = _dit_ifft(R0 * lam, I0 * lam, geom.meta, cos_t, sin_t,
-                             m_keep=geom.m_grid)
-            ku = _unpack(R, I, geom.m_grid)
-            o_ref[i] = _w_apply(ku, wcell, cell, geom.offs, 0.0,
-                                jnp.zeros_like(vv))
+        if straddle:
+            Yr, Yi = _joint_spectra_general(R0, I0, lam_ref[...].T,
+                                            refs[2][...], refs[3][...])
+        else:
+            Yr, Yi = _joint_spectra_aligned(R0, I0, lam_ref[...].T)
+        R, I = _dit_ifft(Yr, Yi, geom.meta, cos, sin, m_keep=geom.m_grid)
+        ku = _unpack(R, I, geom.m_grid)[:, :m_dirs * b_in]
+        out = _w_apply(ku, wcell, cell, geom.offs, 0.0,
+                       jnp.zeros((geom.n, m_dirs * b_in), vv.dtype))
+        out = out.reshape(geom.n, m_dirs, b_in)
+        if b_in < bt:
+            pad = jnp.zeros((geom.n, m_dirs, bt - b_in), vv.dtype)
+            out = jnp.concatenate([out, pad], axis=-1)
+        o_ref[...] = out.swapaxes(0, 1)
 
-    ins = [v, lams_perm.astype(v.dtype)] + _const_inputs(geom, v.dtype)
+    ins = [v, lams_perm.astype(v.dtype)] + extra \
+        + _const_inputs(geom, v.dtype)
     out = pl.pallas_call(
-        kernel, grid=(1,),
-        in_specs=_full_specs(ins),
-        out_specs=pl.BlockSpec((m_dirs, n, bp), lambda i: (0, 0, 0)),
+        kernel, grid=(bp // bt,),
+        in_specs=_col_block_specs([v.shape], bt) + _full_specs(ins[1:]),
+        out_specs=pl.BlockSpec((m_dirs, n, bt), lambda i: (0, 0, i)),
         out_shape=jax.ShapeDtypeStruct((m_dirs, n, bp), v.dtype),
         interpret=_use_interpret(),
     )(*ins)
     return out[:, :, :b]
 
 
-def fused_bank_matvec(geom: FusedSKIGeometry, lams_perm, noise2: float, V):
+def fused_bank_matvec(geom: FusedSKIGeometry, lams_perm, noise2: float, V,
+                      tile_mb: Optional[int] = None):
     """Bank gram matvec (n, B, c) → (n, B, c) in ONE fused launch.
 
     lams_perm: (B, L) — one permuted spectrum per bank member (kernels
-    differ only in their spectra; the W geometry is shared).  Columns are
-    pair-packed WITHIN each member so both halves of a packed complex
-    column share the member's real spectrum.
+    differ only in their spectra; the W geometry is shared).  The B·c
+    member columns flatten member-major and pack JOINTLY into
+    ceil(B·c / 2) complex columns: a packed pair straddling two members
+    multiplies by the sum/difference half-spectra s = (λ_a + λ_b)/2,
+    d = (λ_a − λ_b)/2 through the Hermitian flip (module comment above),
+    so odd c no longer pads a wasted half-pair per member.  Within-member
+    pairs keep d ≡ 0 and s ≡ λ bitwise (the d term is compiled out
+    entirely when no pair straddles — even-c banks are bit-identical to
+    the per-member packing).  The flat column axis streams through the
+    Pallas grid in even VMEM-sized tiles like :func:`fused_gram_matvec`;
+    s/d spectra ride along as column-blocked inputs.
     """
     n, B, c = V.shape
-    V, c0 = _pad_cols(V)
-    cp = V.shape[-1]
+    Vf = V.reshape(n, B * c)
+    Vf, w0 = _pad_cols(Vf)
+    bt = fused_tile_plan(geom, Vf.shape[-1], V.dtype.itemsize, tile_mb)
+    Vf, _ = _pad_cols(Vf, bt)
+    wp = Vf.shape[-1]
+    # Member of each flat column (pad columns clamp to the last member so
+    # their pair partner matches → d = 0 exactly on every pad pair).
+    memb = np.minimum(np.arange(wp), B * c - 1) // c
+    ma, mb = memb[0::2], memb[1::2]
+    straddle = bool(np.any(ma != mb))
+    lamA, lamB = lams_perm[ma], lams_perm[mb]             # (wp/2, L)
+    s_spec = (0.5 * (lamA + lamB)).T.astype(V.dtype)      # (L, wp/2)
+    specs = [s_spec]
+    extra = []
+    if straddle:
+        specs.append((0.5 * (lamA - lamB)).T.astype(V.dtype))
+        extra.append(jnp.asarray(_flip_perm(geom.L, geom.perm)))
+    n_lam = len(specs)
+    n_x = len(extra)
     n_st = len(geom.meta)
 
     def kernel(*refs):
-        v_ref, lam_ref, occ_ref, wcell_ref, cell_ref = refs[:5]
-        cos, sin = _split_tabs(refs[5:5 + 2 * n_st], n_st)
-        o_ref = refs[5 + 2 * n_st]
-        vv = v_ref[...]                                   # (n, B, cp)
+        v_ref = refs[0]
+        lam_refs = refs[1:1 + n_lam]
+        occ_ref, wcell_ref, cell_ref = \
+            refs[1 + n_lam + n_x:4 + n_lam + n_x]
+        k0 = 4 + n_lam + n_x
+        cos, sin = _split_tabs(refs[k0:k0 + 2 * n_st], n_st)
+        o_ref = refs[k0 + 2 * n_st]
+        vv = v_ref[...]                                   # (n, bt)
         u = _wt_apply(vv, occ_ref[...], wcell_ref[...], geom.offs,
-                      geom.m_grid)                        # (m, B, cp)
-        u2 = u.reshape(geom.m_grid, -1)                   # (m, B*cp)
-        ur, ui = _pack_pad(u2, geom.L, geom.m_grid)       # (L, B*cp/2)
-        # _pack_pad pairs ADJACENT flat columns; flat order is member-major
-        # (B outer, cp inner) and cp is even, so each packed pair stays
-        # inside one member and shares that member's real spectrum.
+                      geom.m_grid)                        # (m, bt)
+        ur, ui = _pack_pad(u, geom.L, geom.m_grid)        # (L, bt/2)
         R, I = _dif_fft(ur, ui, geom.meta, cos, sin,
                         first_nonzero=geom.m_grid)
-        lam = lam_ref[...].T[:, :, None]                  # (L, B, 1)
-        R = (R.reshape(geom.L, B, cp // 2) * lam).reshape(geom.L, -1)
-        I = (I.reshape(geom.L, B, cp // 2) * lam).reshape(geom.L, -1)
-        R, I = _dit_ifft(R, I, geom.meta, cos, sin, m_keep=geom.m_grid)
-        ku = _unpack(R, I, geom.m_grid).reshape(geom.m_grid, vv.shape[1],
-                                                vv.shape[2])
+        s = lam_refs[0][...]
+        if straddle:
+            d = lam_refs[1][...]
+            flip = refs[1 + n_lam][...]
+            Yr = s * R + d * R[flip]
+            Yi = s * I - d * I[flip]
+        else:
+            Yr, Yi = s * R, s * I
+        R, I = _dit_ifft(Yr, Yi, geom.meta, cos, sin, m_keep=geom.m_grid)
+        ku = _unpack(R, I, geom.m_grid)                   # (m, bt)
         o_ref[...] = _w_apply(ku, wcell_ref[...], cell_ref[...], geom.offs,
                               noise2, vv)
 
-    ins = [V, lams_perm.astype(V.dtype)] + _const_inputs(geom, V.dtype)
+    ins = [Vf] + specs + extra + _const_inputs(geom, V.dtype)
     out = pl.pallas_call(
-        kernel, grid=(1,),
-        in_specs=_full_specs(ins),
-        out_specs=pl.BlockSpec((n, B, cp), lambda i: (0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, B, cp), V.dtype),
+        kernel, grid=(wp // bt,),
+        in_specs=(_col_block_specs([Vf.shape], bt)
+                  + _col_block_specs([sp.shape for sp in specs], bt // 2)
+                  + _full_specs(ins[1 + n_lam:])),
+        out_specs=pl.BlockSpec((n, bt), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, wp), V.dtype),
         interpret=_use_interpret(),
     )(*ins)
-    return out[:, :, :c0]
+    return out[:, :B * c].reshape(n, B, c)
 
 
 # ---------------------------------------------------------------------------
@@ -776,13 +1050,21 @@ def _split_tabs_nd(refs, geom):
     return tabs, k
 
 
-def fused_gram_matvec_nd(geom: FusedSKIGeometryND, lams, noise2: float, v):
+def fused_gram_matvec_nd(geom: FusedSKIGeometryND, lams, noise2: float, v,
+                         tile_mb: Optional[int] = None):
     """(W K_kron Wᵀ + noise2 I) v in ONE fused launch (2-D product SKI).
 
     lams: (λ₁_perm, λ₂_perm) from :func:`spectrum_perm_nd`; v: (n, b).
+
+    Column tiling matches :func:`fused_gram_matvec`; the plan charges the
+    (L₂, L₁·bc) transposed block per packed column (``_fft_block_rows``),
+    which hits the VMEM wall at a much smaller n·b than the 1-D kernel —
+    exactly the case the grid tiling rescues.
     """
     lam1, lam2 = lams
     v, b = _pad_cols(v)
+    bt = fused_tile_plan(geom, v.shape[-1], v.dtype.itemsize, tile_mb)
+    v, _ = _pad_cols(v, bt)
     n, bp = v.shape
 
     def kernel(*refs):
@@ -794,7 +1076,7 @@ def fused_gram_matvec_nd(geom: FusedSKIGeometryND, lams, noise2: float, v):
         u = _wt_apply(vv, occ_ref[...], wcell, geom.offs, geom.m_grid)
         R, I = _fwd2(u[:, 0::2], u[:, 1::2], geom, tabs[0], tabs[1])
         Ro, Io = _inv2(R, I, l1_ref[...], l2_ref[...], geom, tabs[0],
-                       tabs[1], bp // 2)
+                       tabs[1], bt // 2)
         ku = jnp.stack([Ro, Io], axis=-1).reshape(geom.m_grid, -1)
         o_ref[...] = _w_apply(ku, wcell, cell_ref[...], geom.offs,
                               noise2, vv)
@@ -802,9 +1084,9 @@ def fused_gram_matvec_nd(geom: FusedSKIGeometryND, lams, noise2: float, v):
     ins = [v, lam1.astype(v.dtype), lam2.astype(v.dtype)] \
         + _const_inputs_nd(geom, v.dtype)
     out = pl.pallas_call(
-        kernel, grid=(1,),
-        in_specs=_full_specs(ins),
-        out_specs=pl.BlockSpec((n, bp), lambda i: (0, 0)),
+        kernel, grid=(bp // bt,),
+        in_specs=_col_block_specs([v.shape], bt) + _full_specs(ins[1:]),
+        out_specs=pl.BlockSpec((n, bt), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((n, bp), v.dtype),
         interpret=_use_interpret(),
     )(*ins)
@@ -812,19 +1094,26 @@ def fused_gram_matvec_nd(geom: FusedSKIGeometryND, lams, noise2: float, v):
 
 
 def fused_tangent_matvecs_nd(geom: FusedSKIGeometryND, lam_pairs,
-                             noise2: float, v):
+                             noise2: float, v,
+                             tile_mb: Optional[int] = None):
     """All m stacked tangents W (dK_kron/dθ_i) Wᵀ V in ONE fused launch.
 
     The banded Wᵀ and BOTH forward FFT stages are direction-independent
     and shared; each direction pays one outer-product multiply + the two
-    inverse stages + the banded gather.  lam_pairs: the ((m, L₁), (m, L₂))
-    stacks from :func:`tangent_spectra_nd`.  Returns (m, n, b).
+    inverse stages + the banded gather (the two-axis spectra do not
+    factor through the 1-D Hermitian joint packing, so directions stay a
+    loop here — only the batch axis tiles).  lam_pairs: the
+    ((m, L₁), (m, L₂)) stacks from :func:`tangent_spectra_nd`.  Returns
+    (m, n, b).
     """
     del noise2
     lams1, lams2 = lam_pairs
     v, b = _pad_cols(v)
-    n, bp = v.shape
     m_dirs = lams1.shape[0]
+    bt = fused_tile_plan(geom, v.shape[-1], v.dtype.itemsize, tile_mb,
+                         m_dirs=m_dirs)
+    v, _ = _pad_cols(v, bt)
+    n, bp = v.shape
 
     def kernel(*refs):
         v_ref, l1_ref, l2_ref, occ_ref, wcell_ref, cell_ref = refs[:6]
@@ -838,16 +1127,16 @@ def fused_tangent_matvecs_nd(geom: FusedSKIGeometryND, lam_pairs,
         zero = jnp.zeros_like(vv)
         for i in range(m_dirs):
             Ro, Io = _inv2(R0, I0, l1_ref[i], l2_ref[i], geom, tabs[0],
-                           tabs[1], bp // 2)
+                           tabs[1], bt // 2)
             ku = jnp.stack([Ro, Io], axis=-1).reshape(geom.m_grid, -1)
             o_ref[i] = _w_apply(ku, wcell, cell, geom.offs, 0.0, zero)
 
     ins = [v, lams1.astype(v.dtype), lams2.astype(v.dtype)] \
         + _const_inputs_nd(geom, v.dtype)
     out = pl.pallas_call(
-        kernel, grid=(1,),
-        in_specs=_full_specs(ins),
-        out_specs=pl.BlockSpec((m_dirs, n, bp), lambda i: (0, 0, 0)),
+        kernel, grid=(bp // bt,),
+        in_specs=_col_block_specs([v.shape], bt) + _full_specs(ins[1:]),
+        out_specs=pl.BlockSpec((m_dirs, n, bt), lambda i: (0, 0, i)),
         out_shape=jax.ShapeDtypeStruct((m_dirs, n, bp), v.dtype),
         interpret=_use_interpret(),
     )(*ins)

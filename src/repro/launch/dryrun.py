@@ -415,6 +415,98 @@ def run_gp_cell(n: int, mesh_kind: str, out_dir: Path, kind: str = "k2",
     return result
 
 
+VMEM_BYTES = 16 << 20        # ~16 MB VMEM / core (pallas guide)
+
+
+def run_fused_tiled_cell(n_full: int, b: int, out_dir: Path,
+                         tile_mb: int = 0, drop: float = 0.1,
+                         tag: str = ""):
+    """Per-grid-step VMEM/FLOP report for the batch-tiled fused SKI
+    sandwich (DESIGN.md §16) so the TPU campaign can place the kernel on
+    the roofline without compiling for a TPU target.
+
+    Unlike the model cells above, nothing is lowered here: the tile plan
+    is pure host arithmetic over trace-time geometry constants, so the
+    report states exactly what ONE grid step of the single `pallas_call`
+    holds in VMEM (tile estimate + once-fetched constants), the analytic
+    flops it performs (two mixed-radix length-L FFTs, the spectrum
+    multiply, and the s-tap gather/scatter W applies per packed column),
+    and the HBM traffic it streams (the (n, b_tile) in/out blocks — the
+    constants charge the first step only, their BlockSpec index maps are
+    constant so the pipeline revisits the same VMEM block).
+    """
+    from ..kernels import operators as opr
+    from ..kernels import ski_fused as skf
+
+    rng = np.random.default_rng(0)
+    grid = np.arange(n_full, dtype=np.float64) * 2.0
+    x = grid[rng.uniform(size=n_full) > drop]
+    op = opr.SKIOperator("k2", x, 0.1, 1e-8, fused=True, tile_mb=tile_mb)
+    geom = op.fused_geom
+    n, L, m_grid = geom.n, geom.L, geom.m_grid
+    s = geom.wcell.shape[1]
+    itemsize = 8                              # f64 worst case (tests run x64)
+    bt = skf.fused_tile_plan(geom, b, itemsize, tile_mb=tile_mb or None)
+    bp = b + b % 2
+    steps = (bp + (-bp) % bt) // bt
+    q = bt // 2                               # packed complex columns / step
+
+    const_b = skf.fused_const_bytes(geom, itemsize)
+    tile_b = skf.fused_tile_bytes(geom, bt, itemsize)
+    # analytic flops per grid step: forward + inverse mixed-radix FFT
+    # (~5 L log2 L real flops per complex transform), the complex x real
+    # spectrum multiply, two s-tap shifted-fma W applies (2 real columns
+    # per packed column), and the sigma^2 v axpy.
+    fft_f = 2 * 5.0 * L * np.log2(L)
+    spec_f = 2.0 * L
+    w_f = 2 * (2.0 * 2 * s * m_grid)
+    axpy_f = 2.0 * 2 * n
+    flops_step = q * (fft_f + spec_f + w_f + axpy_f)
+    hbm_step = 2.0 * itemsize * n * bt        # v tile in + out tile back
+    compute_s = flops_step / PEAK_FLOPS
+    memory_s = hbm_step / HBM_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s}
+    dominant = max(terms, key=terms.get)
+    result = {
+        "arch": f"fused-tiled-n{n}", "shape": f"b{b}", "kind": "fused_ski",
+        "n": n, "b": b, "n_times_b": n * b, "L": L, "m_grid": m_grid,
+        "stencil": s, "itemsize": itemsize,
+        "tile_plan": {
+            "tile_mb": tile_mb or skf.FUSED_TILE_MB,
+            "b_tile": bt, "packed_cols_per_step": q,
+            "grid_steps": steps,
+        },
+        "per_grid_step": {
+            "vmem_tile_bytes": tile_b,
+            "vmem_const_bytes": const_b,
+            "vmem_total_bytes": tile_b,   # fused_tile_bytes includes const
+            "vmem_fits_core": tile_b <= VMEM_BYTES,
+            "flops": flops_step,
+            "hbm_bytes": hbm_step,
+            **terms,
+            "dominant": dominant,
+            "step_time_s": max(terms.values()),
+        },
+        "totals": {
+            "flops": flops_step * steps,
+            "hbm_bytes": hbm_step * steps + const_b,
+            "launch_time_s": max(terms.values()) * steps,
+            "arithmetic_intensity": (flops_step * steps)
+            / (hbm_step * steps + const_b),
+        },
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    name = f"fused-tiled-n{n}__b{b}{suffix}.json"
+    (out_dir / name).write_text(json.dumps(result, indent=1))
+    p = result["per_grid_step"]
+    print(f"[OK] fused-tiled n={n:<8d} b={b:<4d} tile={bt} steps={steps} "
+          f"vmem={tile_b / 2**20:5.2f}MB fits={p['vmem_fits_core']} "
+          f"dominant={dominant} step={p['step_time_s']*1e6:.2f}us",
+          flush=True)
+    return result
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
@@ -426,6 +518,17 @@ def main():
                     help="run the distributed-GP cells (n=2^20)")
     ap.add_argument("--gp-n", type=int, default=2**20)
     ap.add_argument("--gp-probes", type=int, default=16)
+    ap.add_argument("--fused-tiled", action="store_true",
+                    help="per-grid-step VMEM/FLOP report for the "
+                         "batch-tiled fused SKI kernel (DESIGN.md §16)")
+    ap.add_argument("--fused-n", type=int, default=18500,
+                    help="pre-drop grid length for --fused-tiled")
+    ap.add_argument("--fused-b", type=int, action="append", default=[],
+                    help="batch width(s) for --fused-tiled (default "
+                         "8,16,32)")
+    ap.add_argument("--fused-tile-mb", type=int, default=0,
+                    help="per-grid-step VMEM budget override (0 = "
+                         "kernel default)")
     ap.add_argument("--out", default="reports/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--set", action="append", default=[],
@@ -446,6 +549,13 @@ def main():
             except ValueError:
                 continue
         overrides[k] = v
+
+    if args.fused_tiled:
+        out_dir = Path(args.out)
+        for b in (args.fused_b or [8, 16, 32]):
+            run_fused_tiled_cell(args.fused_n, b, out_dir,
+                                 tile_mb=args.fused_tile_mb, tag=args.tag)
+        return
 
     if args.gp:
         out_dir = Path(args.out)

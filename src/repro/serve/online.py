@@ -63,6 +63,7 @@ class OnlineGPState:
         self.cg_tol = float(opts.cg_tol)
         self.cg_max_iter = int(opts.cg_max_iter)
         self.fused = opts.fused
+        self.fused_tile_mb = int(opts.fused_tile_mb)
 
         x = np.asarray(x, np.float64)
         y = np.asarray(y, np.float64)
@@ -107,7 +108,8 @@ class OnlineGPState:
         if self._op is None:
             self._op = kopers.SKIOperator.from_parts(
                 self.kind, self.x, self.sigma_n, self.jitter, self.grid,
-                self.idx, self.w, order=self.order, fused=self.fused)
+                self.idx, self.w, order=self.order, fused=self.fused,
+                tile_mb=self.fused_tile_mb)
         return self._op
 
     def set_theta(self, theta):

@@ -512,14 +512,18 @@ def test_public_api_snapshot():
         "scan_points", "multimodal", "dense_cutoff")
     # the engine knobs are public surface too (PR 5 adds precond="auto"
     # semantics and the fused= kernel selector; PR 7 the stochastic
-    # backend's batch/rank/epoch/budget knobs)
+    # backend's batch/rank/epoch/budget knobs; PR 10 the heavy-ball
+    # momentum and the fused batch-tile VMEM budget)
     assert E.SolverOpts._fields == (
         "n_probes", "lanczos_k", "cg_tol", "cg_max_iter", "precond_rank",
         "fd_step", "operator", "precond", "fused", "batch_size",
-        "n_epochs", "nystrom_rank", "mem_budget_mb")
+        "n_epochs", "nystrom_rank", "mem_budget_mb", "momentum",
+        "fused_tile_mb")
     assert E.SolverOpts().precond is None
     assert E.SolverOpts().fused == "auto"
     assert E.SolverOpts().batch_size == 0       # 0 = resolve from budget
     assert E.SolverOpts().nystrom_rank == 0     # 0 = rank ladder
     assert E.SolverOpts().n_epochs == 0         # 0 = backend default
     assert E.SolverOpts().mem_budget_mb == 1024
+    assert E.SolverOpts().momentum == 0.0       # 0 = plain epoch loop
+    assert E.SolverOpts().fused_tile_mb == 0    # 0 = FUSED_TILE_MB default

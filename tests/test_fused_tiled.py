@@ -1,0 +1,276 @@
+"""Batch-tiled fused SKI kernel (DESIGN.md §16).
+
+Covers: the VMEM-budget tile plan and the batch-width-aware
+``resolve_fused`` decision (satellite bug-fix pin), the one-launch /
+zero-fft jaxpr contract at large n·b — (n ≥ 16384, b = 32) in 1-D and
+(64×64, b = 16) in 2-D, the shapes the untiled kernel could not hold —
+bit-level parity of tiled vs untiled outputs for the gram / tangent /
+bank / N-D kernels, joint-packed vs per-direction-separate tangent
+columns, and the odd-width Hermitian-straddle packing paths.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as E
+from repro.core import iterative as I
+from repro.kernels import operators as OPS
+from repro.kernels import ski_fused as F
+from repro.gp import batch as B
+from repro.gp.spec import pad_boxes
+from repro.core import covariances as C
+from repro.core.reparam import flat_box
+
+from test_fused import THETA_K2, _gappy, _loop_primitive_counts
+from test_engine import _all_avals
+
+SIGMA_N = 0.1
+
+
+def _gappy_2d(shape=(64, 64), hs=(0.5, 0.25), drop=0.1, seed=2):
+    """Gappy dyadic-spacing product grid (distinct-cell: fused-capable)."""
+    axes = [h * np.arange(m, dtype=np.float64) for m, h in zip(shape, hs)]
+    X = np.stack(np.meshgrid(*axes, indexing="ij"), -1).reshape(-1,
+                                                                len(shape))
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(X[rng.uniform(size=X.shape[0]) > drop])
+
+
+# ---------------------------------------------------------------------------
+# The tile plan + batch-width-aware resolve_fused (satellite bug-fix)
+# ---------------------------------------------------------------------------
+
+def test_tile_plan_shrinks_with_width_and_budget():
+    op = OPS.SKIOperator("se", _gappy(1200), SIGMA_N, 1e-8, fused=True)
+    geom = op.fused_geom
+    # monotone: more columns never widens the tile; tighter budget never
+    # widens it either; the floor is one packed column (2 real columns)
+    bt_small = F.fused_tile_plan(geom, 4, 8)
+    bt_wide = F.fused_tile_plan(geom, 64, 8)
+    assert bt_small <= 4 and bt_wide >= 2 and bt_wide % 2 == 0
+    assert F.fused_tile_plan(geom, 64, 8, tile_mb=1) <= bt_wide
+    assert F.fused_tile_plan(geom, 64, 8, tile_mb=1) >= 2
+    # the tangent plan charges the joint directions against the budget
+    assert F.fused_tile_plan(geom, 64, 8, tile_mb=1, m_dirs=5) <= \
+        F.fused_tile_plan(geom, 64, 8, tile_mb=1)
+    # the byte estimate the plan inverts is itself monotone in b_tile
+    assert F.fused_tile_bytes(geom, 2) < F.fused_tile_bytes(geom, 8)
+    assert F.fused_const_bytes(geom) < F.fused_tile_bytes(geom, 2)
+
+
+def test_resolve_fused_accounts_for_batch_width():
+    """The bug-fix pin: ``fused='auto'`` now prices the BATCH width b into
+    the VMEM estimate.  Because the batch axis is grid-tiled, a wide
+    batch shrinks the tile instead of forcing the unfused fallback —
+    "auto" declines only when a single packed column busts the budget."""
+    x = _gappy(18500, drop=0.1, seed=3)
+    n = int(x.shape[0])
+    assert n >= 16384
+    geom = OPS.SKIOperator("se", x, SIGMA_N, 1e-8, fused=True).fused_geom
+    # wide batches no longer fall back: the plan tiles them
+    assert F.resolve_fused("auto", geom, n, b=32) is True
+    assert F.resolve_fused("auto", geom, n, b=512) is True
+    assert F.fused_tile_plan(geom, 32, 8) < 32      # ... by actually tiling
+    # one packed column of this geometry needs more than 1 MB: declined
+    assert F.fused_tile_bytes(geom, 2) > (1 << 20)
+    assert F.resolve_fused("auto", geom, n, b=32, tile_mb=1) is False
+    # and the operator-level fallback pin rides the same estimate
+    assert OPS.SKIOperator("se", x, SIGMA_N, 1e-8, fused="auto",
+                           tile_mb=1).fused is False
+    assert OPS.SKIOperator("se", x, SIGMA_N, 1e-8, fused="auto").fused \
+        is True
+
+
+def test_fused_tile_mb_threads_from_solver_opts():
+    """SolverOpts(fused_tile_mb=...) reaches the bound operator on both
+    the engine and the bank paths."""
+    x = _gappy(2400, seed=4)
+    y = jnp.sin(0.05 * x)
+    s = E.make_solver("iterative", C.K1, jnp.asarray([5.0, 2.5, 0.05]),
+                      x, y, SIGMA_N, key=jax.random.key(0),
+                      opts=E.SolverOpts(fused_tile_mb=16))
+    assert s.op.fused_tile_mb == 16
+    bank = B.BankOperator(("se",), x, SIGMA_N, 1e-8, tile_mb=16)
+    assert bank.fused_tile_mb == 16
+    like = B.BankOperator(("se",), x, SIGMA_N, 1e-8, like=bank)
+    assert like.fused_tile_mb == 16                 # like= inherits the knob
+
+
+# ---------------------------------------------------------------------------
+# One launch / zero ffts at the large-n·b shapes (jaxpr-certified, no TPU)
+# ---------------------------------------------------------------------------
+
+def _assert_one_launch_no_fft(jaxpr):
+    counts = _loop_primitive_counts(jaxpr.jaxpr, ("pallas_call", "fft"))
+    loops = [c for c in counts if c["pallas_call"] > 0 or c["fft"] > 0]
+    assert loops, "no launch-bearing loop found — walker broken?"
+    for c in loops:
+        assert c["pallas_call"] == 1, counts
+        assert c["fft"] == 0, counts
+
+
+def test_tiled_cg_one_launch_no_fft_1d_16384x32():
+    """The acceptance shape the untiled kernel could not hold: n ≥ 16384
+    with a 32-column batch still traces to ONE pallas_call and ZERO fft
+    ops per CG loop body, with no quadratic intermediate anywhere."""
+    x = _gappy(18500, drop=0.1, seed=3)
+    n = int(x.shape[0])
+    assert n >= 16384
+    op = OPS.SKIOperator("k2", x, SIGMA_N, 1e-8, fused="auto")
+    assert op.fused is True                    # auto at b=32 stays fused
+    m_grid = op.m_grid
+    mv = op.bound_gram_matvec(THETA_K2, jnp.float64)
+    bb = jnp.zeros((n, 32))
+    jaxpr = jax.make_jaxpr(lambda v: I.cg_solve(mv, v, max_iter=20).x)(bb)
+    _assert_one_launch_no_fft(jaxpr)
+    avals = [a for a in _all_avals(jaxpr.jaxpr) if hasattr(a, "shape")]
+    bad = [a for a in avals
+           if a.shape and (tuple(a.shape).count(n) >= 2
+                           or tuple(a.shape).count(m_grid) >= 2
+                           or (n in tuple(a.shape)
+                               and m_grid in tuple(a.shape)))]
+    assert not bad, sorted({tuple(a.shape) for a in bad})
+
+
+def test_tiled_cg_one_launch_no_fft_2d_64x64x16():
+    """The 2-D sandwich at (64×64, b=16): the default budget genuinely
+    tiles this shape (bt < 16), and the loop contract still holds."""
+    X = _gappy_2d((64, 64), drop=0.1, seed=2)
+    n = int(X.shape[0])
+    op = OPS.ProductSKIOperator("se*se", X, SIGMA_N, 1e-10, fused=True)
+    geom = op.fused_geom
+    assert F.fused_tile_plan(geom, 16, 8) < 16
+    theta = jnp.asarray([2.0, 2.0])
+    mv = op.bound_gram_matvec(theta, jnp.float64)
+    bb = jnp.zeros((n, 16))
+    jaxpr = jax.make_jaxpr(lambda v: I.cg_solve(mv, v, max_iter=20).x)(bb)
+    _assert_one_launch_no_fft(jaxpr)
+
+
+# ---------------------------------------------------------------------------
+# Bit-level parity: tiled vs untiled, packed vs separate
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_1d():
+    x = _gappy(1200)
+    op = OPS.SKIOperator("k2", x, SIGMA_N, 1e-8, fused=True)
+    v = jnp.asarray(np.random.default_rng(0).normal(
+        size=(int(x.shape[0]), 12)))
+    return x, op, v
+
+
+def test_tiled_gram_bitwise_matches_untiled(small_1d):
+    """Grid-tiling the batch axis changes the SCHEDULE, not one bit of
+    the arithmetic: every kernel op is column-local, so a 12-column
+    matvec split into 1 MB tiles (bt = 6, two grid steps) equals the
+    single-tile run exactly, and the grid launch equals per-slice
+    separate launches exactly.  (The batch width is chosen so the tile
+    divides it: padding the batch to a tile multiple changes the traced
+    column COUNT, which is allowed to drift at 1 ulp under XLA's
+    shape-dependent fma fusion — divisible widths are the bit-exact
+    contract, and `fused_tile_plan` only ever plans even tiles of even
+    padded widths.)"""
+    _x, op, v = small_1d
+    geom = op.fused_geom
+    lam = F.spectrum_perm(op._toep.first_column(THETA_K2, v.dtype), geom)
+    bt = F.fused_tile_plan(geom, 12, 8, tile_mb=1)
+    assert bt == 6                                         # really tiles
+    tiled = F.fused_gram_matvec(geom, lam, op.noise2, v, tile_mb=1)
+    untiled = F.fused_gram_matvec(geom, lam, op.noise2, v)
+    assert bool(jnp.all(tiled == untiled))
+    # schedule invariance: one grid launch == separate per-tile launches
+    slices = jnp.concatenate(
+        [F.fused_gram_matvec(geom, lam, op.noise2,
+                             v[:, i * bt:(i + 1) * bt], tile_mb=1)
+         for i in range(v.shape[1] // bt)], axis=1)
+    assert bool(jnp.all(tiled == slices))
+
+
+def _tangent_lams(op, dtype):
+    rows = jax.jacfwd(
+        lambda th: op._toep.first_column(th, dtype))(THETA_K2)
+    return jax.vmap(lambda t: F.spectrum_perm(t, op.fused_geom))(rows.T)
+
+
+def test_joint_packed_tangents_bitwise_match_separate(small_1d):
+    """Even-width joint tangent×batch pair-packing pairs columns WITHIN a
+    direction, so the jointly-packed launch is bitwise the stack of five
+    separate single-direction launches — and tiling it changes nothing."""
+    _x, op, v = small_1d
+    geom = op.fused_geom
+    V = v[:, :4]
+    lams = _tangent_lams(op, V.dtype)
+    joint = F.fused_tangent_matvecs(geom, lams, 0.0, V)
+    sep = jnp.stack([
+        F.fused_tangent_matvecs(geom, lams[i:i + 1], 0.0, V)[0]
+        for i in range(lams.shape[0])])
+    assert bool(jnp.all(joint == sep))
+    tiled = F.fused_tangent_matvecs(geom, lams, 0.0, V, tile_mb=1)
+    assert F.fused_tile_plan(geom, 4, 8, tile_mb=1,
+                             m_dirs=int(lams.shape[0])) < 4
+    assert bool(jnp.all(tiled == joint))
+    # the operator front door takes the same path
+    front = op.tangent_matvecs(THETA_K2, V)
+    assert bool(jnp.all(front == joint))
+
+
+def test_odd_width_straddle_tangents_match_unfused(small_1d):
+    """Odd batch widths pack the last tangent pair ACROSS directions
+    (Hermitian-split straddle) — fp-equal, not bitwise, to the unfused
+    composition, at fp-roundoff tolerance."""
+    x, op, _v = small_1d
+    sku = OPS.SKIOperator("k2", x, SIGMA_N, 1e-8, fused=False)
+    for b in (1, 3):
+        V = jnp.asarray(np.random.default_rng(b).normal(
+            size=(int(x.shape[0]), b)))
+        want = sku.tangent_matvecs(THETA_K2, V)
+        got = op.tangent_matvecs(THETA_K2, V)
+        scale = float(jnp.max(jnp.abs(want))) + 1e-30
+        assert float(jnp.max(jnp.abs(got - want))) < 1e-9 * scale
+
+
+def test_tiled_bank_bitwise_matches_untiled():
+    """Bank matvecs (odd member width: the across-member straddle path)
+    tile bitwise-exactly too, and still match the unfused composition."""
+    x = _gappy(1400, seed=9)
+    n = int(x.shape[0])
+    kinds = ("k1", "se", "matern32")
+    covs = [C.REGISTRY[k] for k in kinds]
+    m_max = max(c.n_params for c in covs)
+    pbox = pad_boxes([flat_box(c, x) for c in covs], m_max)
+    thetas = 0.5 * (pbox.lo + pbox.hi)
+    bt = B.BankOperator(kinds, x, SIGMA_N, 1e-8, fused=True, tile_mb=1)
+    bf = B.BankOperator(kinds, x, SIGMA_N, 1e-8, fused=True)
+    bu = B.BankOperator(kinds, x, SIGMA_N, 1e-8, fused=False)
+    V = jnp.asarray(np.random.default_rng(4).normal(size=(n, 3, 3)))
+    got_t = bt.bind_matvec(thetas, V.dtype)(V)
+    got_f = bf.bind_matvec(thetas, V.dtype)(V)
+    want = bu.bind_matvec(thetas, V.dtype)(V)
+    assert bool(jnp.all(got_t == got_f))
+    scale = float(jnp.max(jnp.abs(want)))
+    assert float(jnp.max(jnp.abs(got_f - want))) < 1e-9 * scale
+
+
+def test_tiled_nd_bitwise_matches_untiled():
+    """The 2-D fused sandwich: tiled gram and tangent launches are
+    bitwise the untiled ones (bt = 4 at 1 MB on this geometry — four
+    real grid steps over the 16 columns)."""
+    X = _gappy_2d((32, 24), hs=(0.5, 0.25), drop=0.15, seed=6)
+    n = int(X.shape[0])
+    theta = jnp.asarray([2.0, 2.0])
+    op = OPS.ProductSKIOperator("se*se", X, SIGMA_N, 1e-10, fused=True)
+    geom = op.fused_geom
+    v = jnp.asarray(np.random.default_rng(7).normal(size=(n, 16)))
+    assert F.fused_tile_plan(geom, 16, 8, tile_mb=1) < 16  # really tiles
+    ts = op._kron.first_columns(theta, v.dtype)
+    lams = F.spectrum_perm_nd(ts, geom)
+    tiled = F.fused_gram_matvec_nd(geom, lams, op.noise2, v, tile_mb=1)
+    untiled = F.fused_gram_matvec_nd(geom, lams, op.noise2, v)
+    assert bool(jnp.all(tiled == untiled))
+    tans = F.tangent_spectra_nd(op._kron, theta, geom, v.dtype)
+    t_tiled = F.fused_tangent_matvecs_nd(geom, tans, 0.0, v, tile_mb=1)
+    t_untiled = F.fused_tangent_matvecs_nd(geom, tans, 0.0, v)
+    assert bool(jnp.all(t_tiled == t_untiled))

@@ -462,3 +462,60 @@ def test_adaptive_epochs_runs_to_cap_when_hard():
     sh = mk(E.SolverOpts(batch_size=128, nystrom_rank=2))
     sh.solve(y)
     assert int(sh.last_epochs) == sh.plan.epochs
+
+
+# ---------------------------------------------------------------------------
+# Heavy-ball momentum (satellite)
+# ---------------------------------------------------------------------------
+
+def test_momentum_matched_residual_no_epoch_regression():
+    """``SolverOpts(momentum=mu)``: with the step mass matched (the
+    velocity update is scaled by 1 − mu), the adaptive residual-driven
+    stop never needs MORE sweeps than the plain loop at the same
+    tolerance, and the shipped solve still meets the plan tol.  The
+    rank/tol pair is chosen so the plain run stops mid-budget (neither
+    the warm start converging instantly nor the cap binding), so the
+    epoch comparison is a live one."""
+    _x, y, mk = _adaptive_problem()
+    base = dict(batch_size=128, nystrom_rank=20, cg_tol=0.05)
+    s0 = mk(E.SolverOpts(**base))
+    sm = mk(E.SolverOpts(**base, momentum=0.4))
+    a0, am = s0.solve(y), sm.solve(y)
+    e0, em = int(s0.last_epochs), int(sm.last_epochs)
+    assert 0 < e0 < s0.plan.epochs      # the stop actually triggered
+    assert em <= e0
+    rm = float(jnp.linalg.norm(sm._full_matvec(am[:, None])[:, 0] - y)
+               / jnp.linalg.norm(y))
+    assert rm <= sm.plan.tol * 1.05
+
+
+def test_momentum_zero_is_bitwise_plain_loop():
+    """momentum=0 (the default) host-branches to the ORIGINAL epoch
+    loops — fixed and adaptive solves are bitwise identical to a solver
+    built without the knob, so the satellite cannot perturb existing
+    runs.  A fixed-budget momentum run still matches the dense solve."""
+    x, y, mk = _adaptive_problem()
+    for extra in ({"n_epochs": 6}, {}):         # fixed and adaptive loops
+        base = dict(batch_size=128, nystrom_rank=32, **extra)
+        a_ref = mk(E.SolverOpts(**base)).solve(y)
+        a_z = mk(E.SolverOpts(**base, momentum=0.0)).solve(y)
+        assert bool(jnp.all(a_ref == a_z))
+    # fixed-budget momentum correctness against the dense solve
+    K = C.build_K(C.SE, jnp.asarray([np.log(3.0)]), x, SIGMA_N, 1e-8)
+    sm = mk(E.SolverOpts(batch_size=128, nystrom_rank=64, n_epochs=20,
+                         momentum=0.5))
+    err = float(jnp.linalg.norm(sm.solve(y) - jnp.linalg.solve(K, y))
+                / jnp.linalg.norm(y))
+    assert err < 1e-3, err
+
+
+def test_momentum_validation():
+    """GPSpec rejects momentum outside [0, 1) and negative tile budgets
+    at spec-construction time, before any bind."""
+    for bad in (-0.1, 1.0, 1.5):
+        with pytest.raises(ValueError, match="momentum"):
+            GPSpec("se", solver=SolverPolicy(
+                opts=E.SolverOpts(momentum=bad)))
+    with pytest.raises(ValueError, match="fused_tile_mb"):
+        GPSpec("se", solver=SolverPolicy(
+            opts=E.SolverOpts(fused_tile_mb=-1)))
